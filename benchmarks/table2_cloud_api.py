@@ -1,0 +1,60 @@
+"""Table II reproduction: cloud-API multiplexing over the 6-model zoo.
+
+Per-model FLOPs / accuracy / called-%; hybrid-single (argmax, Alg. 2)
+and hybrid-ensemble (threshold, Alg. 2) rows; the headline compute-
+saving factor  largest_model_flops / hybrid_flops  (paper: 2.85x) and
+accuracy delta vs the best single model (paper: +4.55pp).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import ensemble as ens
+
+
+def run(state=None):
+    state = state or common.get_state()
+    cfg = state["cfg"]
+    t0 = time.time()
+    ev = common.eval_zoo(state)
+    names = ev["names"]
+    costs = cfg.costs()
+    carr = jnp.asarray([costs[n] for n in names])
+
+    m = ens.policy_metrics(jnp.asarray(ev["weights_all"]),
+                           jnp.asarray(ev["probs"]),
+                           jnp.asarray(ev["labels"]), carr,
+                           threshold=cfg.ensemble_threshold)
+    o = ens.oracle_metrics(jnp.asarray(ev["probs"]),
+                           jnp.asarray(ev["labels"]), carr)
+    us = (time.time() - t0) * 1e6 / len(ev["labels"])
+
+    print("\n# Table II — cloud API multiplexing")
+    print("model,flops,accuracy_pct,called_pct")
+    for i, n in enumerate(names):
+        print(f"{n},{costs[n]:.3g},{float(ev['correct'][i].mean()) * 100:.2f},"
+              f"{float(m['called'][i]) * 100:.2f}")
+    best_acc = max(float(ev["correct"][i].mean()) for i in range(len(names)))
+    largest = max(costs.values())
+    acc_s, fl_s = float(m["acc_single"]), float(m["flops_single"])
+    acc_e, fl_e = float(m["acc_ensemble"]), float(m["flops_ensemble"])
+    print(f"hybrid-single,{fl_s:.3g},{acc_s * 100:.2f},100")
+    print(f"hybrid-ensemble,{fl_e:.3g},{acc_e * 100:.2f},100")
+    print(f"# oracle (cheapest-correct): acc={float(o['acc_oracle']) * 100:.2f} "
+          f"flops={float(o['flops_oracle']):.3g}")
+    saving = largest / max(fl_s, 1.0)
+    common.emit(
+        "table2_cloud_api", us,
+        f"saving_factor={saving:.2f}x acc_single={acc_s * 100:.2f}%"
+        f" acc_ens={acc_e * 100:.2f}% best_single={best_acc * 100:.2f}%")
+    return {"saving_factor": saving, "acc_single": acc_s,
+            "acc_ensemble": acc_e, "best_single_acc": best_acc,
+            "called": np.asarray(m["called"]), "oracle": o}
+
+
+if __name__ == "__main__":
+    run()

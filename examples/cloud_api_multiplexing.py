@@ -1,0 +1,77 @@
+"""Cloud-API model multiplexing as a *serving system* (paper Fig. 2d).
+
+Instead of replicating the largest model, the MuxServer hosts the whole
+zoo behind the multiplexer: each request batch is scored by the fused
+mux head, bucketed per selected model (the model-level MoE dispatch in
+repro.core.routing) and every model runs only its bucket — the TPU-pod
+rendering of the paper's API router (DESIGN.md §2).
+
+Run:  PYTHONPATH=src python examples/cloud_api_multiplexing.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.paper_mux import smoke_config
+from repro.core import mux_train
+from repro.data.synthetic import image_dataset, make_templates
+from repro.models.cnn import ZOO_SPECS, cnn_forward
+from repro.serving.mux_server import MuxServer, MuxServerConfig
+
+
+def main():
+    cfg = dataclasses.replace(smoke_config(), zoo=("zoo_xs", "zoo_s", "zoo_m"),
+                              zoo_steps=80, mux_steps=80, batch_size=64,
+                              train_samples=1536, eval_samples=512)
+    key = jax.random.key(2)
+    kt, kd, kz, km, ke = jax.random.split(key, 5)
+    templates = make_templates(kt, num_classes=cfg.num_classes,
+                               image_size=cfg.image_size)
+    train_b = image_dataset(kd, templates, num_samples=cfg.train_samples,
+                            batch=cfg.batch_size)
+    eval_b = image_dataset(ke, templates, num_samples=cfg.eval_samples,
+                           batch=cfg.batch_size)
+
+    zoo_state = mux_train.train_zoo(kz, cfg, train_b, verbose=True, log_every=20)
+    mux_params = mux_train.train_mux(km, cfg, zoo_state, train_b,
+                                     verbose=True, log_every=20)
+
+    names = list(cfg.zoo)
+    costs = cfg.costs()
+
+    def model_fn(n):
+        return lambda xs: cnn_forward(
+            zoo_state["zoo"][n], xs,
+            convs_per_stage=ZOO_SPECS[n].get("convs_per_stage", 1))[0]
+
+    server = MuxServer(mux_params, [model_fn(n) for n in names],
+                       [costs[n] for n in names],
+                       MuxServerConfig(capacity_factor=2.0))
+
+    print("\nserving batched requests through the multiplexed zoo:")
+    total, correct, flops = 0, 0, []
+    t0 = time.time()
+    for b in eval_b:
+        res = server.serve(b["image"])
+        pred = np.argmax(np.asarray(res["output"]), -1)
+        label = np.asarray(b["label"])
+        kept = np.asarray(res["kept"])
+        correct += int(((pred == label) & kept).sum())
+        total += int(kept.sum())
+        flops.append(res["mean_flops"])
+    wall = time.time() - t0
+    n_req = sum(b["image"].shape[0] for b in eval_b)
+    print(f"  requests:        {n_req} ({n_req / wall:.0f} req/s on CPU)")
+    print(f"  served accuracy: {correct / max(total, 1) * 100:.2f}%")
+    print(f"  mean FLOPs/req:  {np.mean(flops):.3g} "
+          f"(vs {max(costs.values()):.3g} if always-largest: "
+          f"{max(costs.values()) / np.mean(flops):.2f}x saving)")
+    print(f"  call mix:        "
+          + ", ".join(f"{n}={f * 100:.0f}%" for n, f in
+                      zip(names, res["called_fraction"])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Beyond-paper: model multiplexing over an LLM zoo (assigned archs).
+
+The paper multiplexes CNN classifiers; here the same machinery routes
+language-model requests between a small and a large decoder from the
+assigned pool (olmo-1b family as "mobile", gemma2 family as "cloud",
+reduced sizes for CPU).  "Correct" for an LM = next-token prediction
+matches the structured stream's ground truth; the token-probe mux
+learns to spot prompts whose continuation the small model already gets
+right — those are served cheap, the rest go to the large model.
+
+Run:  PYTHONPATH=src python examples/llm_zoo_mux.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.multiplexer import init_mux, init_token_backbone, mux_forward
+from repro.data.synthetic import lm_batch
+from repro.launch.hlo_analysis import total_params
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+VOCAB = 256
+SEQ = 64
+STEPS_LM = 150
+STEPS_MUX = 120
+BATCH = 16
+
+
+def make_models():
+    small = get_smoke_config("olmo-1b").with_(
+        name="lm-small", vocab_size=VOCAB, num_layers=1, d_model=64,
+        d_ff=128, num_heads=2, num_kv_heads=2, head_dim=32)
+    large = get_smoke_config("gemma2-27b").with_(
+        name="lm-large", vocab_size=VOCAB, num_layers=4, d_model=192,
+        d_ff=512, num_heads=4, num_kv_heads=2, head_dim=48, window=32,
+        embed_scale=192 ** 0.5)
+    return {"small": small, "large": large}
+
+
+def train_lm(cfg, key, steps):
+    params = tf.init_params(cfg, key)
+    opt_cfg = adamw.AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=steps)
+    opt = adamw.init(opt_cfg, params)
+
+    @jax.jit
+    def step(p, o, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: tf.lm_loss(pp, cfg, batch), has_aux=True)(p)
+        p, o, _ = adamw.apply_updates(opt_cfg, p, g, o)
+        return p, o, loss
+
+    for i in range(steps):
+        batch = lm_batch(jax.random.fold_in(key, i), batch=BATCH,
+                         seq_len=SEQ, vocab_size=VOCAB)
+        params, opt, loss = step(params, opt, batch)
+    return params, float(loss)
+
+
+def correct_mask(cfg, params, batch):
+    """Per-sequence: majority of last-16 next-token predictions right."""
+    h, _, _ = tf.forward(params, cfg, batch["tokens"], mode="train")
+    logits = tf.unembed(params, cfg, h)
+    pred = jnp.argmax(logits, -1)
+    ok = (pred[:, -17:-1] == batch["labels"][:, -17:-1]).mean(-1)
+    return ok > 0.5
+
+
+def main():
+    key = jax.random.key(0)
+    cfgs = make_models()
+    print("== train the LLM zoo on the structured stream")
+    params, losses = {}, {}
+    for name, cfg in cfgs.items():
+        params[name], losses[name] = train_lm(cfg, jax.random.fold_in(
+            key, hash(name) % 1000), STEPS_LM)
+        n = total_params(cfg)
+        print(f"  {name}: {n / 1e6:.2f}M params, final loss {losses[name]:.3f}")
+
+    costs = {n: 2.0 * total_params(c) for n, c in cfgs.items()}  # FLOPs/token
+    names = list(cfgs)
+
+    print("== train the token-probe multiplexer (Alg. 1 phase 2)")
+    kb, km = jax.random.split(jax.random.fold_in(key, 7))
+    backbone = init_token_backbone(kb, meta_dim=32, vocab_size=VOCAB,
+                                   d_model=64)
+    mux = init_mux(km, backbone=backbone, model_names=names, costs=costs,
+                   meta_dim=32, proj_dim=16)
+    trainable = {k: mux[k] for k in ("backbone", "v")}
+    opt_cfg = adamw.AdamWConfig(lr=2e-3, warmup_steps=10,
+                                total_steps=STEPS_MUX)
+    opt = adamw.init(opt_cfg, trainable)
+
+    def mux_loss(tr, batch, correct):
+        w, _ = mux_forward({**mux, **tr}, batch["tokens"])
+        # Eq. 7 with the LM notion of per-model correctness
+        probs = jnp.stack([correct[n].astype(jnp.float32) for n in names], 1)
+        probs = jnp.stack([1 - probs, probs], -1)          # (B, N, 2)
+        gold = jnp.einsum("bn,bn->b", w, probs[:, :, 1])
+        return -jnp.mean(jnp.log(jnp.clip(gold, 1e-6, 1.0)))
+
+    @jax.jit
+    def mstep(tr, o, batch, correct):
+        loss, g = jax.value_and_grad(mux_loss)(tr, batch, correct)
+        tr, o, _ = adamw.apply_updates(opt_cfg, tr, g, o)
+        return tr, o, loss
+
+    for i in range(STEPS_MUX):
+        batch = lm_batch(jax.random.fold_in(key, 10_000 + i), batch=BATCH,
+                         seq_len=SEQ, vocab_size=VOCAB)
+        correct = {n: correct_mask(cfgs[n], params[n], batch) for n in names}
+        trainable, opt, loss = mstep(trainable, opt, batch, correct)
+    mux = {**mux, **trainable}
+    print(f"  mux loss {float(loss):.3f}")
+
+    print("== route eval prompts (Alg. 2)")
+    accs = {n: [] for n in names}
+    routed, flops = [], []
+    for i in range(8):
+        batch = lm_batch(jax.random.fold_in(key, 20_000 + i), batch=BATCH,
+                         seq_len=SEQ, vocab_size=VOCAB)
+        correct = {n: np.asarray(correct_mask(cfgs[n], params[n], batch))
+                   for n in names}
+        w, _ = mux_forward(mux, batch["tokens"])
+        pick = np.asarray(jnp.argmax(w, -1))
+        routed.append(np.where(pick == 0, correct["small"], correct["large"]))
+        flops.append(np.where(pick == 0, costs["small"], costs["large"]))
+        for n in names:
+            accs[n].append(correct[n])
+    for n in names:
+        print(f"  {n}-only: seq-acc={np.concatenate(accs[n]).mean() * 100:.1f}% "
+              f"flops/token={costs[n]:.3g}")
+    print(f"  multiplexed: seq-acc={np.concatenate(routed).mean() * 100:.1f}% "
+          f"flops/token={np.concatenate(flops).mean():.3g} "
+          f"({costs['large'] / np.concatenate(flops).mean():.2f}x saving vs large-only)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Mobile⇄cloud collaborative inference (paper Fig. 2c / Table I).
+
+The mobile device hosts the small model + the 4-conv multiplexer; the
+cloud hosts the large model.  The mux decides per input whether to
+classify locally or offload, and the paper's Eq. 9-13 cost model turns
+the routed mix into latency / energy rows.
+
+Run:  PYTHONPATH=src python examples/mobile_cloud_offload.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_mux import smoke_config
+from repro.core import mux_train, offload
+from repro.core.multiplexer import mux_forward
+from repro.data.synthetic import image_dataset, make_templates
+from repro.models.cnn import mux_flops
+
+
+def main():
+    cfg = dataclasses.replace(smoke_config(), zoo=("zoo_s", "zoo_xl"),
+                              mobile_model="zoo_s", cloud_model="zoo_xl",
+                              zoo_steps=80, mux_steps=80, batch_size=64,
+                              train_samples=1536, eval_samples=512)
+    key = jax.random.key(1)
+    kt, kd, kz, km, ke = jax.random.split(key, 5)
+    templates = make_templates(kt, num_classes=cfg.num_classes,
+                               image_size=cfg.image_size)
+    train_b = image_dataset(kd, templates, num_samples=cfg.train_samples,
+                            batch=cfg.batch_size)
+    eval_b = image_dataset(ke, templates, num_samples=cfg.eval_samples,
+                           batch=cfg.batch_size)
+
+    zoo_state = mux_train.train_zoo(kz, cfg, train_b, verbose=True, log_every=20)
+    mux_params = mux_train.train_mux(km, cfg, zoo_state, train_b,
+                                     verbose=True, log_every=20)
+
+    names = list(cfg.zoo)
+    correct = {n: [] for n in names}
+    local_mask, hard = [], []
+    for b in eval_b:
+        probs, _, logits = mux_train.zoo_apply(zoo_state, b["image"], names)
+        w, _ = mux_forward(mux_params, b["image"])
+        local_mask.append(np.asarray(w[:, 0] >= cfg.offload_threshold))
+        hard.append(np.asarray(b["hardness"]))
+        for i, n in enumerate(names):
+            correct[n].append(np.asarray(jnp.argmax(probs[i], -1) == b["label"]))
+    local = np.concatenate(local_mask)
+    hard = np.concatenate(hard)
+    c_m = np.concatenate(correct[cfg.mobile_model])
+    c_c = np.concatenate(correct[cfg.cloud_model])
+    hybrid_correct = np.where(local, c_m, c_c)
+
+    costs = cfg.costs()
+    rows = offload.table1(
+        cfg, mobile_acc=float(c_m.mean()), cloud_acc=float(c_c.mean()),
+        hybrid_acc=float(hybrid_correct.mean()),
+        local_fraction=float(local.mean()),
+        mobile_flops=costs[cfg.mobile_model],
+        cloud_flops=costs[cfg.cloud_model],
+        mux_flops=mux_flops(image_size=cfg.image_size, meta_dim=cfg.meta_dim))
+
+    print("\nsetup        latency    energy     flops     local   acc")
+    for name, r in rows.items():
+        print(f"{name:12s} {r.latency_s * 1e3:7.3f}ms {r.mobile_energy_j * 1e3:7.2f}mJ "
+              f"{r.flops:9.3g} {r.local_fraction * 100:5.0f}%  "
+              f"{r.accuracy * 100:5.2f}%")
+    # the paper's qualitative claim: offloaded inputs are the hard ones
+    print(f"\nmean hardness of local inputs:    {hard[local].mean():.3f}")
+    print(f"mean hardness of offloaded inputs: {hard[~local].mean():.3f}")
+
+
+if __name__ == "__main__":
+    main()

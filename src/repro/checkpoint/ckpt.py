@@ -1,0 +1,72 @@
+"""Pytree checkpointing (npz-based, sharding-aware).
+
+Parameters are flattened to path-keyed arrays; on restore the tree is
+rebuilt and (optionally) device_put against a sharding tree, so a
+checkpoint written on one mesh restores onto another (the usual
+"train on N chips, serve on M" flow).  Works for model params, AdamW
+state and mux/zoo state alike — anything tree-like with array leaves.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":       # ml_dtypes (bf16/fp8) -> f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    meta = {"step": step, "num_arrays": len(flat),
+            "bytes": int(sum(v.nbytes for v in flat.values()))}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  With ``shardings``, leaves are device_put."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path_keys)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"{key}: ckpt {arr.shape} vs model {leaf.shape}"
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = []
+    if not os.path.isdir(ckpt_dir):
+        return None
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and name.endswith(".npz"):
+            steps.append(int(name[5:-4]))
+    return max(steps) if steps else None

@@ -1,0 +1,44 @@
+"""Config registry: ``get_config(arch_id)`` / ``get_smoke_config(arch_id)``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (INPUT_SHAPES, LayerSpec, ModelConfig,
+                                ShapeConfig)
+
+# arch-id -> module
+ARCHITECTURES: Dict[str, str] = {
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+}
+
+
+def list_architectures() -> List[str]:
+    return list(ARCHITECTURES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {arch!r}; have {list(ARCHITECTURES)}")
+    return importlib.import_module(ARCHITECTURES[arch]).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {arch!r}; have {list(ARCHITECTURES)}")
+    return importlib.import_module(ARCHITECTURES[arch]).smoke_config()
+
+
+__all__ = [
+    "ARCHITECTURES", "INPUT_SHAPES", "LayerSpec", "ModelConfig",
+    "ShapeConfig", "get_config", "get_smoke_config", "list_architectures",
+]

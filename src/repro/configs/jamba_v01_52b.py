@@ -1,0 +1,40 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave + MoE.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE 16 experts
+top-2.  HF config: attn_layer_period=8 offset=4 (attention at i%8==4),
+expert_layer_period=2 offset=1 (MoE at odd i).  No positional embeddings
+(the mamba layers carry position).  [arXiv:2403.19887]
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+_PATTERN = tuple(
+    LayerSpec(
+        mixer="attn" if i == 4 else "mamba",
+        attn_kind="full", rope=False,
+        mlp="moe" if i % 2 == 1 else "dense",
+    )
+    for i in range(8)
+)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b", arch_type="hybrid", source="arXiv:2403.19887",
+        num_layers=32, d_model=4096, d_ff=14_336, vocab_size=65_536,
+        pattern=_PATTERN,
+        num_heads=32, num_kv_heads=8, head_dim=128,
+        d_inner=8192, ssm_state=16, d_conv=4, dt_rank=256, mamba_norm=True,
+        num_experts=16, num_experts_per_tok=2, moe_d_ff=14_336,
+        router_act="topk_softmax",
+        pos_embed="none", norm="rmsnorm", act="silu", gated_mlp=True,
+        remat="full",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        name="jamba-v0.1-52b-smoke", num_layers=8, d_model=256, d_ff=512,
+        vocab_size=512, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_inner=512, ssm_state=8, dt_rank=16,
+        num_experts=4, num_experts_per_tok=2, moe_d_ff=512, remat="none",
+    )

@@ -1,0 +1,37 @@
+"""llama-3.2-vision-11b [vlm] — gated cross-attention image layers.
+
+40L d_model=4096 32H (GQA kv=8, head_dim=128) d_ff=14336 vocab=128256;
+cross-attention layers at i%5==3 (8 of 40, HF cross_attention_layers =
+[3,8,...,38]).  [hf:meta-llama/Llama-3.2-11B-Vision]
+
+Backbone only per the modality carve-out: the ViT encoder + projector is
+a stub — input_specs() feeds pre-projected patch embeddings
+(batch, 1601, 4096).
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+_PATTERN = tuple(
+    LayerSpec(mixer="cross_attn" if i == 3 else "attn")
+    for i in range(5)
+)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b", arch_type="vlm",
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+        num_layers=40, d_model=4096, d_ff=14_336, vocab_size=128_256,
+        pattern=_PATTERN,
+        num_heads=32, num_kv_heads=8, head_dim=128,
+        num_image_tokens=1601,
+        norm="rmsnorm", act="silu", gated_mlp=True,
+        rope_theta=500_000.0, remat="full", logits_chunk=512,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        name="llama-3.2-vision-11b-smoke", num_layers=5, d_model=256,
+        d_ff=512, vocab_size=512, num_heads=4, num_kv_heads=2, head_dim=64,
+        num_image_tokens=16, remat="none", logits_chunk=0,
+    )

@@ -1,0 +1,40 @@
+"""llama4-maverick-400b-a17b [moe] — interleaved MoE + iRoPE chunked attention.
+
+48L d_model=5120 40H (GQA kv=8, head_dim=128) vocab=202048.  MoE 128
+routed experts top-1 (sigmoid router) + 1 shared expert on alternating
+layers (expert d_ff=8192); chunked-local attention (8192-token chunks)
+on 3 of 4 layers with a NoPE global-attention layer every 4th (iRoPE).
+~400B total / ~17B active.  [hf:meta-llama/Llama-4-Scout-17B-16E]
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+_PATTERN = (
+    LayerSpec(mixer="attn", attn_kind="chunked", rope=True, mlp="dense"),
+    LayerSpec(mixer="attn", attn_kind="chunked", rope=True, mlp="moe"),
+    LayerSpec(mixer="attn", attn_kind="chunked", rope=True, mlp="dense"),
+    LayerSpec(mixer="attn", attn_kind="full", rope=False, mlp="moe"),
+)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b", arch_type="moe",
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+        num_layers=48, d_model=5120, d_ff=8192, vocab_size=202_048,
+        pattern=_PATTERN,
+        num_heads=40, num_kv_heads=8, head_dim=128, chunk=8192,
+        num_experts=128, num_experts_per_tok=1, moe_d_ff=8192,
+        shared_expert_d_ff=8192, router_act="sigmoid",
+        capacity_factor=1.25,
+        norm="rmsnorm", act="silu", gated_mlp=True,
+        rope_theta=500_000.0, remat="full", logits_chunk=512,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        name="llama4-maverick-smoke", num_layers=4, d_model=256, d_ff=512,
+        vocab_size=512, num_heads=4, num_kv_heads=2, head_dim=64, chunk=32,
+        num_experts=4, num_experts_per_tok=1, moe_d_ff=256,
+        shared_expert_d_ff=256, remat="none", logits_chunk=0,
+    )

@@ -1,0 +1,29 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=2048 32H (kv=32, head_dim=64) d_ff=8192 vocab=2048 per
+codebook, 4 parallel codebooks (summed embeddings, 4 output heads),
+sinusoidal positions, LayerNorm + plain GELU MLP.  [arXiv:2306.05284]
+
+Backbone only per the modality carve-out: the EnCodec conv codec is a
+stub — input_specs() feeds codebook token ids directly.
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large", arch_type="audio", source="arXiv:2306.05284",
+        num_layers=48, d_model=2048, d_ff=8192, vocab_size=2048,
+        pattern=(LayerSpec(rope=False),),
+        num_heads=32, num_kv_heads=32, head_dim=64, qkv_bias=True,
+        norm="layernorm", norm_eps=1e-5, act="gelu", gated_mlp=False,
+        pos_embed="sinusoidal", num_codebooks=4, remat="full",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        name="musicgen-large-smoke", num_layers=2, d_model=256, d_ff=512,
+        vocab_size=128, num_heads=4, num_kv_heads=4, head_dim=64,
+        num_codebooks=2, remat="none",
+    )

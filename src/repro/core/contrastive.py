@@ -1,0 +1,117 @@
+"""The paper's contrastive loss (§II.A, Eq. 1-3).
+
+Projected embeddings: e_i = normalize(h_i^T g_i) — a per-model linear
+map into a shared `proj_dim` space, L2-normalised (Eq. 1).
+
+Pairwise coefficient per (i, j) model pair and sample (the paper's
+three cases):
+  * both predict correctly          -> pull together  (coef +1)
+  * exactly one predicts correctly  -> push apart     (coef -1)
+  * neither predicts correctly      -> no contrastive signal (coef 0)
+
+NOTE on fidelity: the paper's Eq. 2 as printed also applies a -1
+coefficient to the both-wrong case, contradicting its own §II.A text
+("3- None of them can predict correctly in which we will not apply the
+contrastive loss").  We follow the text (and Fig. 4's Venn-diagram
+target, which the printed sign for both-wrong would not produce).
+
+Distance: the paper's Eq. 3 "cosine distance" is written as a cosine
+*similarity*; we use d = clip((1 - cos)/2, eps, 1) in [0, 1] so that
+minimising  sum coef * log(d)  pulls both-correct pairs together and
+pushes expertise-separating pairs apart, exactly the Fig. 4 target.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+EPS = 1e-4
+
+
+def init_projections(key, embed_dims: Dict[str, int], proj_dim: int,
+                     dtype=jnp.float32) -> Params:
+    """One linear h_i per model: (embed_dim_i, proj_dim)."""
+    keys = jax.random.split(key, len(embed_dims))
+    return {
+        name: (jax.random.truncated_normal(k, -2, 2, (d, proj_dim))
+               / jnp.sqrt(d)).astype(dtype)
+        for (name, d), k in zip(embed_dims.items(), keys)
+    }
+
+
+def project(proj: Params, embeddings: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Eq. 1: e_i = normalize(h_i^T g_i).  embeddings: {name: (B, d_i)}."""
+    out = {}
+    for name, g in embeddings.items():
+        e = g @ proj[name].astype(g.dtype)
+        out[name] = e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-6)
+    return out
+
+
+def cosine_distance(e1, e2):
+    """(1 - cos)/2 in [0, 1]; inputs assumed L2-normalised (B, P)."""
+    cos = jnp.sum(e1 * e2, axis=-1)
+    return jnp.clip((1.0 - cos) / 2.0, EPS, 1.0)
+
+
+def contrastive_loss(projected: Dict[str, jnp.ndarray],
+                     correct: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Eq. 2 over all ordered model pairs.
+
+    projected: {name: (B, P)} L2-normalised; correct: {name: (B,) bool}.
+    Returns a scalar (mean over batch and pairs).
+    """
+    names = list(projected)
+    n = len(names)
+    total = jnp.zeros((), jnp.float32)
+    pairs = 0
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            ci = correct[names[i]].astype(jnp.float32)
+            cj = correct[names[j]].astype(jnp.float32)
+            coef = ci * cj - (ci * (1 - cj) + (1 - ci) * cj)   # +1 / -1 / 0
+            d = cosine_distance(projected[names[i]], projected[names[j]])
+            total = total + jnp.mean(coef * jnp.log(d))
+            pairs += 1
+    return total / max(pairs, 1)
+
+
+def pairwise_distance_matrix(projected: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """(N, N, B) distance tensor — used by benchmarks/fig6_separation."""
+    names = list(projected)
+    rows = []
+    for a in names:
+        rows.append(jnp.stack([cosine_distance(projected[a], projected[b])
+                               for b in names]))
+    return jnp.stack(rows)
+
+
+def separation_score(projected: Dict[str, jnp.ndarray],
+                     correct: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Quantitative Fig. 6 check: mean distance of pull vs push pairs.
+
+    A well-shaped space has push_mean >> pull_mean.
+    """
+    names = list(projected)
+    pull, push, pulln, pushn = 0.0, 0.0, 0.0, 0.0
+    for i in range(len(names)):
+        for j in range(len(names)):
+            if i == j:
+                continue
+            ci = correct[names[i]].astype(jnp.float32)
+            cj = correct[names[j]].astype(jnp.float32)
+            d = cosine_distance(projected[names[i]], projected[names[j]])
+            both = ci * cj
+            xor = ci * (1 - cj) + (1 - ci) * cj
+            pull += jnp.sum(both * d)
+            pulln += jnp.sum(both)
+            push += jnp.sum(xor * d)
+            pushn += jnp.sum(xor)
+    return {"pull_mean": pull / jnp.maximum(pulln, 1),
+            "push_mean": push / jnp.maximum(pushn, 1)}

@@ -1,0 +1,98 @@
+"""Cost-aware stacked ensemble (Eq. 4/6) and the multiplexing policies
+of Algorithm 2.
+
+Two inference-time policies:
+  * ``single``   — call only argmax_i w_i           (hybrid-single)
+  * ``ensemble`` — average every model with w_i > T (hybrid-ensemble)
+
+Policy *evaluation* here assumes all model outputs are available (it is
+scoring quality/cost trade-offs offline, like the paper's Table II);
+the serving path that only *executes* selected models lives in
+repro.core.routing / repro.serving.mux_server.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def ensemble_logits(weights, probs_stack) -> jnp.ndarray:
+    """Eq. 4: y_ENS = sum_i w_i(x) f_i(x).
+
+    weights: (B, N); probs_stack: (N, B, C) model output probabilities.
+    """
+    return jnp.einsum("bn,nbc->bc", weights, probs_stack)
+
+
+def mux_xent(weights, probs_stack, labels) -> jnp.ndarray:
+    """Eq. 7: cross-entropy of the weighted ensemble prediction."""
+    y = ensemble_logits(weights, probs_stack)
+    y = jnp.clip(y, 1e-8, 1.0)
+    gold = jnp.take_along_axis(y, labels[:, None], axis=1)[:, 0]
+    return -jnp.mean(jnp.log(gold))
+
+
+def select_single(weights) -> jnp.ndarray:
+    """Alg. 2 line 3 (argmax): (B,) model index per input."""
+    return jnp.argmax(weights, axis=-1)
+
+
+def select_ensemble(weights, threshold: float) -> jnp.ndarray:
+    """Alg. 2 line 3 (threshold): (B, N) bool — at least one selected."""
+    mask = weights > threshold
+    # guarantee non-empty selection: fall back to argmax
+    fallback = jax.nn.one_hot(jnp.argmax(weights, -1), weights.shape[-1],
+                              dtype=bool)
+    return jnp.where(mask.any(-1, keepdims=True), mask, fallback)
+
+
+def policy_metrics(weights, probs_stack, labels, costs,
+                   *, threshold: float = 0.288) -> Dict[str, jnp.ndarray]:
+    """Score both policies at once (Table II quantities).
+
+    costs: (N,) FLOPs per model.  Returns accuracy + mean FLOPs + the
+    per-model call distribution for the single policy.
+    """
+    n, b, _ = probs_stack.shape
+    preds = jnp.argmax(probs_stack, axis=-1)               # (N, B)
+
+    # --- hybrid-single
+    sel = select_single(weights)                           # (B,)
+    pred_single = jnp.take_along_axis(preds, sel[None], axis=0)[0]
+    acc_single = jnp.mean(pred_single == labels)
+    flops_single = jnp.mean(costs[sel])
+    called = jnp.zeros((n,)).at[sel].add(1.0) / b
+
+    # --- hybrid-ensemble
+    mask = select_ensemble(weights, threshold)             # (B, N)
+    wsel = mask.astype(probs_stack.dtype)
+    avg = jnp.einsum("bn,nbc->bc", wsel, probs_stack) / wsel.sum(-1, keepdims=True)
+    acc_ens = jnp.mean(jnp.argmax(avg, -1) == labels)
+    flops_ens = jnp.mean(jnp.sum(wsel * costs[None, :], axis=-1))
+
+    return {
+        "acc_single": acc_single, "flops_single": flops_single,
+        "acc_ensemble": acc_ens, "flops_ensemble": flops_ens,
+        "called": called,
+    }
+
+
+def oracle_metrics(probs_stack, labels, costs) -> Dict[str, jnp.ndarray]:
+    """Upper bounds: cheapest-correct-model oracle and any-correct accuracy."""
+    preds = jnp.argmax(probs_stack, axis=-1)               # (N, B)
+    correct = preds == labels[None, :]                     # (N, B)
+    any_correct = correct.any(axis=0)
+    # cheapest correct model (or cheapest overall when none correct)
+    order = jnp.argsort(costs)
+    cost_sorted_correct = correct[order]
+    first = jnp.argmax(cost_sorted_correct, axis=0)        # first True, else 0
+    chosen = jnp.where(any_correct, order[first], order[0])
+    return {
+        "acc_oracle": jnp.mean(any_correct),
+        "flops_oracle": jnp.mean(costs[chosen]),
+        "correct_matrix": correct,
+    }

@@ -1,0 +1,134 @@
+"""The model multiplexer (§II.B): meta-features + cost-aware stacking head.
+
+w_i(x) = softmax_i( sum_j v_ij m_j(x) / c_i )        (Eq. 5-6)
+
+The backbone producing meta-features m(x) is modality-specific:
+  * images  -> the paper's 4-conv CNN (repro.models.cnn.mux_backbone)
+  * tokens  -> a 2-layer transformer probe over the prompt prefix
+    (our LLM-zoo adaptation; same head either way)
+
+Distillation (Eq. 8): each model i gets a linear read-out r_i of the
+meta-features that is pulled toward that model's projected embedding
+e_i; see repro.core.contrastive for the distance.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contrastive import cosine_distance
+from repro.models import cnn as cnn_mod
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Backbones
+# ---------------------------------------------------------------------------
+
+def init_image_backbone(key, *, meta_dim: int, in_ch: int = 3) -> Params:
+    return {"net": cnn_mod.init_mux_backbone(key, meta_dim=meta_dim, in_ch=in_ch)}
+
+
+def init_token_backbone(key, *, meta_dim: int, vocab_size: int,
+                        d_model: int = 128, num_layers: int = 2) -> Params:
+    """Tiny transformer probe over the prompt prefix.
+
+    Static hyperparams (probe_len, num_heads) are passed to
+    ``backbone_forward`` — params hold arrays only (clean pytree).
+    """
+    ks = jax.random.split(key, 2 + 4 * num_layers)
+    p: Params = {"embed": (jax.random.truncated_normal(
+                     ks[0], -2, 2, (vocab_size, d_model)) * 0.02),
+                 "layers": [], "out": dense_init(ks[1], d_model, meta_dim)}
+    for i in range(num_layers):
+        base = 2 + 4 * i
+        p["layers"].append({
+            "wqkv": dense_init(ks[base], d_model, 3 * d_model),
+            "wo": dense_init(ks[base + 1], d_model, d_model),
+            "up": dense_init(ks[base + 2], d_model, 4 * d_model),
+            "down": dense_init(ks[base + 3], 4 * d_model, d_model),
+        })
+    return p
+
+
+def _token_backbone_forward(p: Params, tokens, *, probe_len: int = 64,
+                            num_heads: int = 4) -> jnp.ndarray:
+    """tokens (B, S) -> meta (B, meta_dim).  Mean-pooled 2-layer encoder."""
+    probe = tokens[:, :probe_len]
+    h = p["embed"][probe]
+    b, s, d = h.shape
+    nh = num_heads
+    hd = d // nh
+    pos = jnp.arange(s)
+    mask = pos[None, :] <= pos[:, None]
+    for lp in p["layers"]:
+        qkv = h @ lp["wqkv"]
+        q, k, v = jnp.split(qkv.reshape(b, s, 3, nh, hd), 3, axis=2)
+        q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+        sc = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(hd)
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        att = jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(sc, -1), v)
+        h = h + att.reshape(b, s, d) @ lp["wo"]
+        h = h + jax.nn.gelu(h @ lp["up"]) @ lp["down"]
+    pooled = h.mean(axis=1)
+    return jnp.tanh(pooled @ p["out"])
+
+
+def backbone_forward(params: Params, x, **static) -> jnp.ndarray:
+    if "net" in params:                      # image backbone
+        return cnn_mod.mux_backbone_forward(params["net"], x)
+    return _token_backbone_forward(params, x, **static)
+
+
+# ---------------------------------------------------------------------------
+# Multiplexer = backbone + cost-aware stacking head + distill read-outs
+# ---------------------------------------------------------------------------
+
+def init_mux(key, *, backbone: Params, model_names: Sequence[str],
+             costs: Dict[str, float], meta_dim: int, proj_dim: int) -> Params:
+    """costs: FLOPs per inference for each zoo model (the paper's c_i)."""
+    n = len(model_names)
+    ks = jax.random.split(key, 2 + n)
+    # c_i enters as 1/c_i; normalise to keep logits O(1) across zoos
+    c = jnp.asarray([costs[m] for m in model_names], jnp.float32)
+    c_rel = c / c.min()
+    return {
+        "backbone": backbone,
+        "v": (jax.random.truncated_normal(ks[0], -2, 2, (n, meta_dim))
+              / math.sqrt(meta_dim)),
+        "cost_rel": c_rel,                       # fixed, not trained
+        "distill": {m: dense_init(k, meta_dim, proj_dim)
+                    for m, k in zip(model_names, ks[2:])},
+    }
+
+
+def mux_forward(params: Params, x, *, cost_exponent: float = 1.0,
+                **backbone_static) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (weights (B, N) softmax-normalised, meta (B, M)).
+
+    cost_exponent generalises Eq. 5: logits_i = (v_i . m) / c_i^alpha.
+    alpha=1 is the paper; alpha=0 ignores cost (accuracy-only routing).
+    """
+    meta = backbone_forward(params["backbone"], x, **backbone_static)
+    logits = meta @ params["v"].T                          # (B, N)
+    cost = params["cost_rel"] ** cost_exponent
+    logits = logits / cost[None, :]
+    return jax.nn.softmax(logits, axis=-1), meta
+
+
+def distill_loss(params: Params, meta,
+                 projected: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Eq. 8: pull each read-out r_i(m) toward e_i (stop-grad on e_i)."""
+    names = list(params["distill"])
+    total = jnp.zeros((), jnp.float32)
+    for name in names:
+        r = meta @ params["distill"][name]
+        r = r / jnp.maximum(jnp.linalg.norm(r, axis=-1, keepdims=True), 1e-6)
+        e = jax.lax.stop_gradient(projected[name])
+        total = total + jnp.mean(cosine_distance(r, e))
+    return total / len(names)

@@ -1,0 +1,187 @@
+"""Algorithm 1 — the paper's two-phase learning procedure.
+
+Phase 1 (lines 3-10): train every zoo model jointly with
+    L_i = L_ce(y_hat_i, y) + lambda_cnt * L_cnt(y_hat, y)
+where L_cnt couples the models through their projected embeddings.
+
+Phase 2 (lines 11-19): freeze the zoo; train the multiplexer with
+    L = L_mux(y_ENS, y) + lambda_distill * sum_i L_distill(m, e_i).
+
+Pure JAX; a single jit'd step covers all models (they are trained
+jointly by construction of the contrastive term).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import contrastive as cnt
+from repro.core import ensemble as ens
+from repro.core import multiplexer as mux_mod
+from repro.models import cnn as cnn_mod
+from repro.optim import adamw
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Zoo state
+# ---------------------------------------------------------------------------
+
+def init_zoo_state(key, exp_cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    zoo = cnn_mod.init_zoo(k1, num_classes=exp_cfg.num_classes,
+                           names=exp_cfg.zoo)
+    dims = {n: cnn_mod.ZOO_SPECS[n]["embed_dim"] for n in exp_cfg.zoo}
+    proj = cnt.init_projections(k2, dims, exp_cfg.proj_dim)
+    return {"zoo": zoo, "proj": proj}
+
+
+def zoo_apply(state: Params, images, names: Sequence[str]):
+    """-> (probs_stack (N,B,C), embeddings {n:(B,d)}, logits {n})."""
+    logits, embeds = {}, {}
+    for n in names:
+        lg, em = cnn_mod.cnn_forward(
+            state["zoo"][n], images,
+            convs_per_stage=cnn_mod.ZOO_SPECS[n].get("convs_per_stage", 1))
+        logits[n] = lg
+        embeds[n] = em
+    probs = jnp.stack([jax.nn.softmax(logits[n], -1) for n in names])
+    return probs, embeds, logits
+
+
+# ---------------------------------------------------------------------------
+# Phase 1
+# ---------------------------------------------------------------------------
+
+def zoo_loss(state: Params, batch, exp_cfg):
+    names = list(exp_cfg.zoo)
+    probs, embeds, logits = zoo_apply(state, batch["image"], names)
+    y = batch["label"]
+    ce = sum(-jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(logits[n], -1),
+                                           y[:, None], axis=1))
+             for n in names) / len(names)
+    projected = cnt.project(state["proj"], embeds)
+    correct = {n: jnp.argmax(logits[n], -1) == y for n in names}
+    l_cnt = cnt.contrastive_loss(projected, correct)
+    loss = ce + exp_cfg.contrastive_coef * l_cnt
+    return loss, {"ce": ce, "cnt": l_cnt}
+
+
+@functools.partial(jax.jit, static_argnames=("exp_cfg", "opt_cfg"))
+def zoo_train_step(state, opt_state, batch, exp_cfg, opt_cfg):
+    (loss, metrics), grads = jax.value_and_grad(zoo_loss, has_aux=True)(
+        state, batch, exp_cfg)
+    state, opt_state, om = adamw.apply_updates(opt_cfg, state, grads, opt_state)
+    return state, opt_state, {**metrics, **om, "loss": loss}
+
+
+def train_zoo(key, exp_cfg, batches: List[Dict], *, contrastive: bool = True,
+              log_every: int = 50, verbose: bool = False):
+    """Phase 1 driver.  With contrastive=False this is the ablation
+    baseline (plain independent training), used by benchmarks."""
+    import dataclasses
+    cfg = exp_cfg if contrastive else dataclasses.replace(
+        exp_cfg, contrastive_coef=0.0)
+    state = init_zoo_state(key, cfg)
+    opt_cfg = adamw.AdamWConfig(lr=cfg.lr, weight_decay=1e-4,
+                                warmup_steps=20, total_steps=cfg.zoo_steps,
+                                clip_norm=1.0)
+    opt_state = adamw.init(opt_cfg, state)
+    step = 0
+    while step < cfg.zoo_steps:
+        for batch in batches:
+            state, opt_state, m = zoo_train_step(state, opt_state, batch,
+                                                 cfg, opt_cfg)
+            step += 1
+            if verbose and step % log_every == 0:
+                print(f"  zoo step {step}: loss={float(m['loss']):.4f} "
+                      f"ce={float(m['ce']):.4f} cnt={float(m['cnt']):.4f}")
+            if step >= cfg.zoo_steps:
+                break
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Phase 2
+# ---------------------------------------------------------------------------
+
+def init_mux_state(key, exp_cfg, *, names: Sequence[str] = None) -> Params:
+    names = list(names or exp_cfg.zoo)
+    k1, k2 = jax.random.split(key)
+    backbone = mux_mod.init_image_backbone(k1, meta_dim=exp_cfg.meta_dim)
+    costs = exp_cfg.costs()
+    return mux_mod.init_mux(k2, backbone=backbone, model_names=names,
+                            costs={n: costs[n] for n in names},
+                            meta_dim=exp_cfg.meta_dim,
+                            proj_dim=exp_cfg.proj_dim)
+
+
+def mux_loss(trainable, cost_rel, zoo_state, batch, exp_cfg, names,
+             objective: str = "ensemble"):
+    mux_params = {**trainable, "cost_rel": cost_rel}
+    probs, embeds, logits = zoo_apply(zoo_state, batch["image"], names)
+    probs = jax.lax.stop_gradient(probs)
+    weights, meta = mux_mod.mux_forward(mux_params, batch["image"])
+    if objective == "offload":
+        # paper §III.B mobile/cloud mux: a binary detector of inputs the
+        # FIRST (mobile) model solves — route local iff w[:,0] >= 0.5
+        mobile_ok = jax.lax.stop_gradient(
+            (jnp.argmax(logits[names[0]], -1) == batch["label"])
+            .astype(jnp.float32))
+        p_local = jnp.clip(weights[:, 0], 1e-6, 1 - 1e-6)
+        # class-balanced BCE: mobile-correct is the majority class (the
+        # easy inputs); without re-weighting the detector collapses to
+        # "always local" and misses the hard tail the cloud should get
+        pos = jnp.clip(mobile_ok.mean(), 0.05, 0.95)
+        l_mux = -jnp.mean(
+            mobile_ok * jnp.log(p_local) / pos
+            + (1 - mobile_ok) * jnp.log1p(-p_local) / (1 - pos)) / 2
+    else:
+        l_mux = ens.mux_xent(weights, probs, batch["label"])
+    projected = cnt.project(zoo_state["proj"], embeds)
+    l_dst = mux_mod.distill_loss(mux_params, meta, projected)
+    return l_mux + exp_cfg.distill_coef * l_dst, {"mux": l_mux, "distill": l_dst}
+
+
+@functools.partial(jax.jit, static_argnames=("exp_cfg", "opt_cfg", "names",
+                                              "objective"))
+def mux_train_step(trainable, cost_rel, opt_state, zoo_state, batch, exp_cfg,
+                   opt_cfg, names, objective="ensemble"):
+    (loss, metrics), grads = jax.value_and_grad(mux_loss, has_aux=True)(
+        trainable, cost_rel, zoo_state, batch, exp_cfg, names, objective)
+    trainable, opt_state, om = adamw.apply_updates(opt_cfg, trainable, grads,
+                                                   opt_state)
+    return trainable, opt_state, {**metrics, **om, "loss": loss}
+
+
+def train_mux(key, exp_cfg, zoo_state, batches: List[Dict],
+              *, names: Sequence[str] = None, log_every: int = 50,
+              verbose: bool = False, objective: str = "ensemble"):
+    """Phase 2 driver (works for any subset of the zoo, e.g. the
+    mobile/cloud pair)."""
+    names = tuple(names or exp_cfg.zoo)
+    mux_params = init_mux_state(key, exp_cfg, names=names)
+    opt_cfg = adamw.AdamWConfig(lr=exp_cfg.lr, weight_decay=1e-4,
+                                warmup_steps=20, total_steps=exp_cfg.mux_steps,
+                                clip_norm=1.0)
+    cost_rel = mux_params.pop("cost_rel")        # fixed, not trained
+    trainable = mux_params
+    opt_state = adamw.init(opt_cfg, trainable)
+    step = 0
+    while step < exp_cfg.mux_steps:
+        for batch in batches:
+            trainable, opt_state, m = mux_train_step(
+                trainable, cost_rel, opt_state, zoo_state, batch, exp_cfg,
+                opt_cfg, names, objective)
+            step += 1
+            if verbose and step % log_every == 0:
+                print(f"  mux step {step}: loss={float(m['loss']):.4f} "
+                      f"mux={float(m['mux']):.4f} "
+                      f"distill={float(m['distill']):.4f}")
+            if step >= exp_cfg.mux_steps:
+                break
+    return {**trainable, "cost_rel": cost_rel}

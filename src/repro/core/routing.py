@@ -1,0 +1,92 @@
+"""Distributed model-level dispatch — the TPU-native rendering of the
+paper's cloud-API deployment (Fig. 2d).
+
+On GPU serving fleets the mux fronts an RPC router that forwards each
+request to the server replica hosting the chosen model.  On a TPU mesh
+the idiomatic equivalent is the MoE dispatch pattern lifted to *whole
+model* granularity: all N zoo models live sharded on the same mesh; the
+mux assigns each request a model id; requests are bucketed per model
+with a fixed capacity (static shapes!), every model runs on its bucket,
+and results are scattered back.  Under pjit with the batch sharded on
+'data' this lowers to the all-to-all pair XLA emits for scatter/gather
+across data shards.
+
+The dispatch math is deliberately shared with repro.models.moe — the
+paper's multiplexer *is* a router; the only difference is granularity.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def bucket_by_model(assign: jnp.ndarray, num_models: int, capacity: int
+                    ) -> Dict[str, jnp.ndarray]:
+    """assign: (B,) model ids.  Returns static-shape routing plan.
+
+    sort-based, capacity-bounded: plan["slot"][b] = m * capacity + c for
+    request b landing in bucket m at column c (or the overflow slot).
+    Overflowed requests fall back to model 0 semantics handled by caller
+    via plan["kept"].
+    """
+    b = assign.shape[0]
+    order = jnp.argsort(assign)                     # stable
+    sorted_m = assign[order]
+    pos_in_m = jnp.arange(b) - jnp.searchsorted(sorted_m, sorted_m, side="left")
+    kept = pos_in_m < capacity
+    slot_sorted = jnp.where(kept, sorted_m * capacity + pos_in_m,
+                            num_models * capacity)
+    # per-request (unsorted) view
+    inv = jnp.argsort(order)
+    return {
+        "order": order, "inv": inv,
+        "slot": slot_sorted[inv],                    # (B,)
+        "kept": kept[inv],                           # (B,)
+    }
+
+
+def dispatch(x: jnp.ndarray, plan: Dict[str, jnp.ndarray], num_models: int,
+             capacity: int) -> jnp.ndarray:
+    """x: (B, ...) -> buckets (N, C, ...)."""
+    b = x.shape[0]
+    buf_shape = (num_models * capacity + 1,) + x.shape[1:]
+    buf = jnp.zeros(buf_shape, x.dtype).at[plan["slot"]].set(x)
+    return buf[:num_models * capacity].reshape(
+        (num_models, capacity) + x.shape[1:])
+
+
+def combine(outputs: jnp.ndarray, plan: Dict[str, jnp.ndarray],
+            fill_value=0) -> jnp.ndarray:
+    """outputs: (N, C, ...) -> per-request (B, ...); dropped requests get
+    fill_value (callers should size capacity so this never happens in
+    production — see MuxServer.capacity policy)."""
+    n, c = outputs.shape[:2]
+    flat = outputs.reshape((n * c,) + outputs.shape[2:])
+    got = flat[jnp.clip(plan["slot"], 0, n * c - 1)]
+    fill = jnp.full_like(got, fill_value)
+    keep = plan["kept"].reshape((-1,) + (1,) * (got.ndim - 1))
+    return jnp.where(keep, got, fill)
+
+
+def multiplexed_apply(x: jnp.ndarray, assign: jnp.ndarray,
+                      model_fns: Sequence[Callable[[jnp.ndarray], jnp.ndarray]],
+                      *, capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run request-level multiplexing in one program.
+
+    x: (B, ...) requests; assign: (B,) model ids; model_fns[m] maps a
+    (C, ...) bucket to (C, out...).  Every model runs on its (possibly
+    padded) bucket — compute cost is sum_m cost_m(C), the static-shape
+    price of single-program multiplexing; see DESIGN.md §2.
+
+    Returns (outputs (B, out...), kept (B,) bool).
+    """
+    n = len(model_fns)
+    plan = bucket_by_model(assign, n, capacity)
+    buckets = dispatch(x, plan, n, capacity)
+    outs = [fn(buckets[m]) for m, fn in enumerate(model_fns)]
+    outputs = jnp.stack(outs)                       # (N, C, out...)
+    return combine(outputs, plan), plan["kept"]

@@ -1,0 +1,103 @@
+"""Procedural datasets.
+
+Image classification with *controllable hardness* (the offline stand-in
+for ImageNet, see DESIGN.md §5): each sample composites a class template
+with nuisances whose strength is its hardness h ~ U[0,1]:
+  * additive low+high frequency noise  (grows with h)
+  * blending with a distractor class template (grows with h)
+  * an occluding patch (appears for h > 0.5)
+  * label corruption for h > 0.97 — the "no model can solve" tail the
+    paper uses to define maximal input complexity (§I).
+
+Small zoo members resolve low-h samples; capacity buys robustness to
+the nuisances, reproducing the paper's expertise spectrum (Fig. 1).
+
+Also: token-stream LM data (order-2 structure) for the LLM-zoo demos.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_templates(key, *, num_classes: int = 10, image_size: int = 32,
+                   channels: int = 3) -> jnp.ndarray:
+    """Smooth class anchors: upsampled 4x4 random fields. (C, H, W, ch)."""
+    coarse = jax.random.normal(key, (num_classes, 4, 4, channels))
+    return jax.image.resize(coarse, (num_classes, image_size, image_size,
+                                     channels), "bicubic")
+
+
+def sample_images(key, templates, *, batch: int,
+                  hardness: jnp.ndarray = None
+                  ) -> Dict[str, jnp.ndarray]:
+    """Returns {image (B,H,W,ch), label (B,), hardness (B,)}."""
+    nc, h, w, ch = templates.shape
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    label = jax.random.randint(k1, (batch,), 0, nc)
+    if hardness is None:
+        hardness = jax.random.uniform(k2, (batch,))
+    base = templates[label]
+    distractor = templates[jax.random.randint(k3, (batch,), 0, nc)]
+    hb = hardness[:, None, None, None]
+    img = base * (1 - 0.45 * hb) + distractor * (0.45 * hb)
+    img = img + jax.random.normal(k4, img.shape) * (0.15 + 0.9 * hb)
+    # occluding patch for h > 0.5
+    py = jax.random.randint(k5, (batch,), 0, h - 8)
+    px = jax.random.randint(k6, (batch,), 0, w - 8)
+    yy = jnp.arange(h)[None, :, None]
+    xx = jnp.arange(w)[None, None, :]
+    occ = ((yy >= py[:, None, None]) & (yy < py[:, None, None] + 8)
+           & (xx >= px[:, None, None]) & (xx < px[:, None, None] + 8))
+    occ = occ[..., None] & (hardness[:, None, None, None] > 0.5)
+    img = jnp.where(occ, 0.0, img)
+    # label corruption tail: h > 0.97 is unsolvable by construction
+    corrupt = hardness > 0.97
+    rand_label = jax.random.randint(k7, (batch,), 0, nc)
+    label = jnp.where(corrupt, (label + 1 + rand_label) % nc, label)
+    return {"image": img, "label": label, "hardness": hardness}
+
+
+def image_dataset(key, templates, *, num_samples: int, batch: int):
+    """Deterministic list of batches (generated on the fly, no storage)."""
+    steps = num_samples // batch
+    keys = jax.random.split(key, steps)
+    return [sample_images(k, templates, batch=batch) for k in keys]
+
+
+# ---------------------------------------------------------------------------
+# Token LM streams
+# ---------------------------------------------------------------------------
+
+def lm_batch(key, *, batch: int, seq_len: int, vocab_size: int,
+             structure: float = 0.8, table_seed: int = 42
+             ) -> Dict[str, jnp.ndarray]:
+    """Order-2 structured token stream: next token is a fixed function of
+    the previous two with prob `structure`, else uniform.  Gives a
+    learnable but non-trivial LM task for end-to-end training demos.
+
+    The transition table depends only on ``table_seed`` (NOT on ``key``)
+    so successive batches share the structure a model can learn.
+    """
+    _, k2, k3, k4 = jax.random.split(key, 4)
+    table = jax.random.randint(jax.random.key(table_seed),
+                               (vocab_size, vocab_size), 0, vocab_size)
+
+    t0 = jax.random.randint(k2, (batch, 2), 0, vocab_size)
+    noise = jax.random.uniform(k3, (batch, seq_len))
+    rand_tok = jax.random.randint(k4, (batch, seq_len), 0, vocab_size)
+
+    def step(carry, xs):
+        prev2, prev1 = carry
+        nz, rt = xs
+        det = table[prev2, prev1]
+        tok = jnp.where(nz < structure, det, rt)
+        return (prev1, tok), tok
+
+    _, toks = jax.lax.scan(step, (t0[:, 0], t0[:, 1]),
+                           (noise.T, rand_tok.T))
+    toks = toks.T                                       # (B, S)
+    labels = jnp.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+    return {"tokens": toks, "labels": labels}

@@ -1,0 +1,146 @@
+"""Pallas TPU flash attention (causal / sliding-window / chunked, GQA,
+logit soft-capping).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the trailing grid
+dimension is sequential on TPU, so the online-softmax running state
+(m, l, acc) lives in VMEM scratch and is carried across kv blocks.
+Fully-masked kv blocks (above the causal diagonal, outside the window /
+chunk span) are skipped with pl.when — the kernel does the same
+sub-quadratic work the banded jnp reference path claims.
+
+BlockSpec tiling (VMEM working set per grid step):
+  q   (1, 1, block_q, head_dim)
+  k/v (1, 1, block_k, head_dim)     indexed by kv head = h // (H / K)
+  out (1, 1, block_q, head_dim)
+with block_q = block_k = 128 by default (MXU-aligned: 128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 chunk: Optional[int], logit_cap: Optional[float],
+                 block_q: int, block_k: int, seq_len: int, kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_first = iq * block_q
+    q_last = q_first + block_q - 1
+    k_first = ik * block_k
+    k_last = k_first + block_k - 1
+
+    # static-shape liveness test for this (q block, kv block) pair
+    live = jnp.asarray(True)
+    if causal:
+        live &= k_first <= q_last
+    if window is not None:
+        live &= k_last > q_first - window
+    if chunk is not None:
+        live &= k_last >= (q_first // chunk) * chunk
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, vd)
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        if logit_cap is not None:
+            sc = jnp.tanh(sc / logit_cap) * logit_cap
+        q_pos = q_first + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+        kv_pos = k_first + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        mask = kv_pos < kv_len
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window is not None:
+            mask &= kv_pos > q_pos - window
+        if chunk is not None:
+            mask &= kv_pos >= (q_pos // chunk) * chunk
+        sc = jnp.where(mask, sc, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=1))
+        p = jnp.exp(sc - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         chunk: Optional[int] = None,
+                         logit_cap: Optional[float] = None,
+                         scale: Optional[float] = None, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False):
+    """q: (B, S, H, hd); k/v: (B, T, K, hd|vd).  Returns (B, S, H, vd)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, s, h, hd = q.shape
+    t, kk = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    g = h // kk
+    scale_ = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    nq = -(-s // bq)
+    nk = -(-t // bk)
+    s_pad, t_pad = nq * bq, nk * bk
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale_, causal=causal, window=window, chunk=chunk,
+        logit_cap=logit_cap, block_q=bq, block_k=bk, seq_len=s, kv_len=t)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, vd), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, vd),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, vd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, vd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)[:, :s]

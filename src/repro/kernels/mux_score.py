@@ -1,0 +1,59 @@
+"""Pallas TPU fused multiplexer head (paper Eq. 5-6).
+
+Fuses: L2-normalise(meta) -> meta @ v^T -> / cost_i -> softmax, in one
+VMEM-resident pass over a batch block.  This is the per-request hot
+path of the serving router (it runs on *every* request before any model
+is chosen), so it is fused to a single kernel instead of 4 HLO ops with
+HBM round-trips.
+
+BlockSpec tiling per grid step:
+  meta (block_b, M)   v (N, M) full   cost (1, N) full
+  out  (block_b, N)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mux_kernel(meta_ref, v_ref, cost_ref, out_ref, *, normalize: bool):
+    m = meta_ref[...].astype(jnp.float32)                       # (bb, M)
+    if normalize:
+        norm = jnp.sqrt(jnp.sum(m * m, axis=-1, keepdims=True))
+        m = m / jnp.maximum(norm, 1e-6)
+    v = v_ref[...].astype(jnp.float32)                          # (N, M)
+    logits = jax.lax.dot_general(m, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    logits = logits / cost_ref[0][None, :]
+    mx = logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits - mx)
+    out_ref[...] = (e / e.sum(axis=-1, keepdims=True)).astype(out_ref.dtype)
+
+
+def mux_score(meta, v, cost, *, normalize: bool = True, block_b: int = 256,
+              interpret: bool = False) -> jnp.ndarray:
+    """meta: (B, M); v: (N, M); cost: (N,).  Returns weights (B, N) fp32."""
+    b, m_dim = meta.shape
+    n = v.shape[0]
+    bb = min(block_b, b)
+    nb = -(-b // bb)
+    pad = nb * bb - b
+    if pad:
+        meta = jnp.pad(meta, ((0, pad), (0, 0)))
+    kernel = functools.partial(_mux_kernel, normalize=normalize)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, m_dim), lambda i: (i, 0)),
+            pl.BlockSpec((n, m_dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * bb, n), jnp.float32),
+        interpret=interpret,
+    )(meta, v, cost[None, :])
+    return out[:b]

@@ -1,0 +1,62 @@
+"""Dispatching wrappers: Pallas on TPU, pure-jnp oracle elsewhere.
+
+``use_pallas()`` is True on real TPU backends; tests force the Pallas
+path on CPU with interpret=True (executes the kernel body in Python).
+The jnp fallbacks are not toys — they are the blocked/flash-equivalent
+implementations in repro.models.* whose HLO the dry-run analyses.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.mux_score import mux_score as _mux_pallas
+from repro.kernels.selective_scan import selective_scan as _scan_pallas
+
+_FORCE = os.environ.get("REPRO_FORCE_PALLAS", "")  # "interpret" | "tpu" | ""
+
+
+def use_pallas() -> bool:
+    if _FORCE:
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return _FORCE == "interpret" or jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              chunk: Optional[int] = None, logit_cap: Optional[float] = None,
+              scale: Optional[float] = None):
+    """Flash attention: Pallas kernel on TPU, blocked-jnp elsewhere."""
+    if use_pallas():
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             chunk=chunk, logit_cap=logit_cap, scale=scale,
+                             interpret=_interpret())
+    from repro.models.attention import blocked_attention
+    return blocked_attention(q, k, v, causal=causal, window=window,
+                             chunk=chunk, scale=scale, logit_cap=logit_cap)
+
+
+def selective_scan(x, dt, b_mat, c_mat, a_mat, d_vec):
+    """Mamba-1 scan: Pallas kernel on TPU, lax.scan reference elsewhere."""
+    if use_pallas():
+        return _scan_pallas(x, dt, b_mat, c_mat, a_mat, d_vec,
+                            interpret=_interpret())
+    y, _ = ref.selective_scan_ref(x, dt, b_mat, c_mat, a_mat, d_vec)
+    return y
+
+
+def mux_score(meta, v, cost, *, normalize: bool = True):
+    """Fused router head: Pallas on TPU, jnp elsewhere."""
+    if use_pallas():
+        return _mux_pallas(meta, v, cost, normalize=normalize,
+                           interpret=_interpret())
+    return ref.mux_score_ref(meta, v, cost, normalize=normalize)

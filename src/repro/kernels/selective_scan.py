@@ -1,0 +1,80 @@
+"""Pallas TPU Mamba-1 selective scan.
+
+Grid: (batch, d_inner blocks, seq chunks) — the trailing (seq-chunk)
+grid dimension is sequential on TPU, so the SSM state h lives in VMEM
+scratch and is carried across chunks; within a chunk the recurrence
+runs as a fori_loop over time steps on a (block_d, n) state held in
+registers/VMEM.  This is the TPU-native adaptation of the CUDA
+selective-scan: parallelism comes from the d_inner dimension (VPU
+lanes), not warp-level shuffles.
+
+BlockSpec tiling per grid step:
+  x/dt (1, chunk, block_d)     b/c (1, chunk, n)
+  A    (block_d, n)            y   (1, chunk, block_d)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *,
+                 chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...].astype(jnp.float32)                     # (bd, n)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)              # (bd,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)            # (bd,)
+        b_t = b_ref[0, t].astype(jnp.float32)              # (n,)
+        c_t = c_ref[0, t].astype(jnp.float32)              # (n,)
+        decay = jnp.exp(dt_t[:, None] * a)                 # (bd, n)
+        h = decay * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, t] = (h @ c_t).astype(y_ref.dtype)        # (bd,)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+
+def selective_scan(x, dt, b_mat, c_mat, a_mat, d_vec, *, chunk: int = 128,
+                   block_d: int = 256, interpret: bool = False
+                   ) -> jnp.ndarray:
+    """x/dt: (B, S, d_in); b_mat/c_mat: (B, S, n); a_mat: (d_in, n);
+    d_vec: (d_in,).  Returns y (B, S, d_in) fp32 (h_final not returned;
+    prefill state hand-off uses the ops-level wrapper)."""
+    b, s, d_in = x.shape
+    n = b_mat.shape[-1]
+    ch = min(chunk, s)
+    bd = min(block_d, d_in)
+    assert s % ch == 0 and d_in % bd == 0, (s, ch, d_in, bd)
+    nc = s // ch
+    nd = d_in // bd
+
+    kernel = functools.partial(_scan_kernel, chunk=ch)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, ch, bd), lambda b_, id_, ic: (b_, ic, id_)),
+            pl.BlockSpec((1, ch, bd), lambda b_, id_, ic: (b_, ic, id_)),
+            pl.BlockSpec((1, ch, n), lambda b_, id_, ic: (b_, ic, 0)),
+            pl.BlockSpec((1, ch, n), lambda b_, id_, ic: (b_, ic, 0)),
+            pl.BlockSpec((bd, n), lambda b_, id_, ic: (id_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ch, bd), lambda b_, id_, ic: (b_, ic, id_)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d_in), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b_mat, c_mat, a_mat)
+    return y + x.astype(jnp.float32) * d_vec.astype(jnp.float32)[None, None]

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST precede any jax import (jax locks the device
+count at first backend init): the dry-run builds the production meshes
+(16x16 single pod, 2x16x16 multi-pod) out of 512 placeholder host
+devices.  Nothing is allocated — all inputs are ShapeDtypeStructs and
+the artifact is the compiled module's memory/cost/HLO analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_config
+from repro.launch import hlo_analysis as hla
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+from repro.sharding import specs as sp
+from repro.sharding.partition import (axis_rules, decode_rules, prefill_rules,
+                                      resolve, train_rules)
+
+# long_500k needs sub-quadratic context handling (see DESIGN.md §4):
+LONG_CONTEXT_OK = {
+    "gemma2-27b",                  # sliding-window on alternating layers
+    "falcon-mamba-7b",             # O(1) SSM state
+    "jamba-v0.1-52b",              # hybrid: 4 attn layers, rest mamba
+    "llama4-maverick-400b-a17b",   # chunked-local attention (iRoPE)
+}
+
+
+def planned_pairs():
+    for arch in ARCHITECTURES:
+        for shape_name in INPUT_SHAPES:
+            if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+                continue
+            yield arch, shape_name
+
+
+def _opt_cfg(cfg) -> adamw.AdamWConfig:
+    # 400B params: bf16 moments so the single-pod train state fits HBM
+    mdt = "bfloat16" if hla.total_params(cfg) > 1e11 else "float32"
+    return adamw.AdamWConfig(moment_dtype=mdt)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_step(arch: str, shape_name: str, *, multi_pod: bool = False,
+               overrides: Optional[Dict[str, Any]] = None):
+    """Build + lower one (arch, shape, mesh) combination.
+
+    ``overrides``: ModelConfig field overrides for §Perf hillclimb
+    variants (e.g. {"remat": "full_inner", "logits_chunk": 256}).
+    Returns (lowered, mesh, meta).
+    """
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model_size = mesh.shape["model"]
+    data_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    kvs = steps_mod.kv_shardable(cfg, model_size)
+
+    if shape.kind == "train":
+        # ZeRO-3 weight sharding once the fp32 train state outgrows the
+        # 16-way TP slice (>~20B params); see partition.train_rules.
+        fsdp = hla.total_params(cfg) > 2e10
+        rules = train_rules(kvs, fsdp=fsdp)
+        if not cfg.seq_parallel:
+            rules["seq"] = None
+    elif shape.kind == "prefill":
+        rules = prefill_rules(kvs)
+    else:
+        rules = decode_rules(kvs, shape.global_batch >= data_size)
+    rules = resolve(rules, mesh)
+
+    with mesh, axis_rules(rules):
+        if shape.kind == "train":
+            opt_cfg = _opt_cfg(cfg)
+            step = steps_mod.make_train_step(cfg, opt_cfg)
+            params, opt_state = steps_mod.abstract_train_state(cfg, opt_cfg)
+            batch = steps_mod.train_batch_specs(cfg, shape)
+            pspec = sp.param_specs(params, rules, mesh)
+            # opt specs mirror param specs
+            ospec = adamw.AdamWState(step=P(),
+                                     mu=sp.param_specs(opt_state.mu, rules, mesh),
+                                     nu=sp.param_specs(opt_state.nu, rules, mesh))
+            bspec = sp.batch_specs(batch, rules)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspec), _named(mesh, ospec),
+                              _named(mesh, bspec)),
+                out_shardings=(_named(mesh, pspec), _named(mesh, ospec),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params, opt_state, batch)
+        elif shape.kind == "prefill":
+            step = steps_mod.make_prefill_step(cfg, cache_len=shape.seq_len)
+            params = steps_mod.abstract_serve_params(cfg)
+            batch = steps_mod.prefill_batch_specs(cfg, shape)
+            pspec = sp.param_specs(params, rules, mesh)
+            bspec = sp.batch_specs(batch, rules)
+            from repro.models import transformer as _tf
+            cspec = sp.cache_specs(
+                _tf.abstract_caches(cfg, shape.global_batch, shape.seq_len),
+                rules, mesh)
+            tok_spec = P(rules.get("batch"))
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspec), _named(mesh, bspec)),
+                out_shardings=(NamedSharding(mesh, tok_spec),
+                               _named(mesh, cspec)))
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            step = steps_mod.make_decode_step(cfg)
+            params = steps_mod.abstract_serve_params(cfg)
+            dec = steps_mod.decode_inputs_specs(cfg, shape)
+            pspec = sp.param_specs(params, rules, mesh)
+            cspec = sp.cache_specs(dec["caches"], rules, mesh)
+            tok_spec = P(*([rules.get("batch")]
+                           + [None] * (len(dec["token"].shape) - 1)))
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspec), _named(mesh, cspec),
+                              NamedSharding(mesh, tok_spec),
+                              NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, tok_spec),
+                               _named(mesh, cspec)),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params, dec["caches"], dec["token"],
+                                   dec["pos"])
+
+    # analytic per-device state bytes (exact, from the spec trees)
+    state_bytes = {"params": sp.sharded_bytes(params, pspec, mesh)}
+    if shape.kind == "train":
+        state_bytes["opt"] = (sp.sharded_bytes(opt_state.mu, ospec.mu, mesh)
+                              + sp.sharded_bytes(opt_state.nu, ospec.nu, mesh))
+    if shape.kind == "decode":
+        state_bytes["caches"] = sp.sharded_bytes(dec["caches"], cspec, mesh)
+    elif shape.kind == "prefill":
+        from repro.models import transformer as _tf2
+        state_bytes["caches"] = sp.sharded_bytes(
+            _tf2.abstract_caches(cfg, shape.global_batch, shape.seq_len),
+            cspec, mesh)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind, "kv_shardable": kvs,
+            "total_params": hla.total_params(cfg),
+            "active_params": hla.active_params(cfg),
+            "model_flops": hla.model_flops(cfg, shape),
+            "state_bytes_per_device": state_bytes}
+    return lowered, mesh, meta
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            verbose: bool = True,
+            overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered, mesh, meta = lower_step(arch, shape_name, multi_pod=multi_pod,
+                                     overrides=overrides)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    chips = 512 if multi_pod else 256
+    text = compiled.as_text()
+    roof = hla.roofline_from_compiled(compiled, chips, hlo_text=text)
+    from repro.launch.hlo_cost import HloCostModel
+    hoist = HloCostModel(text).convert_hoist_bytes()
+    temp = getattr(mem, "temp_size_in_bytes", 0) or 0
+    rec = {
+        **meta,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": temp,
+            # CPU backend hoists f32 copies of bf16 weights (no native
+            # bf16 matmul); a TPU lowering never materialises these.
+            "cpu_f32_hoist_bytes": hoist,
+            "temp_bytes_tpu_estimate": max(temp - hoist, 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "roofline": roof.to_dict(),
+        "flops_ratio_model_over_hlo":
+            meta["model_flops"] / max(roof.flops * chips, 1.0),
+    }
+    if verbose:
+        m = rec["memory"]
+        per_dev = (m["argument_bytes"] or 0) + m["temp_bytes_tpu_estimate"]
+        print(f"[{meta['mesh']}] {arch} x {shape_name}: "
+              f"compile={t_compile:.0f}s "
+              f"mem/dev={(per_dev)/2**30:.2f}GiB "
+              f"compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"-> {roof.bottleneck}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override field=value (hillclimb "
+                         "variants), e.g. --set remat=full_inner")
+    args = ap.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    if args.all:
+        pairs = list(planned_pairs())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape_name in pairs:
+        for mp in meshes:
+            combos.append((arch, shape_name, mp))
+
+    failures = 0
+    for arch, shape_name, mp in combos:
+        tag = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"skip (cached): {tag}", flush=True)
+            continue
+        try:
+            rec = run_one(arch, shape_name, multi_pod=mp,
+                          overrides=overrides or None)
+            if overrides:
+                rec["overrides"] = overrides
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception:
+            failures += 1
+            print(f"FAILED: {tag}\n{traceback.format_exc()}", flush=True)
+    print(f"done; failures={failures}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""Roofline terms from a compiled (AOT) step.
+
+This container has no TPU, so the 'profile' is the compiled HLO:
+  compute term    = HLO_FLOPs / (chips * peak)
+  memory term     = HLO_bytes / (chips * hbm_bw)
+  collective term = collective_bytes / (chips * link_bw)
+cost_analysis() supplies FLOPs/bytes; collective bytes are parsed from
+the compiled HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute operand+result sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# --- TPU v5e constants (per chip) ------------------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result/operand types look like  bf16[16,512,4608]{2,1,0:T(8,128)}
+_TYPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(", re.M)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Aggregate per-op-kind: count and result-buffer bytes.
+
+    Bytes are the *sharded* (per-device) buffer sizes, because the
+    compiled module is the per-device program.  '-done' ops are skipped
+    so async pairs are not double-counted.
+    """
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        out[op]["count"] += 1
+        out[op]["bytes"] += _type_bytes(m.group("rtype"))
+    return out
+
+
+def collective_link_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    """Approximate per-device ICI traffic.
+
+    Per-device bytes moved over links (ring algorithms):
+      all-gather:       result is the gathered buffer; each device
+                        receives (n-1)/n of it ~ result bytes
+      all-reduce:       2x (reduce-scatter + all-gather) on the buffer
+      reduce-scatter:   result is the scattered shard; traffic ~ n * result ~
+                        operand bytes; we approximate with result * 1
+                        (conservative: the per-hop payload is the shard)
+      all-to-all:       each device sends/receives ~ buffer bytes
+      collective-permute: buffer bytes once
+    """
+    w = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+    return sum(stats[k]["bytes"] * w[k] for k in stats)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # total HLO flops (whole program, all devices)
+    hbm_bytes: float             # total bytes accessed
+    collective_bytes: float      # per-device ICI bytes
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    collectives: Dict[str, Dict[str, float]]
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           hlo_text: Optional[str] = None) -> Roofline:
+    """Per-device roofline terms.
+
+    FLOPs/bytes/collectives come from the trip-count-aware HLO walk in
+    repro.launch.hlo_cost — XLA's builtin cost_analysis() counts every
+    while-loop body once, which undercounts a scanned-layers program by
+    the layer count and misses in-loop collectives entirely (verified
+    empirically; see EXPERIMENTS.md §Dry-run).
+    """
+    from repro.launch import hlo_cost
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    c = hlo_cost.analyze(text)
+    flops = c.flops
+    hbm = c.bytes
+    stats = c.collectives
+    coll = collective_link_bytes(stats)
+
+    # cost_analysis on the SPMD module is per-device; scale to whole job
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=max(terms, key=terms.get), collectives=stats)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 * N_active * D_tokens (+ attention term).
+
+    The '6ND' convention: 2 FLOPs/MAC x (fwd + 2x bwd) for training;
+    inference steps use 2ND.  N counts *active* params for MoE.
+    """
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count from the config, analytically."""
+    d = cfg.d_model
+    n = 0.0
+    # embeddings (lookup is cheap; count lm head only)
+    n += d * cfg.vocab_size * (cfg.num_codebooks or 1)
+    per_pattern = 0.0
+    for spec in cfg.pattern:
+        if spec.mixer in ("attn", "cross_attn"):
+            hd = cfg.head_dim
+            vd = cfg.v_head_dim or hd
+            per_pattern += d * cfg.num_heads * hd          # q
+            per_pattern += 2 * d * cfg.num_kv_heads * (hd + vd) / 2
+            per_pattern += cfg.num_heads * vd * d          # o
+        elif spec.mixer == "mla":
+            per_pattern += d * cfg.q_lora + cfg.q_lora * cfg.num_heads * (cfg.d_nope + cfg.d_rope)
+            per_pattern += d * (cfg.kv_lora + cfg.d_rope)
+            per_pattern += cfg.kv_lora * cfg.num_heads * (cfg.d_nope + (cfg.v_head_dim or cfg.head_dim))
+            per_pattern += cfg.num_heads * (cfg.v_head_dim or cfg.head_dim) * d
+        elif spec.mixer == "mamba":
+            di = cfg.d_inner
+            per_pattern += 2 * d * di + di * d             # in/out proj
+            per_pattern += di * (cfg.dt_rank + 2 * cfg.ssm_state)
+            per_pattern += cfg.dt_rank * di + cfg.d_conv * di
+        if spec.mlp == "dense":
+            mult = 3 if cfg.gated_mlp else 2
+            per_pattern += mult * d * cfg.d_ff
+        elif spec.mlp == "moe":
+            mult = 3 if cfg.gated_mlp else 2
+            per_pattern += cfg.num_experts_per_tok * mult * d * cfg.moe_d_ff
+            if cfg.shared_expert_d_ff:
+                per_pattern += 3 * d * cfg.shared_expert_d_ff
+            per_pattern += d * cfg.num_experts             # router
+    n += per_pattern * cfg.num_groups
+    return n
+
+
+def total_params(cfg) -> float:
+    """Total parameter count (MoE counts every expert)."""
+    d = cfg.d_model
+    n = d * cfg.vocab_size * (cfg.num_codebooks or 1)
+    if not cfg.tie_embeddings:
+        n *= 2
+    per = 0.0
+    for spec in cfg.pattern:
+        if spec.mixer in ("attn", "cross_attn"):
+            hd = cfg.head_dim
+            vd = cfg.v_head_dim or hd
+            per += d * cfg.num_heads * hd + d * cfg.num_kv_heads * (hd + vd)
+            per += cfg.num_heads * vd * d
+        elif spec.mixer == "mla":
+            per += d * cfg.q_lora + cfg.q_lora * cfg.num_heads * (cfg.d_nope + cfg.d_rope)
+            per += d * (cfg.kv_lora + cfg.d_rope)
+            per += cfg.kv_lora * cfg.num_heads * (cfg.d_nope + (cfg.v_head_dim or cfg.head_dim))
+            per += cfg.num_heads * (cfg.v_head_dim or cfg.head_dim) * d
+        elif spec.mixer == "mamba":
+            di = cfg.d_inner
+            per += 3 * d * di + di * (cfg.dt_rank + 2 * cfg.ssm_state)
+            per += cfg.dt_rank * di + cfg.d_conv * di
+        if spec.mlp == "dense":
+            per += (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+        elif spec.mlp == "moe":
+            per += cfg.num_experts * (3 if cfg.gated_mlp else 2) * d * cfg.moe_d_ff
+            if cfg.shared_expert_d_ff:
+                per += 3 * d * cfg.shared_expert_d_ff
+            per += d * cfg.num_experts
+    return n + per * cfg.num_groups

@@ -1,0 +1,392 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+ignoring the trip count — with scan-over-layers (and scanned attention /
+SSM chunk loops) that undercounts FLOPs/bytes by 10-60x and misses every
+collective inside the loop.  This module re-walks the optimized HLO:
+
+  * while ops: body+condition cost x known_trip_count (parsed from
+    backend_config; fallback: the s32 constant in the condition)
+  * fusion ops: operand+result bytes for the fusion itself (XLA's own
+    fusion-aware accounting) + dot FLOPs from the fused computation
+  * dot: 2 x prod(result dims) x prod(contracting dims)
+  * collectives: per-kind counts/bytes, trip-multiplied
+  * bookkeeping ops (parameter/constant/tuple/gte/bitcast) are free
+
+Costs are per-device (the compiled module is the per-device SPMD
+program).  Sort/scatter FLOPs are not modelled (bytes are) — dots
+dominate every config here by >100x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "rng-bit-generator",
+}
+
+_ARRAY_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((?P<params>.*)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^)]*\)|\S+)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over every array in a (possibly tuple) type."""
+    elems = 0
+    byts = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _dims(type_str: str) -> List[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.collectives is None:
+            self.collectives = {k: {"count": 0.0, "bytes": 0.0}
+                                for k in COLLECTIVES}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k in COLLECTIVES:
+            self.collectives[k]["count"] += other.collectives[k]["count"] * mult
+            self.collectives[k]["bytes"] += other.collectives[k]["bytes"] * mult
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[dict]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line or line.lstrip().startswith("//"):
+                continue
+            hm = _HEADER_RE.match(line.strip())
+            if hm and line.rstrip().endswith("{"):
+                cur = hm.group(1)
+                self.computations[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+                # header params define typed names
+                for pm in re.finditer(r"([\w.\-]+):\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^,)]*)",
+                                      hm.group("params")):
+                    self.computations[cur].append(
+                        {"name": pm.group(1), "op": "parameter",
+                         "type": pm.group(2), "line": line})
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            im = _INSTR_RE.match(line)
+            if im:
+                self.computations[cur].append(
+                    {"name": im.group("name"), "op": im.group("op"),
+                     "type": im.group("type"), "args": im.group("args"),
+                     "line": line})
+
+    # ------------------------------------------------------------------
+    def _operands(self, inst: dict) -> List[str]:
+        args = inst.get("args", "")
+        depth = 1
+        end = len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPERAND_RE.findall(args[:end])
+
+    def _sliced_read_bytes(self, called: str, param_idx: int,
+                           full_bytes: float) -> float:
+        """Bytes actually read from fusion operand `param_idx`.
+
+        If every consumer of the parameter inside the fused computation
+        is a (dynamic-)slice/gather, only the slice results are read
+        from HBM — charging the full operand would make banded-attention
+        and ring-cache programs look quadratic when they are not.
+        """
+        comp = self.computations.get(called)
+        if comp is None:
+            return full_bytes
+        pname = None
+        nparam = -1
+        for i in comp:
+            if i["op"] == "parameter":
+                nparam += 1
+                if nparam == param_idx:
+                    pname = i["name"]
+        if pname is None:
+            return full_bytes
+        sliced = 0.0
+        for i in comp:
+            if i["op"] == "parameter":
+                continue
+            if pname in _OPERAND_RE.findall(i.get("args", "")):
+                if i["op"] in ("dynamic-slice", "slice", "gather"):
+                    sliced += _shape_elems_bytes(i["type"])[1]
+                else:
+                    return full_bytes
+        return sliced if sliced else full_bytes
+
+    def _operand_bytes(self, comp: List[dict], inst: dict,
+                       skip_type: Optional[str] = None) -> float:
+        """skip_type: exclude ONE operand of exactly this type — used for
+        in-place DUS-rooted fusions, whose aliased buffer operand is not
+        real HBM traffic (the scan-over-layers cache update pattern)."""
+        types = {i["name"]: i["type"] for i in comp}
+        op = inst["op"]
+        names = self._operands(inst)
+        if op in ("dynamic-slice", "slice", "gather"):
+            # reads only the slice; indices are negligible
+            return _shape_elems_bytes(inst["type"])[1]
+        if op == "dynamic-update-slice":
+            # in-place: reads the update, writes the region
+            upd = types.get(names[1]) if len(names) > 1 else None
+            return _shape_elems_bytes(upd)[1] if upd else 0.0
+        called = None
+        if op == "fusion":
+            c = _CALLS_RE.search(inst["line"])
+            called = c.group(1) if c else None
+        total = 0.0
+        skipped = False
+        for idx, nm in enumerate(names):
+            t = types.get(nm)
+            if not t:
+                continue
+            if skip_type is not None and not skipped and t.split("{")[0] \
+                    == skip_type.split("{")[0]:
+                skipped = True
+                continue
+            fb = _shape_elems_bytes(t)[1]
+            if called is not None:
+                fb = self._sliced_read_bytes(called, idx, fb)
+            total += fb
+        return total
+
+    def _dot_flops(self, comp: List[dict], inst: dict) -> float:
+        types = {i["name"]: i["type"] for i in comp}
+        out_elems, _ = _shape_elems_bytes(inst["type"])
+        cm = _CONTRACT_RE.search(inst["line"])
+        contract = 1
+        ops = _OPERAND_RE.findall(inst.get("args", ""))
+        if cm and ops:
+            lhs_t = types.get(ops[0])
+            if lhs_t:
+                dims = _dims(lhs_t)
+                for d in cm.group(1).split(","):
+                    if d and int(d) < len(dims):
+                        contract *= dims[int(d)]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: List[dict], inst: dict) -> float:
+        types = {i["name"]: i["type"] for i in comp}
+        out_elems, _ = _shape_elems_bytes(inst["type"])
+        ops = _OPERAND_RE.findall(inst.get("args", ""))
+        if len(ops) >= 2:
+            k_t = types.get(ops[1])
+            if k_t:
+                kd = _dims(k_t)
+                if kd:
+                    import math as _m
+                    return 2.0 * out_elems * (
+                        _m.prod(kd[:-1]) if len(kd) > 1 else kd[0])
+        return 0.0
+
+    # ------------------------------------------------------------------
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = Cost()
+        comp = self.computations.get(comp_name, [])
+        for inst in comp:
+            op = inst["op"]
+            if op in _SKIP_OPS:
+                continue
+            line = inst["line"]
+            if op == "while":
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else self._cond_trip(line)
+                body = _CALLS_RE.search(line)
+                cond = _COND_RE.search(line)
+                sub = Cost()
+                if body:
+                    sub.add(self.cost_of(body.group(1)))
+                if cond:
+                    sub.add(self.cost_of(cond.group(1)))
+                total.add(sub, mult=trip)
+                continue
+            if op == "convert":
+                # Pure dtype converts are free: on TPU bf16 is native to
+                # the MXU (no convert exists) or the convert fuses into
+                # the consumer.  On the CPU dry-run backend every bf16
+                # dot is legalised as convert-to-f32 + f32 dot, which
+                # would otherwise double-count all weight traffic.
+                continue
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "scatter", "select-and-scatter",
+                      "conditional"):
+                c = _CALLS_RE.search(line)
+                if c and self._is_pure_convert(c.group(1)):
+                    continue
+                result_bytes = _shape_elems_bytes(inst["type"])[1]
+                dus_root = False
+                if c and op in ("fusion", "call", "map", "conditional"):
+                    inner = self.cost_of(c.group(1))
+                    total.flops += inner.flops
+                    total.transcendentals += inner.transcendentals
+                    # inner collectives (host calls) propagate
+                    total.add(Cost(collectives=inner.collectives))
+                    new_rb = self._dus_write_bytes(c.group(1), result_bytes)
+                    dus_root = new_rb != result_bytes
+                    result_bytes = new_rb
+                ob = self._operand_bytes(comp, inst,
+                                         skip_type=inst["type"] if dus_root
+                                         else None)
+                total.bytes += ob + result_bytes
+                continue
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                _, rb = _shape_elems_bytes(inst["type"])
+                total.collectives[base]["count"] += 1
+                total.collectives[base]["bytes"] += rb
+                total.bytes += rb
+                continue
+            if op == "dynamic-update-slice":
+                total.bytes += 2 * self._operand_bytes(comp, inst)
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(comp, inst)
+            elif op == "convolution":
+                total.flops += self._conv_flops(comp, inst)
+            # generic data movement (includes dot/conv operands)
+            total.bytes += (self._operand_bytes(comp, inst)
+                            + _shape_elems_bytes(inst["type"])[1])
+        self._memo[comp_name] = total
+        return total
+
+    def _is_pure_convert(self, called: str) -> bool:
+        """True if a fused computation only converts dtypes (and
+        reshapes/bitcasts) — free on TPU, a legalisation artifact on the
+        CPU dry-run backend."""
+        comp = self.computations.get(called)
+        if not comp:
+            return False
+        real = [i for i in comp if i["op"] != "parameter"]
+        return bool(real) and all(
+            i["op"] in ("convert", "bitcast", "reshape", "copy") for i in real) \
+            and any(i["op"] == "convert" for i in real)
+
+    def convert_hoist_bytes(self) -> float:
+        """f32 copies of loop-invariant weights the CPU backend hoists
+        out of scan loops (bf16-dot legalisation).  Subtract from XLA's
+        temp_bytes to approximate the TPU-resident footprint."""
+        total = 0.0
+        for cname, comp in self.computations.items():
+            if cname != self.entry:
+                continue
+            for i in comp:
+                if i["op"] == "fusion":
+                    c = _CALLS_RE.search(i["line"])
+                    if c and self._is_pure_convert(c.group(1)) \
+                            and i["type"].startswith("f32"):
+                        total += _shape_elems_bytes(i["type"])[1]
+                elif i["op"] == "convert" and i["type"].startswith("f32"):
+                    total += _shape_elems_bytes(i["type"])[1]
+        return total
+
+    def _dus_write_bytes(self, called: str, full_bytes: float) -> float:
+        """If a fusion computes a (possibly convert-wrapped)
+        dynamic-update-slice of its own result shape, the write is
+        in-place: charge the update size, not the whole buffer (decode
+        cache inserts write one token, not the 32k-token ring; the
+        scan-over-layers ys assembly updates one group's slice)."""
+        comp = self.computations.get(called)
+        if not comp:
+            return full_bytes
+        types = {i["name"]: i["type"] for i in comp}
+        full_elems = full_bytes  # compare by elements: converts change
+        for i in comp:           # dtype width but not the aliased buffer
+            if i["op"] != "dynamic-update-slice":
+                continue
+            names = self._operands(i)
+            if len(names) > 1 and names[1] in types:
+                upd_e, upd_b = _shape_elems_bytes(types[names[1]])
+                dus_e, _ = _shape_elems_bytes(i["type"])
+                if upd_e < dus_e:            # a genuine partial update
+                    return upd_b
+        return full_bytes
+
+    def _cond_trip(self, line: str) -> int:
+        cond = _COND_RE.search(line)
+        if not cond:
+            return 1
+        best = 1
+        for inst in self.computations.get(cond.group(1), []):
+            if inst["op"] == "constant" and "s32" in inst["type"]:
+                m = re.search(r"constant\((\d+)\)", inst["line"])
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    def entry_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Target: TPU v5e, 256 chips/pod (16x16).  Single-pod mesh is
+('data', 'model') = (16, 16); the multi-pod dry-run adds a leading
+'pod' axis: (2, 16, 16).  Defined as functions so importing this module
+never touches jax device state (jax locks the device count on first
+backend init — see launch/dryrun.py line 1-2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,55 @@
+"""Serving launcher: single-model engine or the multiplexed zoo server.
+
+Smoke scale (CPU):
+  python -m repro.launch.serve --arch olmo-1b --smoke --tokens 16
+Multiplexed LLM zoo (the paper's Fig. 2c at LM scale):
+  python -m repro.launch.serve --mux --small olmo-1b --large gemma2-27b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import transformer as tf
+from repro.serving.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.key(0)
+    params = tf.init_params(cfg, key)
+    params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params)
+    scfg = ServeConfig(max_len=args.prompt_len + args.tokens + 1,
+                       temperature=args.temperature)
+    engine = Engine(cfg, params, scfg)
+
+    shape = (args.batch, args.prompt_len)
+    if cfg.num_codebooks:
+        shape = shape + (cfg.num_codebooks,)
+    prompts = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    img = None
+    if cfg.num_image_tokens:
+        img = jax.random.normal(
+            key, (args.batch, cfg.num_image_tokens, cfg.d_model),
+            jnp.float32).astype(cfg.cdtype)
+    res = engine.generate(prompts, max_new_tokens=args.tokens,
+                          image_embeds=img)
+    print(f"generated {res['tokens'].shape} prefill={res['prefill_s']:.2f}s "
+          f"decode={res['decode_s']:.2f}s "
+          f"({res['tokens_per_s']:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Step builders + abstract input specs shared by dryrun/train/serve.
+
+Every step is a pure function suitable for jax.jit with explicit
+in/out shardings; ``input_specs`` returns ShapeDtypeStruct stand-ins so
+the dry-run lowers and compiles without allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+Params = Dict[str, Any]
+
+
+def kv_shardable(cfg: ModelConfig, model_size: int = 16) -> bool:
+    """Can the KV cache be sharded head-wise over the model axis?"""
+    if not cfg.uses_attention():
+        return True
+    if any(s.mixer == "mla" for s in cfg.pattern):
+        return False                      # MLA latent cache is MQA-like
+    return cfg.num_kv_heads % model_size == 0
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _tok_shape(cfg: ModelConfig, batch: int, seq: int) -> Tuple[int, ...]:
+    if cfg.num_codebooks:
+        return (batch, seq, cfg.num_codebooks)
+    return (batch, seq)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(_tok_shape(cfg, b, s), jnp.int32),
+    }
+    if cfg.num_image_tokens:
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, b, s), jnp.int32)}
+    if cfg.num_image_tokens:
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_inputs_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "token": jax.ShapeDtypeStruct(_tok_shape(cfg, b, 1), jnp.int32),
+        "caches": tf.abstract_caches(cfg, b, s),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    return decode_inputs_specs(cfg, shape)
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    params = tf.abstract_params(cfg, dtype=cfg.param_dtype)
+    opt_state = jax.eval_shape(functools.partial(adamw.init, opt_cfg), params)
+    return params, opt_state
+
+
+def abstract_serve_params(cfg: ModelConfig):
+    return tf.abstract_params(cfg, dtype="bfloat16")
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    m = max(cfg.microbatches, 1)
+
+    def loss_fn(p, mb):
+        cast = jax.tree.map(lambda x: x.astype(cfg.cdtype), p)
+        return tf.lm_loss(cast, cfg, mb)
+
+    def train_step(params, opt_state, batch):
+        if m == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # gradient accumulation: activation / dispatch memory ÷ m
+            assert batch["tokens"].shape[0] % m == 0
+            mbs = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def mb_step(acc, mb):
+                (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + l), met
+
+            zero_g = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (grads, loss), mets = jax.lax.scan(
+                mb_step, (zero_g, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss = loss / m
+            metrics = jax.tree.map(lambda x: x.mean(), mets)
+        params, opt_state, om = adamw.apply_updates(opt_cfg, params, grads,
+                                                    opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, cache_len: int):
+    def prefill_step(params, batch):
+        logits, caches = tf.prefill(params, cfg, batch["tokens"],
+                                    image_embeds=batch.get("image_embeds"),
+                                    cache_len=cache_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, caches, token, pos):
+        logits, caches = tf.decode_step(params, cfg, token, caches, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return decode_step

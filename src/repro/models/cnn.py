@@ -1,0 +1,182 @@
+"""Small CNN classifiers: the model zoo for the paper-faithful repro.
+
+The paper multiplexes 6 ImageNet CNNs (alexnet ... resnext101).  Offline
+we instantiate a zoo of 6 CNNs spanning ~two orders of magnitude of
+FLOPs on a procedurally-generated dataset with controllable hardness
+(repro.data.synthetic).  Every model exposes its pre-logits *embedding*
+(the paper's g_i) alongside logits, as required by the contrastive loss.
+
+Also defines the 4-conv-layer multiplexer backbone of §II (the paper's
+"very light-weight mobile-friendly CNN").
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _conv_init(key, k: int, cin: int, cout: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(k * k * cin)
+    return {
+        "w": (jax.random.truncated_normal(key, -2, 2, (k, k, cin, cout)) * scale).astype(dtype),
+        "b": jnp.zeros((cout,), dtype),
+    }
+
+
+def _conv(p: Params, x, stride: int = 1):
+    """x: (B,H,W,C) NHWC."""
+    out = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"].astype(x.dtype)
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def init_cnn(key, *, widths: Sequence[int], convs_per_stage: int = 1,
+             embed_dim: int = 64, num_classes: int = 10, in_ch: int = 3,
+             dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(widths) * convs_per_stage + 2)
+    stages: List[Params] = []
+    cin = in_ch
+    ki = 0
+    for w in widths:
+        for _ in range(convs_per_stage):
+            stages.append(_conv_init(keys[ki], 3, cin, w, dtype))
+            cin = w
+            ki += 1
+    return {
+        "stages": stages,
+        "proj": {
+            "w": (jax.random.truncated_normal(keys[-2], -2, 2, (cin, embed_dim))
+                  / math.sqrt(cin)).astype(dtype),
+            "b": jnp.zeros((embed_dim,), dtype),
+        },
+        "cls": {
+            "w": (jax.random.truncated_normal(keys[-1], -2, 2, (embed_dim, num_classes))
+                  / math.sqrt(embed_dim)).astype(dtype),
+            "b": jnp.zeros((num_classes,), dtype),
+        },
+    }
+
+
+def cnn_forward(params: Params, x, *, convs_per_stage: int = 1
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,H,W,C) -> (logits (B,classes), embedding (B,embed_dim))."""
+    h = x
+    for i, p in enumerate(params["stages"]):
+        h = jax.nn.relu(_conv(p, h))
+        if (i + 1) % convs_per_stage == 0:
+            h = _pool(h)
+    h = h.mean(axis=(1, 2))                                  # global avg pool
+    emb = jnp.tanh(h @ params["proj"]["w"].astype(h.dtype)
+                   + params["proj"]["b"].astype(h.dtype))
+    logits = emb @ params["cls"]["w"].astype(h.dtype) + params["cls"]["b"].astype(h.dtype)
+    return logits, emb
+
+
+def cnn_flops(*, widths: Sequence[int], convs_per_stage: int = 1,
+              image_size: int = 32, in_ch: int = 3, embed_dim: int = 64,
+              num_classes: int = 10) -> float:
+    """Analytical MACs*2 for one inference (the paper's cost c_i, Eq. 5)."""
+    flops = 0.0
+    hw = image_size
+    cin = in_ch
+    for w in widths:
+        for _ in range(convs_per_stage):
+            flops += 2.0 * hw * hw * 9 * cin * w
+            cin = w
+        hw //= 2
+    flops += 2.0 * cin * embed_dim + 2.0 * embed_dim * num_classes
+    return flops
+
+
+# ---------------------------------------------------------------------------
+# The default 6-model zoo (≈ alexnet ... resnext101 FLOPs spread, scaled down)
+# ---------------------------------------------------------------------------
+
+ZOO_SPECS: Dict[str, Dict[str, Any]] = {
+    # name -> arch hyperparams; FLOPs grow ~ 2-4x per step, ~130x end-to-end
+    "zoo_xxs": dict(widths=(8, 16), convs_per_stage=1, embed_dim=32),
+    "zoo_xs": dict(widths=(16, 32), convs_per_stage=1, embed_dim=48),
+    "zoo_s": dict(widths=(24, 48, 96), convs_per_stage=1, embed_dim=64),
+    "zoo_m": dict(widths=(32, 64, 128), convs_per_stage=2, embed_dim=96),
+    "zoo_l": dict(widths=(48, 96, 192), convs_per_stage=2, embed_dim=128),
+    "zoo_xl": dict(widths=(64, 128, 256), convs_per_stage=3, embed_dim=160),
+}
+
+
+def init_zoo(key, *, num_classes: int = 10, in_ch: int = 3,
+             names: Sequence[str] = tuple(ZOO_SPECS)) -> Dict[str, Params]:
+    keys = jax.random.split(key, len(names))
+    return {n: init_cnn(k, num_classes=num_classes, in_ch=in_ch,
+                        **{kk: v for kk, v in ZOO_SPECS[n].items()})
+            for n, k in zip(names, keys)}
+
+
+def zoo_forward(zoo_params: Dict[str, Params], x):
+    """Run every zoo member.  Returns {name: (logits, embedding)}."""
+    return {n: cnn_forward(p, x, convs_per_stage=ZOO_SPECS[n].get("convs_per_stage", 1))
+            for n, p in zoo_params.items()}
+
+
+def zoo_costs(names: Sequence[str] = tuple(ZOO_SPECS), *, image_size: int = 32,
+              num_classes: int = 10) -> Dict[str, float]:
+    return {n: cnn_flops(image_size=image_size, num_classes=num_classes,
+                         **{k: v for k, v in ZOO_SPECS[n].items()})
+            for n in names}
+
+
+# ---------------------------------------------------------------------------
+# Multiplexer backbone: the paper's 4-conv lightweight CNN (§II, §III.B)
+# ---------------------------------------------------------------------------
+
+MUX_WIDTHS = (8, 16, 24, 32)
+
+
+def init_mux_backbone(key, *, meta_dim: int = 64, in_ch: int = 3,
+                      dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 5)
+    stages = []
+    cin = in_ch
+    for i, w in enumerate(MUX_WIDTHS):
+        stages.append(_conv_init(keys[i], 3, cin, w, dtype))
+        cin = w
+    return {
+        "stages": stages,
+        "proj": {
+            "w": (jax.random.truncated_normal(keys[-1], -2, 2, (cin, meta_dim))
+                  / math.sqrt(cin)).astype(dtype),
+            "b": jnp.zeros((meta_dim,), dtype),
+        },
+    }
+
+
+def mux_backbone_forward(params: Params, x) -> jnp.ndarray:
+    """x (B,H,W,C) -> meta-features m(x) (B, meta_dim)   [paper's m_j]."""
+    h = x
+    for p in params["stages"]:
+        h = jax.nn.relu(_conv(p, h))
+        h = _pool(h)
+    h = h.mean(axis=(1, 2))
+    return jnp.tanh(h @ params["proj"]["w"].astype(h.dtype)
+                    + params["proj"]["b"].astype(h.dtype))
+
+
+def mux_flops(*, image_size: int = 32, meta_dim: int = 64, in_ch: int = 3) -> float:
+    flops = 0.0
+    hw = image_size
+    cin = in_ch
+    for w in MUX_WIDTHS:
+        flops += 2.0 * hw * hw * 9 * cin * w
+        cin = w
+        hw //= 2
+    return flops + 2.0 * cin * meta_dim

@@ -1,0 +1,156 @@
+"""Core neural-net building blocks shared by every architecture.
+
+Everything is written as pure functions over explicit parameter pytrees
+(plain nested dicts of jnp arrays) so that the same code path serves
+training (fp32 master params, bf16 compute), serving (bf16 params) and
+AOT dry-run lowering (ShapeDtypeStruct params via jax.eval_shape).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (the standard LM init)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight=None, *, eps: float = 1e-6, plus_one: bool = False):
+    """RMSNorm.  ``plus_one`` follows gemma's (1 + w) parameterisation."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        w = weight.astype(jnp.float32)
+        x = x * (1.0 + w) if plus_one else x * w
+    return x.astype(dtype)
+
+
+def layer_norm(x, weight=None, bias=None, *, eps: float = 1e-5):
+    """LayerNorm; with weight=bias=None this is OLMo's non-parametric LN."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def init_norm(key, dim: int, kind: str, dtype=jnp.float32) -> Params:
+    del key
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((dim,), dtype)}
+    if kind == "rmsnorm_zero":          # gemma (1+w) parameterisation
+        return {"w": jnp.zeros((dim,), dtype)}
+    if kind == "layernorm":
+        return {"w": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+    if kind == "nonparametric_ln":      # OLMo
+        return {}
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def apply_norm(params: Params, x, kind: str, eps: float = 1e-6):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["w"], eps=eps, plus_one=False)
+    if kind == "rmsnorm_zero":
+        return rms_norm(x, params["w"], eps=eps, plus_one=True)
+    if kind == "layernorm":
+        return layer_norm(x, params["w"], params["b"], eps=eps)
+    if kind == "nonparametric_ln":
+        return layer_norm(x, None, None, eps=eps)
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, *, theta: float = 10_000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, dim: int):
+    """MusicGen-style sinusoidal position embeddings. positions: (...,) ."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, *, gated: bool, act: str,
+             dtype=jnp.float32, out_scale: Optional[float] = None) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"up": dense_init(ks[0], d_model, d_ff, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[1], d_model, d_ff, dtype)
+    p["down"] = dense_init(ks[2], d_ff, d_model, dtype, scale=out_scale)
+    del act
+    return p
+
+
+def apply_mlp(params: Params, x, *, gated: bool, act: str):
+    up = x @ params["up"].astype(x.dtype)
+    if gated:
+        gate = x @ params["gate"].astype(x.dtype)
+        h = _activation(gate, act) * up
+    else:
+        h = _activation(up, act)
+    return h @ params["down"].astype(x.dtype)
+
+
+def _activation(x, act: str):
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "gelu_tanh":
+        return jax.nn.gelu(x, approximate=True)
+    if act == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping."""
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,166 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba mamba layers).
+
+Train/prefill: chunked selective scan — an outer ``lax.scan`` over
+sequence chunks carrying the SSM state, with the in-chunk recurrence
+expressed as a first-order associative scan (TPU-friendly; mirrors the
+Pallas ``selective_scan`` kernel's grid structure).
+
+Decode: O(1) single-token state update.
+
+State cache per layer: {"conv": (B, d_conv-1, d_inner) trailing inputs,
+                        "h": (B, d_inner, ssm_state)}.
+Sharding: d_inner -> 'model' (column-parallel in_proj, row-parallel
+out_proj); the scan itself is embarrassingly parallel across d_inner.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding.partition import shard
+
+Params = Dict[str, Any]
+
+
+def init_mamba(key, *, d_model: int, d_inner: int, ssm_state: int, d_conv: int,
+               dt_rank: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    dt_init = jnp.exp(jax.random.uniform(ks[4], (d_inner,)) * 5.0 - 5.0)  # ~ [1e-3, 1e-1] ... softplus^-1 below
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * ssm_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ssm_state + 1, dtype=jnp.float32),
+                                          (d_inner, ssm_state))).astype(jnp.float32),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d_model, dtype),
+    }
+
+
+def init_mamba_cache(batch: int, *, d_inner: int, ssm_state: int, d_conv: int,
+                     dtype=jnp.bfloat16) -> Params:
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        "h": jnp.zeros((batch, d_inner, ssm_state), jnp.float32),
+    }
+
+
+def _ssm_inputs(params: Params, x_conv, *, dt_rank: int, ssm_state: int,
+                norm_bc_dt: bool):
+    """x_conv (B,S,d_in) -> dt (B,S,d_in), B_ (B,S,n), C (B,S,n) in fp32."""
+    dbc = x_conv @ params["x_proj"].astype(x_conv.dtype)
+    dt_r = dbc[..., :dt_rank]
+    b_mat = dbc[..., dt_rank:dt_rank + ssm_state].astype(jnp.float32)
+    c_mat = dbc[..., dt_rank + ssm_state:].astype(jnp.float32)
+    if norm_bc_dt:  # falcon-mamba stabilisation: weight-free RMSNorm on dt/B/C
+        dt_r = rms_norm(dt_r, None)
+        b_mat = rms_norm(b_mat, None)
+        c_mat = rms_norm(c_mat, None)
+    dt = dt_r @ params["dt_proj"].astype(x_conv.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    return dt, b_mat, c_mat
+
+
+def _causal_conv(params: Params, x, prev: Optional[jnp.ndarray]):
+    """Depthwise causal conv over seq.  x (B,S,d_in); prev (B,d_conv-1,d_in)."""
+    d_conv = params["conv_w"].shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(d_conv))
+    return out + params["conv_b"].astype(x.dtype), xp[:, -(d_conv - 1):]
+
+
+def mamba_forward(params: Params, x, *, d_inner: int, ssm_state: int,
+                  d_conv: int, dt_rank: int, norm_bc_dt: bool = False,
+                  chunk: int = 256, cache: Params = None,
+                  inner_remat: bool = False
+                  ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Full-sequence forward.  x: (B,S,D).  Returns (out, new_cache)."""
+    b, s, _ = x.shape
+    xz = x @ params["in_proj"].astype(x.dtype)
+    x_in, z = xz[..., :d_inner], xz[..., d_inner:]
+    x_in = shard(x_in, "batch", None, "d_inner")
+    x_conv, conv_tail = _causal_conv(params, x_in, None if cache is None else cache["conv"])
+    x_conv = jax.nn.silu(x_conv)
+    dt, b_mat, c_mat = _ssm_inputs(params, x_conv, dt_rank=dt_rank,
+                                   ssm_state=ssm_state, norm_bc_dt=norm_bc_dt)
+    a_mat = -jnp.exp(params["A_log"].astype(jnp.float32))          # (d_in, n)
+    xf = x_conv.astype(jnp.float32)
+
+    # chunked scan: pad S to a multiple of `chunk`
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_step(h0, inp):
+        dt_c, b_c, c_c, x_c = inp                                   # (B,chunk,...)
+        decay = jnp.exp(dt_c[..., None] * a_mat[None, None])        # (B,C,d_in,n)
+        inc = (dt_c * x_c)[..., None] * b_c[:, :, None, :]          # (B,C,d_in,n)
+
+        def combine(e1, e2):
+            a1, u1 = e1
+            a2, u2 = e2
+            return a1 * a2, u1 * a2 + u2
+
+        dec_s, inc_s = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+        h = dec_s * h0[:, None] + inc_s                             # (B,C,d_in,n)
+        y = jnp.einsum("bcdn,bcn->bcd", h, c_c)
+        return h[:, -1], y
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((b, d_inner, ssm_state), jnp.float32))
+    resh = lambda t: t.reshape(b, nchunks, chunk, -1).transpose(1, 0, 2, 3)
+    if inner_remat:
+        # backward stores only the (B, d_inner, n) chunk carries and
+        # recomputes the (B, chunk, d_inner, n) decay/increment tensors —
+        # the dominant train-memory term for mamba/hybrid archs (§Perf)
+        chunk_step = jax.checkpoint(chunk_step)
+    h_last, ys = jax.lax.scan(chunk_step, h0,
+                              (resh(dt), resh(b_mat), resh(c_mat), resh(xf)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nchunks * chunk, d_inner)[:, :s]
+    y = y + xf[:, :s] * params["D"].astype(jnp.float32)[None, None]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_tail.astype(cache["conv"].dtype), "h": h_last}
+    return out, new_cache
+
+
+def mamba_decode(params: Params, x, cache: Params, *, d_inner: int,
+                 ssm_state: int, d_conv: int, dt_rank: int,
+                 norm_bc_dt: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """Single-token step.  x: (B,1,D)."""
+    b = x.shape[0]
+    xz = x @ params["in_proj"].astype(x.dtype)
+    x_in, z = xz[..., :d_inner], xz[..., d_inner:]
+    # conv over the cached tail + current token
+    xp = jnp.concatenate([cache["conv"].astype(x.dtype), x_in], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    x_conv = (xp * w[None]).sum(axis=1, keepdims=True) + params["conv_b"].astype(x.dtype)
+    x_conv = jax.nn.silu(x_conv)
+    dt, b_mat, c_mat = _ssm_inputs(params, x_conv, dt_rank=dt_rank,
+                                   ssm_state=ssm_state, norm_bc_dt=norm_bc_dt)
+    a_mat = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xf = x_conv.astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0, :, None] * a_mat[None])                # (B,d_in,n)
+    h = decay * cache["h"] + (dt[:, 0] * xf[:, 0])[..., None] * b_mat[:, 0, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None]
+    y = y + xf * params["D"].astype(jnp.float32)[None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(x.dtype)
+    new_cache = {"conv": xp[:, 1:].astype(cache["conv"].dtype), "h": h}
+    return out, new_cache

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts FFN with grouped, capacity-bounded sort dispatch.
+
+GShard-style grouping: each batch element is a dispatch group, so every
+sort/scatter is *local to a group* and vmapped over the batch — under
+pjit the batch axis stays sharded on 'data' end-to-end (a global argsort
+over all tokens would force XLA to replicate million-token buffers).
+The group->expert transpose (B,E,C,d) -> (E,B,C,d) is the MoE
+all-to-all: expert weights shard over 'data' (expert parallelism) with
+the expert FFN dim over 'model'.
+
+Capacity is per (group, expert): C = ceil(cf * S * k / E) — the GShard
+convention.  ``dropless=True`` (decode) sizes C at the worst case so no
+assignment is ever dropped.
+
+Covers: olmoe (64e top-8, softmax-then-topk), jamba (16e top-2),
+llama4-maverick (128e top-1, sigmoid router + shared expert).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _activation, apply_mlp, dense_init, init_mlp
+from repro.sharding.partition import shard
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, *, d_model: int, num_experts: int, moe_d_ff: int,
+             shared_d_ff: Optional[int] = None, gated: bool = True,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = num_experts, d_model, moe_d_ff
+
+    def stack_init(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, dtype))(
+            jax.random.split(k, e))
+
+    p: Params = {
+        "router": dense_init(ks[0], d, e, dtype),
+        "up": stack_init(ks[1], d, f),
+        "down": stack_init(ks[2], f, d),
+    }
+    if gated:
+        p["gate"] = stack_init(ks[3], d, f)
+    if shared_d_ff:
+        p["shared"] = init_mlp(ks[4], d, shared_d_ff, gated=True, act="silu",
+                               dtype=dtype)
+    return p
+
+
+def route(params: Params, x, *, num_experts: int, top_k: int,
+          router_act: str) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (weights (B,S,k), expert_idx (B,S,k), aux scalar)."""
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    if router_act == "softmax_topk":        # olmoe: softmax over all, then top-k
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, top_k)
+    elif router_act == "topk_softmax":      # jamba/mixtral: top-k then renorm
+        top_logits, idx = jax.lax.top_k(logits, top_k)
+        w = jax.nn.softmax(top_logits, axis=-1)
+        probs = jax.nn.softmax(logits, axis=-1)
+    elif router_act == "sigmoid":           # llama4: sigmoid on the top-1
+        top_logits, idx = jax.lax.top_k(logits, top_k)
+        w = jax.nn.sigmoid(top_logits)
+        probs = jax.nn.softmax(logits, axis=-1)
+    else:
+        raise ValueError(router_act)
+    # Switch-style load-balance auxiliary loss
+    t = x.shape[0] * x.shape[1]
+    density = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    density = density / (t * top_k)
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = num_experts * jnp.sum(density * mean_prob)
+    return w.astype(x.dtype), idx, aux
+
+
+def moe_ffn(params: Params, x, *, num_experts: int, top_k: int,
+            router_act: str = "softmax_topk", capacity_factor: float = 1.25,
+            act: str = "silu", gated: bool = True, dropless: bool = False,
+            group_tokens: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d).  Returns (out (B,S,d), aux_loss).
+
+    ``group_tokens`` splits each sequence into dispatch groups of that
+    many tokens (GShard-style).  When the group size divides the
+    per-shard sequence length, the routing sort/gather stays local to
+    the sequence-parallel shard — without it the dispatch all-gathers
+    the full (B, S*k, d) token buffer across the model axis (§Perf,
+    found on jamba/olmoe train_4k).
+
+    Gather-only dispatch: every data movement is a take_along_axis
+    (batched gather) whose leading batch dim XLA SPMD partitions —
+    vmapped fancy-indexing or scatters flatten the batch into global
+    indices and force full replication of million-token buffers (20 GiB
+    per layer at llama4-maverick train scale; found the hard way, see
+    EXPERIMENTS.md §Perf).  Only the int32 routing plan uses a vmapped
+    searchsorted (negligible bytes).
+    """
+    b, s, d = x.shape
+    if group_tokens and s > group_tokens and s % group_tokens == 0:
+        # NOTE: no explicit sharding constraint on the grouped dim —
+        # measured on olmoe train_4k, pinning it to
+        # (pod, data, model) forced extra resharding (+12% collective);
+        # propagation from the residual stream does better (§Perf iter2,
+        # refuted hypothesis).
+        g = s // group_tokens
+        out, aux = moe_ffn(params, x.reshape(b * g, group_tokens, d),
+                           num_experts=num_experts, top_k=top_k,
+                           router_act=router_act,
+                           capacity_factor=capacity_factor, act=act,
+                           gated=gated, dropless=dropless)
+        return out.reshape(b, s, d), aux
+
+    e, k = num_experts, top_k
+    w, idx, aux = route(params, x, num_experts=e, top_k=k,
+                        router_act=router_act)
+
+    if dropless:
+        # worst case: every token in the group picks the same expert
+        cap = s if s > 1 else 1
+    else:
+        cap = max(1, int(capacity_factor * s * k / e))
+
+    # ---- routing plan (int32 only; B stays sharded, bytes negligible) --
+    idx_flat = idx.reshape(b, s * k)
+    order = jnp.argsort(idx_flat, axis=-1)                    # (B, S*k)
+    sorted_e = jnp.take_along_axis(idx_flat, order, axis=-1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(
+        se, jnp.arange(e), side="left"))(sorted_e)            # (B, E)
+    ends = jax.vmap(lambda se: jnp.searchsorted(
+        se, jnp.arange(e), side="right"))(sorted_e)           # (B, E)
+    pos_in_e = jnp.arange(s * k)[None] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1)                            # (B, S*k)
+    kept = pos_in_e < cap
+
+    # ---- dispatch: tokens (sorted by expert) -> (B, E, C, d) buckets ---
+    x_rep = jnp.broadcast_to(x[:, :, None, :], (b, s, k, d)).reshape(b, s * k, d)
+    xs = jnp.take_along_axis(x_rep, order[..., None], axis=1)  # (B,S*k,d)
+    gidx = starts[:, :, None] + jnp.arange(cap)[None, None]    # (B, E, C)
+    valid = gidx < ends[:, :, None]
+    gflat = jnp.clip(gidx, 0, s * k - 1).reshape(b, e * cap)
+    buf = jnp.take_along_axis(xs, gflat[..., None], axis=1)    # (B,E*C,d)
+    buf = buf.reshape(b, e, cap, d) * valid[..., None].astype(x.dtype)
+    # no batch constraint here: in grouped mode dim 0 is (batch x seq
+    # shards) and pinning it to 'data' would force a reshard
+
+    # ---- group -> expert transpose: THE all-to-all ----------------------
+    bufT = buf.transpose(1, 0, 2, 3)                          # (E, B, C, d)
+    bufT = shard(bufT, "experts", None, None, None)
+
+    # ---- expert compute (expert-parallel over 'data', ff over 'model') --
+    up = jnp.einsum("ebcd,edf->ebcf", bufT, params["up"].astype(x.dtype))
+    if gated:
+        gate = jnp.einsum("ebcd,edf->ebcf", bufT,
+                          params["gate"].astype(x.dtype))
+        h = _activation(gate, act) * up
+    else:
+        h = _activation(up, act)
+    h = shard(h, "experts", None, None, "expert_mlp")
+    out_e = jnp.einsum("ebcf,efd->ebcd", h, params["down"].astype(x.dtype))
+
+    # ---- expert -> group transpose (the return all-to-all) --------------
+    out_g = out_e.transpose(1, 0, 2, 3)                       # (B, E, C, d)
+    out_flat = out_g.reshape(b, e * cap, d)
+
+    # ---- combine: bucket -> sorted entry -> unsort -> sum over k -------
+    bucket_of = sorted_e * cap + jnp.minimum(pos_in_e, cap - 1)  # (B, S*k)
+    outs = jnp.take_along_axis(out_flat, bucket_of[..., None], axis=1)
+    outs = outs * kept[..., None].astype(x.dtype)
+    ws = jnp.take_along_axis(w.reshape(b, s * k), order, axis=-1)
+    outs = outs * ws[..., None].astype(x.dtype)
+    inv = jnp.argsort(order, axis=-1)
+    out = jnp.take_along_axis(outs, inv[..., None], axis=1)    # (B,S*k,d)
+    out = out.reshape(b, s, k, d).sum(axis=2)
+
+    if "shared" in params:
+        out = out + apply_mlp(params["shared"], x, gated=True, act=act)
+    return out, aux

@@ -1,0 +1,83 @@
+"""Batched serving engine: prefill + decode with ring-buffer KV caches.
+
+One engine serves one model.  The multiplexed front-end (the paper's
+contribution) lives in repro.serving.mux_server and composes N engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.sharding.partition import axis_rules
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256                  # cache capacity
+    temperature: float = 0.0            # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    """jit-compiled prefill/decode for a fixed batch shape."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig,
+                 rules=None):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.rules = rules
+
+        def prefill_fn(p, tokens, image_embeds):
+            return tf.prefill(p, cfg, tokens, image_embeds=image_embeds,
+                              cache_len=scfg.max_len)
+
+        def decode_fn(p, token, caches, pos):
+            return tf.decode_step(p, cfg, token, caches, pos)
+
+        ctx = axis_rules(rules) if rules is not None else None
+        if ctx:
+            with ctx:
+                self._prefill = jax.jit(prefill_fn)
+                self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+        else:
+            self._prefill = jax.jit(prefill_fn)
+            self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: jnp.ndarray, *, max_new_tokens: int,
+                 image_embeds: Optional[jnp.ndarray] = None) -> Dict[str, Any]:
+        """prompts: (B, P) int32 (or (B, P, K) multi-codebook).
+
+        Returns {tokens (B, P+N), prefill_s, decode_s, tokens_per_s}.
+        """
+        b, p = prompts.shape[:2]
+        assert p + max_new_tokens <= self.scfg.max_len, "cache too small"
+        key = jax.random.key(self.scfg.seed)
+        t0 = time.time()
+        logits, caches = self._prefill(self.params, prompts, image_embeds)
+        tok = self._sample(logits[:, 0], key)      # (B,) or (B, K)
+        jax.block_until_ready(tok)
+        t1 = time.time()
+        out = [prompts, tok.reshape((b, 1) + prompts.shape[2:])]
+        for i in range(max_new_tokens - 1):
+            key = jax.random.fold_in(key, i)
+            logits, caches = self._decode(self.params, out[-1], caches, p + i)
+            nxt = self._sample(logits[:, 0], key)
+            out.append(nxt.reshape((b, 1) + prompts.shape[2:]))
+        jax.block_until_ready(out[-1])
+        t2 = time.time()
+        tokens = jnp.concatenate(out, axis=1)
+        return {"tokens": tokens, "prefill_s": t1 - t0, "decode_s": t2 - t1,
+                "tokens_per_s": b * max_new_tokens / max(t2 - t1, 1e-9)}

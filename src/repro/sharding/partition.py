@@ -1,0 +1,144 @@
+"""Logical-axis sharding.
+
+Models annotate activations with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``).  A launcher installs a rules
+mapping logical-name -> mesh-axis (or None) for the duration of a step
+build; with no rules installed every annotation is a no-op, so the same
+model code runs on a laptop CPU and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxis = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, MeshAxis]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Dict[str, MeshAxis]]):
+    """Install logical->mesh axis rules for the enclosed step construction."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    rules: Optional[Dict[str, MeshAxis]] = None) -> P:
+    rules = rules if rules is not None else current_rules()
+    if rules is None:
+        return P()
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard(x, *axes: Optional[str]):
+    """Annotate ``x`` with logical axes; no-op when no rules are installed."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Default rule sets
+# ---------------------------------------------------------------------------
+
+def train_rules(kv_heads_shardable: bool = True,
+                fsdp: bool = False) -> Dict[str, MeshAxis]:
+    """Megatron-style TP on 'model' + DP on 'data' (+ 'pod' folded into
+    data).  The residual stream is additionally sequence-parallel over
+    'model' (Megatron-SP): norms/residual adds run on seq shards and XLA
+    inserts the all-gather / reduce-scatter pair around each matmul —
+    this is what keeps the scan-over-layers backward carries (one
+    (B, S, D) residual per group) inside HBM for the 27B+ configs.
+
+    MoE weights are expert-parallel: the expert dim shards over 'data'
+    (tokens reach their expert via the dispatch all-to-all) and the
+    expert FFN dim over 'model' — so a 128-expert 400B MoE spreads over
+    all 256 chips instead of 16.
+
+    ``fsdp=True`` additionally shards the *input* dim of every 2D weight
+    over 'data' (ZeRO-3 style), required for >~20B dense train states on
+    a 16-way TP slice; XLA inserts the per-layer weight all-gathers.
+    """
+    return {
+        "batch": ("pod", "data"),
+        "seq": "model",
+        "embed": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model" if kv_heads_shardable else None,
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "data",
+        "expert_mlp": "model",
+        "fsdp": ("pod", "data") if fsdp else None,
+        # grouped MoE dispatch: dim 0 = (batch shards x seq shards)
+        "moe_groups": ("pod", "data", "model"),
+        "d_inner": "model",
+        "ssm_state": None,
+        "cache_seq": None,
+        "image_tokens": None,
+        "latent": None,
+    }
+
+
+def prefill_rules(kv_heads_shardable: bool = True) -> Dict[str, MeshAxis]:
+    """Prefill: no backward pass -> no need for sequence-parallel
+    residuals; keep seq whole for the attention kernels.  bf16 serving
+    weights fit the TP slice (+ expert parallelism), so no FSDP."""
+    rules = train_rules(kv_heads_shardable, fsdp=False)
+    rules["seq"] = None
+    return rules
+
+
+def decode_rules(kv_heads_shardable: bool, batch_shardable: bool
+                 ) -> Dict[str, MeshAxis]:
+    """Decode-time rules.
+
+    * kv heads cover the model axis -> cache sharded (batch, kv_heads).
+    * kv heads too few (GQA kv<16, MLA latent) -> cache sharded along
+      *sequence*; XLA turns the softmax/contraction reductions into the
+      flash-decode LSE-combine all-reduces.
+    * batch too small to cover 'data' (long_500k, B=1) -> everything
+      hangs off the sequence axis, sharded over all mesh axes.
+    """
+    rules = train_rules(kv_heads_shardable)
+    rules["seq"] = None
+    if batch_shardable:
+        if not kv_heads_shardable:
+            rules["cache_seq"] = "model"
+            rules["kv_heads"] = None
+    else:
+        rules["batch"] = None
+        rules["cache_seq"] = ("pod", "data", "model")
+        rules["kv_heads"] = None
+    return rules
+
+
+def resolve(rules: Dict[str, MeshAxis], mesh) -> Dict[str, MeshAxis]:
+    """Drop mesh axes that do not exist on ``mesh`` (e.g. 'pod' on 1-pod)."""
+    names = set(mesh.axis_names)
+
+    def fix(v: MeshAxis) -> MeshAxis:
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in names else None
+        kept = tuple(a for a in v if a in names)
+        return kept if kept else None
+
+    return {k: fix(v) for k, v in rules.items()}

@@ -1,0 +1,113 @@
+"""LM pretraining loop: jit'd train step + data + checkpoints + metrics.
+
+Works at every scale this repo targets: reduced configs on 1 CPU device
+(smoke tests / examples) and the production mesh via the same
+logical-axis rules the dry-run uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import lm_batch
+from repro.launch import steps as steps_mod
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.sharding.partition import axis_rules, train_rules, resolve
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 128
+    log_every: int = 10
+    ckpt_every: int = 0               # 0 = only final
+    ckpt_dir: str = ""
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None, mesh=None,
+                 rules=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            lr=3e-4, warmup_steps=min(20, tcfg.steps // 5 + 1),
+            total_steps=tcfg.steps)
+        self.mesh = mesh
+        self.rules = rules if rules is not None else (
+            resolve(train_rules(), mesh) if mesh is not None else None)
+        step_fn = steps_mod.make_train_step(cfg, self.opt_cfg)
+
+        def build():
+            return jax.jit(step_fn, donate_argnums=(0, 1))
+
+        if self.rules is not None:
+            with axis_rules(self.rules):
+                self._step = build()
+        else:
+            self._step = build()
+
+    def init_state(self, key):
+        params = tf.init_params(self.cfg, key)
+        opt_state = adamw.init(self.opt_cfg, params)
+        return params, opt_state
+
+    def data_iter(self, key) -> Iterator[Dict[str, jnp.ndarray]]:
+        i = 0
+        while True:
+            k = jax.random.fold_in(key, i)
+            batch = lm_batch(key=k, batch=self.tcfg.batch_size,
+                             seq_len=self.tcfg.seq_len,
+                             vocab_size=self.cfg.vocab_size)
+            if self.cfg.num_codebooks:
+                kc = jax.random.fold_in(k, 999)
+                toks = jax.random.randint(
+                    kc, (self.tcfg.batch_size, self.tcfg.seq_len,
+                         self.cfg.num_codebooks), 0, self.cfg.vocab_size)
+                labels = jnp.roll(toks, -1, axis=1)
+                batch = {"tokens": toks, "labels": labels}
+            if self.cfg.num_image_tokens:
+                ki = jax.random.fold_in(k, 998)
+                batch["image_embeds"] = jax.random.normal(
+                    ki, (self.tcfg.batch_size, self.cfg.num_image_tokens,
+                         self.cfg.d_model), jnp.float32).astype(self.cfg.cdtype)
+            yield batch
+            i += 1
+
+    def run(self, *, verbose: bool = True) -> Dict[str, Any]:
+        key = jax.random.key(self.tcfg.seed)
+        kp, kd = jax.random.split(key)
+        params, opt_state = self.init_state(kp)
+        history = []
+        t0 = time.time()
+        it = self.data_iter(kd)
+        ctx = axis_rules(self.rules) if self.rules is not None else None
+        for step in range(self.tcfg.steps):
+            batch = next(it)
+            params, opt_state, metrics = self._step(params, opt_state, batch)
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append({"step": step, **m})
+                if verbose:
+                    print(f"step {step:5d} loss={m['loss']:.4f} "
+                          f"grad_norm={m['grad_norm']:.3f}", flush=True)
+            if (self.tcfg.ckpt_every and self.tcfg.ckpt_dir
+                    and step and step % self.tcfg.ckpt_every == 0):
+                ckpt.save(f"{self.tcfg.ckpt_dir}/step_{step}.npz", params,
+                          step=step)
+        if self.tcfg.ckpt_dir:
+            ckpt.save(f"{self.tcfg.ckpt_dir}/step_{self.tcfg.steps}.npz",
+                      params, step=self.tcfg.steps)
+        wall = time.time() - t0
+        return {"params": params, "opt_state": opt_state,
+                "history": history, "wall_s": wall,
+                "final_loss": history[-1]["loss"] if history else None}

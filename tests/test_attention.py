@@ -1,0 +1,114 @@
+"""Blocked/banded jnp attention + ring-cache decode unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import flash_attention_ref
+from repro.models.attention import (attention_span, blocked_attention,
+                                    cache_insert, cache_prefill,
+                                    decode_attention, init_kv_cache)
+
+KEY = jax.random.key(7)
+
+
+@pytest.mark.parametrize("window,chunk", [(None, None), (48, None), (None, 40)])
+def test_blocked_matches_ref(window, chunk):
+    b, s, h, k, hd = 2, 130, 4, 2, 32
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (b, s, h, hd))
+    km = jax.random.normal(kk, (b, s, k, hd))
+    v = jax.random.normal(kv, (b, s, k, hd))
+    out = blocked_attention(q, km, v, causal=True, window=window, chunk=chunk,
+                            kv_block=32, q_block=32)
+    want = flash_attention_ref(q, km, v, causal=True, window=window,
+                               chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("window,chunk", [(None, None), (16, None), (None, 12)])
+def test_ring_cache_decode_matches_ref(window, chunk):
+    """Prefill P tokens then decode one-by-one; compare vs full attention."""
+    b, s, h, k, hd = 1, 40, 4, 2, 16
+    p = 24
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (b, s, h, hd))
+    km = jax.random.normal(kk, (b, s, k, hd))
+    v = jax.random.normal(kv, (b, s, k, hd))
+    want = flash_attention_ref(q, km, v, causal=True, window=window,
+                               chunk=chunk)
+    kind = "swa" if window else ("chunked" if chunk else "full")
+    cap = attention_span(kind, s, window=window, chunk=chunk)
+    cache = init_kv_cache(b, cap, k, hd, dtype=jnp.float32)
+    cache = cache_prefill(cache, km[:, :p], v[:, :p], start=0)
+    for pos in range(p, s):
+        cache = cache_insert(cache, km[:, pos:pos + 1], v[:, pos:pos + 1], pos)
+        out = decode_attention(q[:, pos:pos + 1], cache, pos, window=window,
+                               chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(want[:, pos]), atol=2e-5,
+                                   err_msg=f"pos={pos}")
+
+
+def test_ring_overwrite_semantics():
+    """Ring with capacity < seq keeps exactly the last `cap` positions."""
+    b, k, hd, cap = 1, 1, 4, 8
+    cache = init_kv_cache(b, cap, k, hd, dtype=jnp.float32)
+    for pos in range(20):
+        val = jnp.full((b, 1, k, hd), float(pos))
+        cache = cache_insert(cache, val, val, pos)
+    pos_set = set(np.asarray(cache["pos"]).tolist())
+    assert pos_set == set(range(12, 20))
+
+
+def test_cache_prefill_longer_than_capacity():
+    b, k, hd, cap, s = 1, 2, 4, 8, 20
+    km = jnp.arange(s, dtype=jnp.float32)[None, :, None, None] * jnp.ones((b, s, k, hd))
+    cache = init_kv_cache(b, cap, k, hd, dtype=jnp.float32)
+    cache = cache_prefill(cache, km, km, start=0)
+    assert set(np.asarray(cache["pos"]).tolist()) == set(range(12, 20))
+
+
+def test_attention_span():
+    assert attention_span("full", 1000) == 1000
+    assert attention_span("swa", 1000, window=128) == 128
+    assert attention_span("chunked", 1000, chunk=256) == 256
+    assert attention_span("swa", 64, window=128) == 64
+
+
+def test_int8_cache_roundtrip():
+    """Quantized ring cache: insert/prefill then dequantized read stays
+    within int8 quantisation error of the bf16 cache."""
+    b, s, k, hd, cap = 1, 24, 2, 16, 24
+    kk = jax.random.normal(KEY, (b, s, k, hd))
+    vv = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, k, hd))
+    c8 = init_kv_cache(b, cap, k, hd, dtype=jnp.int8)
+    cf = init_kv_cache(b, cap, k, hd, dtype=jnp.float32)
+    c8 = cache_prefill(c8, kk[:, :16], vv[:, :16], start=0)
+    cf = cache_prefill(cf, kk[:, :16], vv[:, :16], start=0)
+    for pos in range(16, s):
+        c8 = cache_insert(c8, kk[:, pos:pos + 1], vv[:, pos:pos + 1], pos)
+        cf = cache_insert(cf, kk[:, pos:pos + 1], vv[:, pos:pos + 1], pos)
+    from repro.models.attention import _dequant_kv
+    k8, v8 = _dequant_kv(c8)
+    np.testing.assert_allclose(np.asarray(k8, np.float32),
+                               np.asarray(cf["k"]), atol=0.05)
+    np.testing.assert_allclose(np.asarray(v8, np.float32),
+                               np.asarray(cf["v"]), atol=0.05)
+    np.testing.assert_array_equal(np.asarray(c8["pos"]), np.asarray(cf["pos"]))
+
+
+def test_int8_decode_attention_close_to_fp():
+    b, s, h, k, hd = 1, 32, 4, 2, 16
+    kq = jax.random.fold_in(KEY, 7)
+    q = jax.random.normal(kq, (b, 1, h, hd))
+    kk = jax.random.normal(jax.random.fold_in(KEY, 8), (b, s, k, hd))
+    vv = jax.random.normal(jax.random.fold_in(KEY, 9), (b, s, k, hd))
+    outs = {}
+    for dt in (jnp.float32, jnp.int8):
+        c = init_kv_cache(b, s, k, hd, dtype=dt)
+        c = cache_prefill(c, kk, vv, start=0)
+        outs[dt] = decode_attention(q, c, s - 1)
+    np.testing.assert_allclose(np.asarray(outs[jnp.int8], np.float32),
+                               np.asarray(outs[jnp.float32], np.float32),
+                               atol=0.06)

@@ -1,0 +1,191 @@
+"""Unit tests for the paper's core: contrastive loss, multiplexer,
+ensemble policies, offload cost model, routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import contrastive as cnt
+from repro.core import ensemble as ens
+from repro.core import offload, routing
+from repro.core.multiplexer import (backbone_forward, init_image_backbone,
+                                    init_mux, init_token_backbone,
+                                    mux_forward)
+from repro.configs.paper_mux import config as paper_config
+
+KEY = jax.random.key(5)
+
+
+# --------------------------------------------------------------------------
+# contrastive (Eq. 1-3)
+# --------------------------------------------------------------------------
+
+def test_projection_normalised():
+    proj = cnt.init_projections(KEY, {"a": 16, "b": 32}, 8)
+    embeds = {"a": jax.random.normal(KEY, (10, 16)),
+              "b": jax.random.normal(KEY, (10, 32))}
+    e = cnt.project(proj, embeds)
+    for v in e.values():
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(v), axis=-1),
+                                   1.0, atol=1e-5)
+
+
+def test_contrastive_signs():
+    """Pulled pairs (both correct) lower the loss when close; pushed
+    pairs (xor) lower it when far; both-wrong pairs contribute 0."""
+    close = jnp.tile(jnp.array([[1.0, 0.0]]), (4, 1))
+    far = jnp.tile(jnp.array([[-1.0, 0.0]]), (4, 1))
+    e_same = {"a": close, "b": close}
+    e_opp = {"a": close, "b": far}
+    both = {"a": jnp.ones(4, bool), "b": jnp.ones(4, bool)}
+    xor = {"a": jnp.ones(4, bool), "b": jnp.zeros(4, bool)}
+    none = {"a": jnp.zeros(4, bool), "b": jnp.zeros(4, bool)}
+    # both correct: close embeddings give smaller loss than far
+    assert cnt.contrastive_loss(e_same, both) < cnt.contrastive_loss(e_opp, both)
+    # xor: far embeddings give smaller loss than close
+    assert cnt.contrastive_loss(e_opp, xor) < cnt.contrastive_loss(e_same, xor)
+    # both wrong: no signal
+    assert float(cnt.contrastive_loss(e_opp, none)) == 0.0
+
+
+def test_gradient_direction_pulls_and_pushes():
+    """d(loss)/d(embedding) actually moves pulled pairs together."""
+    e1 = jnp.array([[1.0, 0.2]])
+    e1 = e1 / jnp.linalg.norm(e1)
+    e2 = jnp.array([[0.2, 1.0]])
+    e2 = e2 / jnp.linalg.norm(e2)
+
+    def loss(x):
+        return cnt.contrastive_loss({"a": x, "b": e2},
+                                    {"a": jnp.ones(1, bool),
+                                     "b": jnp.ones(1, bool)})
+    g = jax.grad(loss)(e1)
+    # gradient step -g should increase cosine similarity with e2
+    stepped = e1 - 0.1 * g
+    assert float((stepped @ e2.T).squeeze()) > float((e1 @ e2.T).squeeze())
+
+
+def test_separation_score_shapes():
+    e = {"a": jax.random.normal(KEY, (8, 4)), "b": jax.random.normal(KEY, (8, 4))}
+    e = {k: v / jnp.linalg.norm(v, axis=-1, keepdims=True) for k, v in e.items()}
+    c = {"a": jnp.ones(8, bool), "b": jnp.zeros(8, bool)}
+    s = cnt.separation_score(e, c)
+    assert set(s) == {"pull_mean", "push_mean"}
+
+
+# --------------------------------------------------------------------------
+# multiplexer (Eq. 5-6, 8)
+# --------------------------------------------------------------------------
+
+def _mux(names=("m0", "m1", "m2"), costs=(1.0, 4.0, 16.0), meta_dim=16):
+    bk = init_image_backbone(KEY, meta_dim=meta_dim)
+    return init_mux(KEY, backbone=bk, model_names=names,
+                    costs=dict(zip(names, costs)), meta_dim=meta_dim,
+                    proj_dim=8)
+
+
+def test_mux_weights_normalised():
+    mux = _mux()
+    x = jax.random.normal(KEY, (4, 32, 32, 3))
+    w, meta = mux_forward(mux, x)
+    assert w.shape == (4, 3)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_cost_bias_prefers_cheap_models():
+    """With identical POSITIVE meta scores, Eq. 5's 1/c_i scaling must
+    favour the cheap model (positive logits shrink when divided by a
+    larger cost).  Note Eq. 5 is sign-sensitive by construction: the
+    learned v must produce positive scores for models worth calling."""
+    from repro.kernels.ref import mux_score_ref
+    meta = jnp.abs(jax.random.normal(KEY, (8, 16))) + 0.1
+    v = jnp.ones((3, 16))
+    cost = jnp.array([1.0, 4.0, 16.0])
+    w = mux_score_ref(meta, v, cost, normalize=False)
+    assert float(w[:, 0].mean()) > float(w[:, 2].mean())
+    # alpha=0 (cost ignored) -> uniform weights under identical scores
+    mux = _mux()
+    mux = dict(mux, v=jnp.ones_like(mux["v"]))
+    x = jnp.abs(jax.random.normal(KEY, (4, 32, 32, 3)))
+    w0, _ = mux_forward(mux, x, cost_exponent=0.0)
+    np.testing.assert_allclose(np.asarray(w0), 1.0 / 3, atol=1e-5)
+
+
+def test_token_backbone():
+    bk = init_token_backbone(KEY, meta_dim=8, vocab_size=50)
+    toks = jax.random.randint(KEY, (3, 80), 0, 50)
+    m = backbone_forward(bk, toks, probe_len=16, num_heads=4)
+    assert m.shape == (3, 8)
+    assert jnp.isfinite(m).all()
+
+
+# --------------------------------------------------------------------------
+# ensemble policies (Alg. 2, Table II quantities)
+# --------------------------------------------------------------------------
+
+def test_policy_metrics_perfect_mux():
+    """A mux that knows the oracle routes every input to the cheapest
+    correct model -> accuracy = oracle, flops < always-largest."""
+    n, b, c = 3, 64, 5
+    key1, key2 = jax.random.split(KEY)
+    labels = jax.random.randint(key1, (b,), 0, c)
+    probs = jax.nn.softmax(jax.random.normal(key2, (n, b, c)), -1)
+    costs = jnp.array([1.0, 10.0, 100.0])
+    o = ens.oracle_metrics(probs, labels, costs)
+    correct = np.asarray(o["correct_matrix"])
+    # build oracle weights
+    w = np.full((b, n), 0.01)
+    for i in range(b):
+        js = np.where(correct[:, i])[0]
+        w[i, js[0] if len(js) else 0] = 0.9
+    m = ens.policy_metrics(jnp.asarray(w), probs, labels, costs)
+    assert float(m["acc_single"]) == pytest.approx(float(o["acc_oracle"]), abs=1e-6)
+    assert float(m["flops_single"]) <= 100.0
+    np.testing.assert_allclose(np.asarray(m["called"]).sum(), 1.0, atol=1e-6)
+
+
+def test_select_ensemble_never_empty():
+    w = jnp.array([[0.05, 0.05, 0.9], [0.34, 0.33, 0.33]])
+    mask = ens.select_ensemble(w, threshold=0.5)
+    assert bool(mask.any(-1).all())
+
+
+# --------------------------------------------------------------------------
+# offload cost model (Eq. 9-13)
+# --------------------------------------------------------------------------
+
+def test_offload_cost_model():
+    cfg = paper_config()
+    rows = offload.table1(cfg, mobile_acc=0.72, cloud_acc=0.79,
+                          hybrid_acc=0.80, local_fraction=0.68,
+                          mobile_flops=3e8, cloud_flops=1.6e10,
+                          mux_flops=2e6)
+    assert rows["mobile-only"].latency_s < rows["cloud-only"].latency_s
+    assert rows["hybrid"].latency_s < rows["cloud-only"].latency_s
+    assert rows["hybrid"].flops < rows["cloud-only"].flops
+    assert rows["hybrid"].mobile_energy_j < rows["cloud-only"].mobile_energy_j
+    # Eq. 13 is a convex combination (+ mux overhead)
+    assert rows["hybrid"].latency_s > rows["mobile-only"].latency_s
+
+
+# --------------------------------------------------------------------------
+# distributed model-level routing
+# --------------------------------------------------------------------------
+
+def test_routing_round_trip():
+    x = jnp.arange(24.0).reshape(12, 2)
+    assign = jnp.array([0, 1, 1, 0, 2, 2, 2, 1, 0, 0, 1, 2])
+    fns = [lambda b: b * 10, lambda b: b * 100, lambda b: b * 1000]
+    out, kept = routing.multiplexed_apply(x, assign, fns, capacity=6)
+    assert bool(kept.all())
+    scale = jnp.array([10.0, 100.0, 1000.0])[assign]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x * scale[:, None]))
+
+
+def test_routing_capacity_overflow_marks_dropped():
+    x = jnp.ones((8, 1))
+    assign = jnp.zeros(8, jnp.int32)          # everyone wants model 0
+    fns = [lambda b: b, lambda b: b]
+    out, kept = routing.multiplexed_apply(x, assign, fns, capacity=4)
+    assert int(kept.sum()) == 4
+    np.testing.assert_allclose(np.asarray(out[~np.asarray(kept)]), 0.0)

@@ -1,0 +1,85 @@
+"""Trip-count-aware HLO cost model tests (the roofline's foundation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_trip_multiplied():
+    def body(h, w):
+        return jnp.tanh(h @ w), None
+
+    f = lambda h, w: jax.lax.scan(body, h, w)[0]
+    h = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    c = hlo_cost.analyze(_compiled_text(f, h, w))
+    assert c.flops == pytest.approx(2 * 128 * 256 * 256 * 8, rel=0.01)
+
+
+def test_unrolled_matches_scan():
+    def scan_f(h, w):
+        return jax.lax.scan(lambda c, wi: (jnp.tanh(c @ wi), None), h, w)[0]
+
+    def unrolled_f(h, w):
+        for i in range(8):
+            h = jnp.tanh(h @ w[i])
+        return h
+
+    h = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    c1 = hlo_cost.analyze(_compiled_text(scan_f, h, w))
+    c2 = hlo_cost.analyze(_compiled_text(unrolled_f, h, w))
+    assert c1.flops == pytest.approx(c2.flops, rel=0.01)
+
+
+def test_plain_dot_flops():
+    f = lambda a, b: a @ b
+    a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 16), jnp.float32)
+    c = hlo_cost.analyze(_compiled_text(f, a, b))
+    assert c.flops == pytest.approx(2 * 32 * 64 * 16, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def inner(c, x):
+        return c + x @ x.T @ jnp.ones_like(c), None
+
+    def outer(c, xs):
+        def step(cc, _):
+            return jax.lax.scan(inner, cc, xs)[0], None
+        return jax.lax.scan(step, c, None, length=3)[0]
+
+    c0 = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    xs = jax.ShapeDtypeStruct((4, 16, 16), jnp.float32)
+    cost = hlo_cost.analyze(_compiled_text(outer, c0, xs))
+    # 3 outer x 4 inner x 2 dots of 2*16^3
+    assert cost.flops == pytest.approx(3 * 4 * 2 * 2 * 16 ** 3, rel=0.05)
+
+
+def test_bytes_reasonable_for_elementwise():
+    f = lambda a: a * 2.0 + 1.0
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = hlo_cost.analyze(_compiled_text(f, a))
+    # read + write of a 4MiB buffer, nothing hidden
+    assert 2 * 4 * 2 ** 20 <= c.bytes <= 5 * 4 * 2 ** 20
+
+
+def test_convert_fusions_are_free():
+    f = lambda a: a.astype(jnp.float32)
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)
+    c = hlo_cost.analyze(_compiled_text(f, a))
+    assert c.bytes <= 4 * 2 ** 20 * 1.1     # not counted as real traffic
+
+
+def test_collective_weights():
+    stats = {k: {"count": 0, "bytes": 0.0} for k in hlo_cost.COLLECTIVES}
+    stats["all-reduce"]["bytes"] = 100.0
+    stats["all-gather"]["bytes"] = 50.0
+    from repro.launch.hlo_analysis import collective_link_bytes
+    assert collective_link_bytes(stats) == pytest.approx(2 * 100 + 50)

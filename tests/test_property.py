@@ -1,0 +1,99 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.contrastive import cosine_distance
+from repro.kernels.ref import mux_score_ref
+from repro.launch import hlo_cost
+from repro.models.layers import apply_rope, rms_norm, softcap
+from repro.models.moe import route, init_moe
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+floats = st.floats(-50.0, 50.0, allow_nan=False, width=32)
+
+
+@given(st.lists(floats, min_size=4, max_size=16),
+       st.floats(1.0, 100.0, allow_nan=False))
+def test_softcap_bounds_and_monotone(xs, cap):
+    x = jnp.asarray(xs, jnp.float32)
+    y = softcap(x, cap)
+    assert float(jnp.abs(y).max()) <= cap + 1e-4
+    order = jnp.argsort(x)
+    assert bool(jnp.all(jnp.diff(y[order]) >= -1e-5))
+
+
+@given(st.integers(1, 8), st.integers(2, 64))
+def test_rms_norm_unit_rms(b, d):
+    x = jax.random.normal(jax.random.key(b * 100 + d), (b, d)) * 10 + 1
+    y = rms_norm(x, jnp.ones((d,)))
+    rms = jnp.sqrt(jnp.mean(jnp.square(y.astype(jnp.float32)), -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+@given(st.integers(0, 4), st.integers(1, 64))
+def test_rope_preserves_norm_and_zero_position_identity(seed, pos):
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (1, 1, 2, 16))
+    positions = jnp.array([[pos]])
+    y = apply_rope(x, positions)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y)),
+                               np.linalg.norm(np.asarray(x)), rtol=1e-5)
+    y0 = apply_rope(x, jnp.array([[0]]))
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(x), atol=1e-6)
+
+
+@given(st.integers(0, 10))
+def test_cosine_distance_range_and_self(seed):
+    key = jax.random.key(seed)
+    e = jax.random.normal(key, (4, 8))
+    e = e / jnp.linalg.norm(e, axis=-1, keepdims=True)
+    d_self = cosine_distance(e, e)
+    assert float(d_self.max()) <= 2e-4 + 1e-4
+    e2 = jax.random.normal(jax.random.fold_in(key, 1), (4, 8))
+    e2 = e2 / jnp.linalg.norm(e2, axis=-1, keepdims=True)
+    d = cosine_distance(e, e2)
+    assert float(d.min()) >= 0.0 and float(d.max()) <= 1.0
+
+
+@given(st.integers(1, 6), st.integers(2, 10), st.integers(0, 5))
+def test_mux_score_is_distribution(b, n, seed):
+    key = jax.random.key(seed)
+    meta = jax.random.normal(key, (b, 12))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, 12))
+    cost = jnp.arange(1.0, n + 1.0)
+    w = mux_score_ref(meta, v, cost)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+    assert float(w.min()) >= 0.0
+
+
+@given(st.integers(2, 8), st.integers(1, 4), st.integers(0, 3),
+       st.sampled_from(["softmax_topk", "topk_softmax", "sigmoid"]))
+def test_router_topk_invariants(e, k, seed, act):
+    if k > e:
+        return
+    key = jax.random.key(seed)
+    params = init_moe(key, d_model=8, num_experts=e, moe_d_ff=4)
+    x = jax.random.normal(key, (2, 6, 8))
+    w, idx, aux = route(params, x, num_experts=e, top_k=k, router_act=act)
+    assert idx.shape == (2, 6, k)
+    assert int(idx.min()) >= 0 and int(idx.max()) < e
+    # top-k experts are distinct per token
+    for row in np.asarray(idx).reshape(-1, k):
+        assert len(set(row.tolist())) == k
+    assert float(w.min()) >= 0.0
+    assert float(aux) >= 0.0
+
+
+@given(st.sampled_from(["f32", "bf16", "s32", "u8"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+def test_hlo_type_bytes_parser(dt, dims):
+    bytes_per = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1}[dt]
+    n = int(np.prod(dims)) if dims else 1
+    s = f"{dt}[{','.join(map(str, dims))}]{{0}}"
+    elems, byts = hlo_cost._shape_elems_bytes(s)
+    assert elems == n
+    assert byts == n * bytes_per

@@ -1,0 +1,167 @@
+"""Optimizer, checkpoint, data pipeline, trainer, serving engine tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_smoke_config
+from repro.data.pipeline import ShardedBatcher, host_slice
+from repro.data.synthetic import (image_dataset, lm_batch, make_templates,
+                                  sample_images)
+from repro.optim import adamw
+
+KEY = jax.random.key(1)
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=200, schedule="constant",
+                            clip_norm=None)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(cfg, params)
+    target = jnp.array([1.0, 1.0])
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, _ = adamw.apply_updates(cfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_clipping_caps_update():
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=1,
+                            total_steps=10, schedule="constant",
+                            weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(cfg, params)
+    grads = {"w": jnp.array([1e6, 0.0, 0.0])}
+    _, _, m = adamw.apply_updates(cfg, params, grads, state)
+    assert float(m["grad_norm"]) > 1e5      # reported pre-clip norm
+
+
+def test_adamw_bf16_moments():
+    cfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+    state = adamw.init(cfg, {"w": jnp.zeros((4, 4))})
+    assert state.mu["w"].dtype == jnp.bfloat16
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lr0 = adamw.schedule_lr(cfg, jnp.asarray(0))
+    lr10 = adamw.schedule_lr(cfg, jnp.asarray(10))
+    lr99 = adamw.schedule_lr(cfg, jnp.asarray(99))
+    assert float(lr0) < float(lr10)
+    assert float(lr99) < float(lr10)
+
+
+# --------------------------------------------------------------------------
+# checkpoint
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "d": [jnp.zeros(2), jnp.ones(3)]}
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, tree, step=7)
+    like = jax.eval_shape(lambda: tree)
+    back = ckpt.restore(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(AssertionError):
+        ckpt.restore(path, {"a": jnp.zeros((3, 2))})
+
+
+# --------------------------------------------------------------------------
+# data
+# --------------------------------------------------------------------------
+
+def test_hardness_controls_difficulty():
+    """Higher-hardness samples are farther from their class template."""
+    templates = make_templates(KEY, num_classes=4, image_size=16)
+    easy = sample_images(KEY, templates, batch=128,
+                         hardness=jnp.zeros(128))
+    hard = sample_images(KEY, templates, batch=128,
+                         hardness=jnp.full((128,), 0.9))
+    d_easy = jnp.abs(easy["image"] - templates[easy["label"]]).mean()
+    d_hard = jnp.abs(hard["image"] - templates[hard["label"]]).mean()
+    assert float(d_hard) > float(d_easy) * 1.5
+
+
+def test_label_corruption_tail():
+    templates = make_templates(KEY, num_classes=4, image_size=8)
+    out = sample_images(KEY, templates, batch=64,
+                        hardness=jnp.ones(64) * 0.99)
+    clean = sample_images(KEY, templates, batch=64,
+                          hardness=jnp.zeros(64))
+    assert out["image"].shape == clean["image"].shape
+
+
+def test_lm_batch_structured_and_deterministic():
+    b1 = lm_batch(KEY, batch=4, seq_len=32, vocab_size=50)
+    b2 = lm_batch(KEY, batch=4, seq_len=32, vocab_size=50)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    np.testing.assert_array_equal(np.asarray(b1["labels"][:, :-1]),
+                                  np.asarray(b1["tokens"][:, 1:]))
+
+
+def test_host_slicing_partitions_batch():
+    slices = [host_slice(64, i, 4) for i in range(4)]
+    seen = set()
+    for s in slices:
+        seen.update(range(s.start, s.stop))
+    assert seen == set(range(64))
+
+
+def test_sharded_batcher_local_slice():
+    def fn(key, b):
+        return {"x": jnp.arange(b)}
+    it = iter(ShardedBatcher(fn, global_batch=16, process_index=1,
+                             process_count=4))
+    batch = next(it)
+    np.testing.assert_array_equal(np.asarray(batch["x"]), np.arange(4, 8))
+
+
+# --------------------------------------------------------------------------
+# trainer + serving engine (smoke-scale end to end)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_trainer_loss_decreases():
+    from repro.training.trainer import Trainer, TrainerConfig
+    cfg = get_smoke_config("olmo-1b").with_(vocab_size=16)
+    tcfg = TrainerConfig(steps=60, batch_size=8, seq_len=64, log_every=5)
+    opt = adamw.AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=60,
+                            schedule="constant")
+    out = Trainer(cfg, tcfg, opt).run(verbose=False)
+    first = out["history"][0]["loss"]
+    last = out["history"][-1]["loss"]
+    assert last < first - 0.3, (first, last)
+
+
+@pytest.mark.slow
+def test_engine_generate():
+    from repro.serving.engine import Engine, ServeConfig
+    cfg = get_smoke_config("olmo-1b")
+    from repro.models import transformer as tf
+    params = jax.tree.map(lambda x: x.astype(jnp.bfloat16),
+                          tf.init_params(cfg, KEY))
+    eng = Engine(cfg, params, ServeConfig(max_len=48))
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    res = eng.generate(prompts, max_new_tokens=8)
+    assert res["tokens"].shape == (2, 16)
+    assert res["tokens_per_s"] > 0
