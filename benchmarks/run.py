@@ -9,6 +9,7 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   table2  — cloud-API multiplexing                  (paper Table II)
   fig6    — contrastive embedding separation        (paper Fig. 3/6)
   mux_kernel — fused router-head microbenchmark     (serving hot path)
+  scheduler  — continuous-batching goodput vs load  (serving runtime)
   roofline   — dry-run roofline table               (EXPERIMENTS §Roofline)
 
 State (trained zoo + muxes) is cached under results/bench_state; set
@@ -48,7 +49,8 @@ def bench_mux_kernel():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,table1,table2,fig6,mux_kernel,roofline")
+                    help="comma list: fig1,table1,table2,fig6,mux_kernel,"
+                         "scheduler,roofline")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -75,6 +77,9 @@ def main() -> None:
         fig6_separation.run(state)
     if want("mux_kernel"):
         bench_mux_kernel()
+    if want("scheduler"):
+        from benchmarks import bench_scheduler
+        bench_scheduler.run()
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()

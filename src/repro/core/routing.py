@@ -16,12 +16,32 @@ paper's multiplexer *is* a router; the only difference is granularity.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Params = Dict[str, Any]
+
+
+def select_model(w: jnp.ndarray, costs: jnp.ndarray,
+                 threshold: Optional[float] = None) -> jnp.ndarray:
+    """Mux weights (B, N) -> model ids (B,).  Traceable (jit-safe).
+
+    threshold=None is the paper's hybrid-single policy: argmax over the
+    cost-aware weights.  With a threshold the policy becomes thresholded
+    hybrid selection: pick the *cheapest* model whose mux weight exceeds
+    the threshold; if no model clears it, fall back to the most
+    expensive model (the safe default — Fig. 2d's "send to the big
+    cloud model when unsure").
+    """
+    if threshold is None:
+        return jnp.argmax(w, axis=-1).astype(jnp.int32)
+    order = jnp.argsort(costs)                       # cheap -> expensive
+    ok = w[:, order] > threshold                     # (B, N) in cost order
+    first_ok = jnp.argmax(ok, axis=-1)               # first True, else 0
+    chosen = jnp.where(jnp.any(ok, axis=-1), order[first_ok], order[-1])
+    return chosen.astype(jnp.int32)
 
 
 def bucket_by_model(assign: jnp.ndarray, num_models: int, capacity: int
@@ -70,6 +90,54 @@ def combine(outputs: jnp.ndarray, plan: Dict[str, jnp.ndarray],
     fill = jnp.full_like(got, fill_value)
     keep = plan["kept"].reshape((-1,) + (1,) * (got.ndim - 1))
     return jnp.where(keep, got, fill)
+
+
+def pad_bucket(x: jnp.ndarray, capacity: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad (k, ...) requests to one static-shape (capacity, ...) bucket.
+
+    Single-queue rendering of the same scatter math as
+    bucket_by_model/dispatch (num_models=1): the micro-batch former in
+    repro.serving.scheduler drains a per-model queue and pads it to the
+    worker's fixed batch shape with this, so the scheduler and the
+    single-program multiplexer share one padding semantics.
+
+    Returns (bucket (capacity, ...), valid (capacity,) bool).  Requests
+    beyond capacity are dropped from the bucket (valid tracks rows that
+    hold a real request) — callers bound k <= capacity.
+    """
+    k = x.shape[0]
+    assign = jnp.zeros((k,), jnp.int32)
+    plan = bucket_by_model(assign, 1, capacity)
+    bucket = dispatch(x, plan, 1, capacity)[0]
+    # dropped rows carry the overflow slot (== capacity when n=1), so a
+    # scatter into a capacity+1 buffer marks exactly the real rows
+    valid = jnp.zeros((capacity + 1,), bool).at[plan["slot"]].set(True)
+    return bucket, valid[:capacity]
+
+
+def pad_bucket_host(xs: Sequence[Any], capacity: int):
+    """Host-side (numpy) mirror of pad_bucket for the serving hot path.
+
+    The scheduler's micro-batch former runs on the event loop, where an
+    eager jax scatter costs an XLA compile per distinct batch size —
+    hundreds of ms of head-of-line blocking.  This mirror produces the
+    exact same bucket (row i = xs[i], zero padding) with no device
+    program; tests/test_routing_overflow.py pins it bitwise-equal to
+    pad_bucket so the two renderings cannot drift.  Requires k >= 1: a
+    plain sequence carries no shape/dtype for an all-padding bucket.
+    """
+    import numpy as np
+    k = len(xs)
+    if k == 0:
+        raise ValueError("pad_bucket_host requires at least one request")
+    first = np.asarray(xs[0])
+    bucket = np.zeros((capacity,) + first.shape, first.dtype)
+    for i in range(min(k, capacity)):
+        bucket[i] = np.asarray(xs[i])
+    valid = np.zeros((capacity,), bool)
+    valid[:min(k, capacity)] = True
+    return bucket, valid
 
 
 def multiplexed_apply(x: jnp.ndarray, assign: jnp.ndarray,

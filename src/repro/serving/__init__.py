@@ -1,1 +1,6 @@
-"""repro.serving"""
+"""repro.serving — batch engines, the multiplexed server, and the
+continuous-batching request scheduler (repro.serving.scheduler)."""
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.mux_server import MuxServer, MuxServerConfig
+
+__all__ = ["Engine", "ServeConfig", "MuxServer", "MuxServerConfig"]

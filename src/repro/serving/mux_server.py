@@ -8,11 +8,25 @@ report the 2.85x-style compute saving directly from the server.
 
 Works for the CNN zoo (paper-faithful) and for LLM zoos (token-probe
 mux + per-model decode engines).
+
+Two entry points:
+  * ``serve(x)`` — one-shot multiplexed batch step (single jit'd
+    program: probe + dispatch + all models + combine).
+  * ``probe_weights`` / ``select`` / ``model_step`` — the decomposed
+    stages the continuous-batching scheduler
+    (repro.serving.scheduler) drives request-by-request: score on
+    arrival, pick a model, run per-model micro-batches concurrently.
+
+``model_step(m, bucket)`` is jit-cached per (model, bucket shape) and
+is the canonical model entry point: any request served through the
+scheduler is bitwise-identical to calling ``model_step`` directly on
+that request in a same-shape bucket, because XLA only guarantees
+row-stable lowering at a fixed batch shape.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +36,15 @@ from repro.core.multiplexer import mux_forward
 from repro.kernels import ops as kops
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class MuxServerConfig:
+    """Frozen: jax.jit bakes these into _batch_step at first trace, so
+    mutating a live config would silently desynchronize serve() from
+    select() — build a new MuxServer to change routing policy."""
     capacity_factor: float = 1.5        # bucket capacity = cf * B / N
-    threshold: Optional[float] = None   # None => argmax (hybrid-single)
+    threshold: Optional[float] = None   # None => argmax (hybrid-single);
+    #   else thresholded hybrid: cheapest model whose mux weight exceeds
+    #   the threshold, falling back to the largest (routing.select_model)
     cost_exponent: float = 1.0          # Eq. 5 cost sensitivity
     use_fused_head: bool = True         # mux_score Pallas kernel path
 
@@ -40,6 +59,18 @@ class MuxServer:
         self.costs = jnp.asarray(model_costs, jnp.float32)
         self.cfg = cfg or MuxServerConfig()
         self._step = jax.jit(self._batch_step)
+        # lambdas so both jitted paths look up self._weights /
+        # select_model at trace time — serve() and probe_weights()/
+        # select() must stay interchangeable (tests patch _weights)
+        self._probe = jax.jit(lambda x: self._weights(x))
+        self._select = jax.jit(lambda w: routing.select_model(
+            w, self.costs, self.cfg.threshold))
+        # per-model jitted batch steps; jax.jit caches per bucket shape
+        self._model_steps: List[Callable] = [jax.jit(fn) for fn in model_fns]
+
+    @property
+    def num_models(self) -> int:
+        return len(self.model_fns)
 
     # ------------------------------------------------------------------
     def _weights(self, x):
@@ -58,8 +89,13 @@ class MuxServer:
         n = len(self.model_fns)
         b = x.shape[0]
         w = self._weights(x)                                # (B, N)
-        assign = jnp.argmax(w, axis=-1)
-        capacity = max(1, int(self.cfg.capacity_factor * b / n))
+        assign = routing.select_model(w, self.costs, self.cfg.threshold)
+        # argmax routing is roughly balanced, so cf*B/N buckets suffice;
+        # thresholded selection concentrates traffic on the cheapest
+        # clearing model by design, so every bucket must be able to hold
+        # the whole batch or overflow would silently zero-fill outputs
+        capacity = (b if self.cfg.threshold is not None
+                    else max(1, int(self.cfg.capacity_factor * b / n)))
         out, kept = routing.multiplexed_apply(
             x, assign, self.model_fns, capacity=capacity)
         flops = self.costs[assign]                          # Eq. 14 meter
@@ -72,3 +108,18 @@ class MuxServer:
                 "mean_flops": float(res["flops"].mean()),
                 "called_fraction": [float((res["assign"] == i).mean())
                                     for i in range(len(self.model_fns))]}
+
+    # ---- decomposed stages for the continuous-batching scheduler -----
+    def probe_weights(self, x) -> jnp.ndarray:
+        """Mux probe on a batch of requests: (B, ...) -> weights (B, N)."""
+        return self._probe(x)
+
+    def select(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Weights (B, N) -> model ids (B,) under the configured policy.
+        Jitted: admission calls this per probe, so the selection chain
+        must not re-dispatch eagerly on the event loop."""
+        return self._select(w)
+
+    def model_step(self, m: int, bucket: jnp.ndarray) -> jnp.ndarray:
+        """Run model m on one static-shape bucket (C, ...) -> (C, out...)."""
+        return self._model_steps[m](bucket)

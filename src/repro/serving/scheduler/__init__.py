@@ -1,0 +1,27 @@
+"""repro.serving.scheduler — async continuous-batching request runtime.
+
+The paper serves one pre-formed batch at a time (MuxServer.serve).  This
+package is the request-level runtime on top of it: requests arrive one
+by one on an open loop, the mux probe scores each on arrival, a
+deadline-first micro-batch former drains per-model queues into
+static-shape buckets, and per-model workers drive the zoo concurrently.
+
+    server = MuxServer(mux_params, model_fns, costs)
+    sched = MuxScheduler(server, SchedulerConfig(max_batch_size=8))
+    async with sched:
+        y = await sched.submit(x)          # one request in, one result out
+    print(sched.metrics.snapshot())
+"""
+from repro.serving.scheduler.request import Request, RequestState
+from repro.serving.scheduler.batcher import BatchingPolicy, MicroBatcher, ModelQueue
+from repro.serving.scheduler.admission import AdmissionController
+from repro.serving.scheduler.metrics import LatencyReservoir, SchedulerMetrics
+from repro.serving.scheduler.traffic import TrafficConfig, arrival_times, replay
+from repro.serving.scheduler.runtime import MuxScheduler, SchedulerConfig
+
+__all__ = [
+    "Request", "RequestState", "BatchingPolicy", "MicroBatcher",
+    "ModelQueue", "AdmissionController", "LatencyReservoir",
+    "SchedulerMetrics", "TrafficConfig", "arrival_times", "replay",
+    "MuxScheduler", "SchedulerConfig",
+]

@@ -1,0 +1,91 @@
+"""Mux-scored admission: the probe runs once per arrival tick.
+
+The paper's multiplexer is the admission controller: the lightweight
+probe (mux_forward, or the fused mux_score kernel inside
+MuxServer.probe_weights) scores the request against the whole zoo, the
+selection policy (argmax, or thresholded hybrid when
+MuxServerConfig.threshold is set) picks a model, and the request joins
+that model's queue with its Eq. 14 cost already metered.
+
+Admission accepts a *list* of requests so a bursty arrival tick can be
+scored in one probe call; the common case is a singleton.  Probes run
+at ONE fixed batch shape: arrivals are chunked and padded to
+``probe_batch`` rows (routing.pad_bucket_host), and selection runs on
+the padded weights before slicing, so neither the jit'd probe nor the
+eager selection ever recompiles for a novel burst size — a fresh XLA
+compile on the event loop would stall every in-flight request.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import routing
+from repro.serving.scheduler.batcher import ModelQueue
+from repro.serving.scheduler.metrics import SchedulerMetrics
+from repro.serving.scheduler.request import Request
+
+
+class AdmissionController:
+    """Scores arrivals with the mux probe and enqueues per model."""
+
+    def __init__(self, server, queues: Sequence[ModelQueue],
+                 metrics: SchedulerMetrics,
+                 clock: Callable[[], float], probe_batch: int = 1):
+        self.server = server
+        self.queues = list(queues)
+        self.metrics = metrics
+        self.clock = clock
+        self.probe_batch = probe_batch
+        # hoisted once: a per-request device->host transfer on the
+        # event loop is exactly what this module exists to avoid
+        self._costs_host = np.asarray(server.costs)
+        # serving signature (shape, dtype), seeded by warmup or the
+        # first successful admission; the static-shape buckets serve
+        # exactly one signature, so a mismatched request must fail at
+        # admission — not poison the micro-batch it lands in
+        self._signature = None
+
+    def score(self, xs: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+        """Probe + select at the fixed probe shape.
+
+        Returns (weights (k, N), assign (k,)).  This is THE admission
+        scoring path — reference/bitwise checks must go through it
+        (MuxScheduler.reference_assignment) because row results are
+        only shape-stable at the padded probe batch.
+        """
+        sigs = [(np.asarray(x).shape, np.asarray(x).dtype) for x in xs]
+        if self._signature is not None:
+            for sig in sigs:
+                if sig != self._signature:
+                    raise ValueError(
+                        f"request signature {sig} does not match the "
+                        f"serving signature {self._signature}")
+        ws: List[np.ndarray] = []
+        assigns: List[np.ndarray] = []
+        for i in range(0, len(xs), self.probe_batch):
+            chunk = list(xs[i:i + self.probe_batch])
+            bucket, _ = routing.pad_bucket_host(chunk, self.probe_batch)
+            w = self.server.probe_weights(bucket)        # (C, N) on device
+            assign = np.asarray(self.server.select(w))   # fixed (C, N) too
+            ws.append(np.asarray(w)[:len(chunk)])
+            assigns.append(assign[:len(chunk)])
+        if self._signature is None:      # only commit after success
+            self._signature = sigs[0]
+        return np.concatenate(ws), np.concatenate(assigns)
+
+    def admit(self, requests: List[Request]) -> None:
+        """Score + enqueue.  Synchronous: the probe is the paper's
+        "very light-weight" CNN/transformer — cheap by design."""
+        if not requests:
+            return
+        w, assign = self.score([r.x for r in requests])
+        costs = self._costs_host
+        now = self.clock()
+        for i, req in enumerate(requests):
+            req.weights = w[i]
+            req.model_id = int(assign[i])
+            req.flops = float(costs[req.model_id])
+            self.queues[req.model_id].push(req, now)
+            self.metrics.on_admit(req)

@@ -1,0 +1,112 @@
+"""Per-model queues and the micro-batch former.
+
+ModelQueue is a deadline-ordered (EDF) priority queue of admitted
+requests for one zoo model.  MicroBatcher decides *when* a queue is
+worth draining — batch full, or the oldest request has waited
+max_wait_ms — and *what* to drain (up to max_batch_size requests in
+deadline order), then pads the drained samples into the worker's
+static-shape bucket with routing.pad_bucket, the same scatter math the
+single-program multiplexer uses for its per-model buckets.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+from typing import Any, Deque, List, Optional, Tuple
+
+from repro.core import routing
+from repro.serving.scheduler.request import Request, RequestState
+
+
+class ModelQueue:
+    """Deadline-first queue of admitted requests for one model."""
+
+    def __init__(self, model_id: int):
+        self.model_id = model_id
+        self._heap: List[Tuple[float, int, Request]] = []
+        # FIFO shadow for the max-wait flush decision: push times are
+        # monotonic, so the oldest pending enqueue (req.admitted_t) is
+        # at the left once drained entries are skipped — O(1) amortized
+        # vs re-scanning the heap on every worker poll
+        self._fifo: Deque[Request] = collections.deque()
+
+    def push(self, req: Request, now: float) -> None:
+        req.state = RequestState.QUEUED
+        req.admitted_t = now
+        # (deadline, rid) orders EDF with FIFO tie-break
+        heapq.heappush(self._heap, (req.deadline_t, req.rid, req))
+        self._fifo.append(req)
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    @property
+    def oldest_enqueue_t(self) -> Optional[float]:
+        fifo = self._fifo
+        while fifo and fifo[0].state is not RequestState.QUEUED:
+            fifo.popleft()
+        return fifo[0].admitted_t if fifo else None
+
+    @property
+    def earliest_deadline(self) -> Optional[float]:
+        if not self._heap:
+            return None
+        return self._heap[0][0]
+
+
+@dataclasses.dataclass
+class BatchingPolicy:
+    max_batch_size: int = 8     # bucket capacity (static shape)
+    max_wait_ms: float = 5.0    # flush even a lone request after this
+
+
+class MicroBatcher:
+    """Forms static-shape micro-batches from a ModelQueue under policy."""
+
+    def __init__(self, policy: BatchingPolicy):
+        self.policy = policy
+
+    # ---- when ---------------------------------------------------------
+    def ready(self, queue: ModelQueue, now: float) -> bool:
+        if len(queue) == 0:
+            return False
+        if len(queue) >= self.policy.max_batch_size:
+            return True
+        oldest = queue.oldest_enqueue_t
+        return (now - oldest) * 1e3 >= self.policy.max_wait_ms
+
+    def time_until_ready(self, queue: ModelQueue, now: float
+                         ) -> Optional[float]:
+        """Seconds until the max-wait flush fires; None if queue empty."""
+        oldest = queue.oldest_enqueue_t
+        if oldest is None:
+            return None
+        return max(0.0, self.policy.max_wait_ms / 1e3 - (now - oldest))
+
+    # ---- what ---------------------------------------------------------
+    def form(self, queue: ModelQueue, now: float) -> List[Request]:
+        """Drain up to max_batch_size requests in deadline order."""
+        batch: List[Request] = []
+        while len(queue) and len(batch) < self.policy.max_batch_size:
+            req = queue.pop()
+            req.state = RequestState.BATCHED
+            req.batched_t = now
+            batch.append(req)
+        return batch
+
+    def form_bucket(self, batch: List[Request]
+                    ) -> Tuple[Any, Any]:
+        """Stack + pad drained samples into the fixed (C, ...) bucket.
+
+        Row i of the bucket is batch[i] (pad_bucket keeps arrival order
+        for a single queue), so workers read outputs back by row.  Uses
+        the host-side rendering of the pad_bucket scatter math — the
+        device version would pay an XLA compile per distinct batch size
+        on the event loop.
+        """
+        return routing.pad_bucket_host([req.x for req in batch],
+                                       self.policy.max_batch_size)

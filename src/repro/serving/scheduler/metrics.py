@@ -1,0 +1,166 @@
+"""Metrics registry for the serving runtime.
+
+Counts every lifecycle transition and keeps latency reservoirs so a
+snapshot can report the serving numbers that matter for the paper's
+cloud story: throughput, p50/p99 queue + service + total latency,
+per-model utilization and call fractions, micro-batch fill, and the
+Eq. 14 compute saving of mux routing vs always calling the largest
+model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.scheduler.request import Request
+
+
+class LatencyReservoir:
+    """Bounded uniform sample of latencies with percentile queries
+    (seconds in, milliseconds out — serving dashboards speak ms).
+
+    Vitter's Algorithm R: the first max_samples observations are kept
+    verbatim; afterwards each new observation replaces a random slot
+    with probability max_samples/n, so the reservoir stays a uniform
+    sample of the whole stream and memory is O(max_samples) no matter
+    how long the scheduler runs.  Seeded for reproducible snapshots.
+    """
+
+    def __init__(self, max_samples: int = 8192, seed: int = 0):
+        self.max_samples = max_samples
+        self._samples: List[float] = []
+        self._seen = 0
+        self._rng = random.Random(seed)
+
+    def add(self, seconds: float) -> None:
+        self._seen += 1
+        if len(self._samples) < self.max_samples:
+            self._samples.append(seconds)
+            return
+        slot = self._rng.randrange(self._seen)
+        if slot < self.max_samples:
+            self._samples[slot] = seconds
+
+    def __len__(self) -> int:
+        return self._seen
+
+    def percentile_ms(self, p: float) -> float:
+        if not self._samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self._samples), p) * 1e3)
+
+    def mean_ms(self) -> float:
+        if not self._samples:
+            return 0.0
+        return float(np.mean(self._samples) * 1e3)
+
+
+class SchedulerMetrics:
+    """One registry per scheduler; workers and admission feed it."""
+
+    def __init__(self, costs: Sequence[float], clock=time.monotonic):
+        self.clock = clock
+        self.costs = [float(c) for c in costs]
+        n = len(self.costs)
+        self.arrived = 0
+        self.admitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.slo_violations = 0
+        self.batches = 0
+        self.batched_requests = 0        # real rows across all buckets
+        self.bucket_rows = 0             # capacity rows across all buckets
+        self.per_model_completed = [0] * n
+        self.per_model_busy_s = [0.0] * n
+        self.flops_total = 0.0
+        self.queue_lat = LatencyReservoir()
+        self.service_lat = LatencyReservoir()
+        self.total_lat = LatencyReservoir()
+        self.started_t: Optional[float] = None
+        self.stopped_t: Optional[float] = None
+        self._elapsed_accum = 0.0       # serving time of finished runs
+
+    # ---- lifecycle ----------------------------------------------------
+    # counters are cumulative across restarts, so elapsed must be too —
+    # otherwise a restarted scheduler divides all-runs counts by only
+    # the latest run's wall time and every rate inflates
+    def on_start(self, t: float) -> None:
+        self.started_t = t
+        self.stopped_t = None
+
+    def on_stop(self, t: float) -> None:
+        self.stopped_t = t
+        if self.started_t is not None:
+            self._elapsed_accum += t - self.started_t
+
+    # ---- feed ---------------------------------------------------------
+    def on_arrival(self, req: Request) -> None:
+        self.arrived += 1
+
+    def on_admit(self, req: Request) -> None:
+        self.admitted += 1
+
+    def on_batch(self, model_id: int, batch_size: int, capacity: int) -> None:
+        self.batches += 1
+        self.batched_requests += batch_size
+        self.bucket_rows += capacity
+
+    def on_model_busy(self, model_id: int, seconds: float) -> None:
+        self.per_model_busy_s[model_id] += seconds
+
+    def on_complete(self, req: Request) -> None:
+        self.completed += 1
+        self.per_model_completed[req.model_id] += 1
+        self.flops_total += req.flops
+        self.queue_lat.add(req.queue_latency)
+        self.service_lat.add(req.service_latency)
+        self.total_lat.add(req.total_latency)
+        if req.missed_deadline():
+            self.slo_violations += 1
+
+    def on_fail(self, req: Request) -> None:
+        self.failed += 1
+
+    # ---- report -------------------------------------------------------
+    def snapshot(self, now: Optional[float] = None) -> Dict[str, Any]:
+        """Valid mid-run too: before stop(), elapsed runs to now (or
+        the registry clock), so live dashboards see real rates."""
+        elapsed = self._elapsed_accum
+        if self.started_t is not None and self.stopped_t is None:
+            end = now if now is not None else self.clock()
+            elapsed += end - self.started_t
+        cost_max = max(self.costs) if self.costs else 0.0
+        mean_flops = (self.flops_total / self.completed
+                      if self.completed else 0.0)
+        return {
+            "arrived": self.arrived,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "slo_violations": self.slo_violations,
+            "elapsed_s": elapsed,
+            "throughput_rps": self.completed / elapsed if elapsed else 0.0,
+            "queue_p50_ms": self.queue_lat.percentile_ms(50),
+            "queue_p99_ms": self.queue_lat.percentile_ms(99),
+            "service_p50_ms": self.service_lat.percentile_ms(50),
+            "service_p99_ms": self.service_lat.percentile_ms(99),
+            "total_p50_ms": self.total_lat.percentile_ms(50),
+            "total_p99_ms": self.total_lat.percentile_ms(99),
+            "batches": self.batches,
+            "mean_batch_fill": (self.batched_requests / self.bucket_rows
+                                if self.bucket_rows else 0.0),
+            "called_fraction": [c / self.completed if self.completed else 0.0
+                                for c in self.per_model_completed],
+            "utilization": [b / elapsed if elapsed else 0.0
+                            for b in self.per_model_busy_s],
+            "mean_flops": mean_flops,
+            # Eq. 14: compute saved by mux routing vs always-largest
+            "flops_saved_frac": (1.0 - mean_flops / cost_max
+                                 if cost_max and self.completed else 0.0),
+            "flops_saving_factor": (cost_max / mean_flops
+                                    if mean_flops else 0.0),
+        }

@@ -1,0 +1,81 @@
+"""Request lifecycle for the continuous-batching runtime.
+
+A request is one sample (one image / one prompt) moving through
+
+    CREATED -> QUEUED -> BATCHED -> RUNNING -> COMPLETED
+
+with a wall-clock timestamp recorded at every transition, so the
+metrics registry can decompose end-to-end latency into queueing and
+service time without instrumenting the hot path twice.  Deadlines are
+absolute times derived from the per-request SLO at submission; the
+micro-batch former orders queues by deadline (EDF).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import enum
+from typing import Any, Optional
+
+
+class RequestState(enum.Enum):
+    CREATED = "created"      # constructed, not yet scored
+    QUEUED = "queued"        # admitted: mux-scored, sitting in a model queue
+    BATCHED = "batched"      # drained into a micro-batch, awaiting its worker
+    RUNNING = "running"      # inside the model step
+    COMPLETED = "completed"  # output delivered to the future
+    FAILED = "failed"        # worker raised; exception delivered
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int                         # monotonically increasing id
+    x: Any                           # one sample, shape (...) without batch dim
+    arrival_t: float                 # clock() at submission
+    deadline_t: float                # absolute SLO deadline (EDF key)
+    state: RequestState = RequestState.CREATED
+
+    # admission results
+    model_id: int = -1               # selected zoo model
+    weights: Any = None              # mux weights (N,) for this request
+    flops: float = 0.0               # Eq. 14 metered cost of the selection
+
+    # lifecycle timestamps (clock() seconds; 0 = not reached)
+    admitted_t: float = 0.0
+    batched_t: float = 0.0
+    started_t: float = 0.0
+    finished_t: float = 0.0
+
+    output: Any = None
+    future: Optional[asyncio.Future] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def queue_latency(self) -> float:
+        """Admission to model-step start."""
+        return self.started_t - self.admitted_t
+
+    @property
+    def service_latency(self) -> float:
+        """Model-step start to completion (includes bucket padding)."""
+        return self.finished_t - self.started_t
+
+    @property
+    def total_latency(self) -> float:
+        return self.finished_t - self.arrival_t
+
+    def missed_deadline(self) -> bool:
+        return self.finished_t > self.deadline_t
+
+    def complete(self, output: Any, finished_t: float) -> None:
+        self.output = output
+        self.finished_t = finished_t
+        self.state = RequestState.COMPLETED
+        if self.future is not None and not self.future.done():
+            self.future.set_result(output)
+
+    def fail(self, exc: BaseException, finished_t: float) -> None:
+        self.finished_t = finished_t
+        self.state = RequestState.FAILED
+        if self.future is not None and not self.future.done():
+            self.future.set_exception(exc)

@@ -1,0 +1,258 @@
+"""MuxScheduler — the async continuous-batching runtime.
+
+One event loop, N+0 tasks: each zoo model gets a worker task that
+sleeps until its queue is worth draining (MicroBatcher policy), forms
+a static-shape bucket, and runs the model step in a thread-pool
+executor so model execution overlaps across models and with the event
+loop.  Admission (mux probe + model selection) runs inline in
+``submit_nowait`` — the probe is the paper's lightweight CNN/probe, so
+scoring on the submission path keeps the design simple and the arrival
+timestamps honest.
+
+Determinism contract: every bucket has the same static shape
+(max_batch_size), so each model runs exactly one compiled program and
+a request's output is bitwise-identical to ``reference_output`` — the
+same model step applied to that request alone in a padded bucket.
+benchmarks/bench_scheduler.py asserts this per request.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import routing
+from repro.serving.scheduler.admission import AdmissionController
+from repro.serving.scheduler.batcher import BatchingPolicy, MicroBatcher, ModelQueue
+from repro.serving.scheduler.metrics import SchedulerMetrics
+from repro.serving.scheduler.request import Request, RequestState
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch_size: int = 8        # bucket capacity per model step
+    max_wait_ms: float = 5.0       # flush a partial batch after this
+    default_slo_ms: float = 100.0  # deadline when submit passes none
+    max_workers: Optional[int] = None  # executor threads (None = N models)
+    probe_batch_size: int = 1      # admission probe shape: arrivals are
+    #   padded/chunked to this so the probe compiles exactly once
+    #   regardless of burst size.  1 is right for open-loop singleton
+    #   submits (a bigger shape taxes every submit — the probe costs
+    #   grow with batch); raise it when traffic arrives in ticks fed
+    #   through submit_many
+
+    def policy(self) -> BatchingPolicy:
+        return BatchingPolicy(max_batch_size=self.max_batch_size,
+                              max_wait_ms=self.max_wait_ms)
+
+
+class MuxScheduler:
+    """Request-level serving runtime over a MuxServer-compatible server.
+
+    The server must expose ``probe_weights(x)``, ``select(w)``,
+    ``model_step(m, bucket)``, ``costs`` and ``num_models`` —
+    MuxServer does; tests may duck-type it.
+    """
+
+    def __init__(self, server, cfg: Optional[SchedulerConfig] = None,
+                 clock=time.monotonic):
+        # clock parameterizes timestamps/deadlines for testability, but
+        # worker waits still run on the event loop's real time — it
+        # must advance with wall clock (a frozen fake clock would keep
+        # max-wait flushes from ever firing)
+        self.server = server
+        self.cfg = cfg or SchedulerConfig()
+        self.clock = clock
+        n = server.num_models
+        self.queues = [ModelQueue(m) for m in range(n)]
+        self.metrics = SchedulerMetrics(np.asarray(server.costs).tolist(),
+                                        clock=clock)
+        self.batcher = MicroBatcher(self.cfg.policy())
+        self.admission = AdmissionController(
+            server, self.queues, self.metrics, clock,
+            probe_batch=self.cfg.probe_batch_size)
+        self._events = [asyncio.Event() for _ in range(n)]
+        self._workers: List[asyncio.Task] = []
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._running = False
+        self._stopping = False
+        self._next_rid = 0
+        self._inflight: set = set()
+
+    # ---- lifecycle ----------------------------------------------------
+    async def start(self) -> None:
+        assert not self._running, "scheduler already started"
+        self._running = True
+        self._stopping = False
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.cfg.max_workers or self.server.num_models,
+            thread_name_prefix="mux-worker")
+        self.metrics.on_start(self.clock())
+        self._workers = [asyncio.ensure_future(self._worker(m))
+                         for m in range(self.server.num_models)]
+
+    async def stop(self, drain: bool = True) -> None:
+        """Graceful shutdown: stop accepting, flush every queued request
+        (partial buckets form immediately), join the workers.  With
+        drain=False, workers are cancelled and still-pending futures
+        are cancelled with them."""
+        if not self._running:
+            return
+        self._stopping = True
+        for ev in self._events:
+            ev.set()
+        if not drain:
+            for w in self._workers:
+                w.cancel()
+        # return_exceptions so one dead worker can't wedge shutdown in a
+        # half-stopped state; re-raise after cleanup completes
+        results = await asyncio.gather(*self._workers,
+                                       return_exceptions=True)
+        for fut in list(self._inflight):
+            if not fut.done():
+                fut.cancel()
+        self._workers = []
+        self.metrics.on_stop(self.clock())
+        self._pool.shutdown(wait=True)
+        self._pool = None
+        self._running = False
+        for res in results:
+            if isinstance(res, Exception):
+                raise res
+
+    async def __aenter__(self) -> "MuxScheduler":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=not any(exc))
+
+    def warmup(self, sample_x) -> None:
+        """Compile the probe and every model step at their serving
+        shapes before traffic arrives (one sample, no batch dim).
+        Serving latency percentiles are meaningless if the first
+        requests pay XLA compilation."""
+        self.admission.score([np.asarray(sample_x)])
+        bucket, _ = routing.pad_bucket(np.asarray(sample_x)[None],
+                                       self.cfg.max_batch_size)
+        for m in range(self.server.num_models):
+            np.asarray(self.server.model_step(m, bucket))
+
+    # ---- submission ---------------------------------------------------
+    def submit_nowait(self, x, *, slo_ms: Optional[float] = None
+                      ) -> asyncio.Future:
+        """Admit one request; returns a future resolving to its output."""
+        return self.submit_many([x], slo_ms=slo_ms)[0]
+
+    def submit_many(self, xs, *, slo_ms: Optional[float] = None
+                    ) -> List[asyncio.Future]:
+        """Admit a batch of arrivals in one call.  Scoring is chunked
+        to cfg.probe_batch_size (default 1), so to actually amortize
+        the probe over a bursty arrival tick, raise probe_batch_size
+        toward the tick size — ceil(k / probe_batch_size) device
+        dispatches run inline on the event loop either way."""
+        if not self._running or self._stopping:
+            raise RuntimeError("scheduler is not running (start() it, or "
+                               "it is stopping): request rejected")
+        now = self.clock()
+        slo = (slo_ms if slo_ms is not None else self.cfg.default_slo_ms)
+        loop = asyncio.get_running_loop()
+        reqs = []
+        for x in xs:
+            req = Request(rid=self._next_rid, x=x, arrival_t=now,
+                          deadline_t=now + slo / 1e3,
+                          future=loop.create_future())
+            self._next_rid += 1
+            self.metrics.on_arrival(req)
+            reqs.append(req)
+        try:
+            self.admission.admit(reqs)
+        except Exception as exc:
+            # deliver through the futures (same contract as a worker
+            # failure) so accounting stays closed: arrived == completed
+            # + failed, and no future is left unresolved
+            t = self.clock()
+            for req in reqs:
+                req.fail(exc, t)
+                self.metrics.on_fail(req)
+            return [req.future for req in reqs]
+        for req in reqs:
+            self._inflight.add(req.future)
+            req.future.add_done_callback(self._inflight.discard)
+            self._events[req.model_id].set()
+        return [req.future for req in reqs]
+
+    async def submit(self, x, *, slo_ms: Optional[float] = None):
+        return await self.submit_nowait(x, slo_ms=slo_ms)
+
+    async def drain(self) -> None:
+        """Wait until every submitted request has completed."""
+        while self._inflight:
+            await asyncio.wait(list(self._inflight))
+
+    # ---- workers ------------------------------------------------------
+    def _run_bucket(self, m: int, bucket) -> np.ndarray:
+        # thread-pool side: run the jitted step and materialize on host
+        return np.asarray(self.server.model_step(m, bucket))
+
+    async def _worker(self, m: int) -> None:
+        queue, event = self.queues[m], self._events[m]
+        loop = asyncio.get_running_loop()
+        capacity = self.cfg.max_batch_size
+        while True:
+            now = self.clock()
+            flush = self._stopping and len(queue) > 0
+            if flush or self.batcher.ready(queue, now):
+                batch = self.batcher.form(queue, now)
+                self.metrics.on_batch(m, len(batch), capacity)
+                for req in batch:
+                    req.state = RequestState.RUNNING
+                    req.started_t = now
+                t0 = self.clock()
+                try:
+                    # form_bucket inside the try: a malformed request
+                    # (e.g. mismatched shape) must fail its batch, not
+                    # kill this worker and strand the model's queue
+                    bucket, _valid = self.batcher.form_bucket(batch)
+                    out = await loop.run_in_executor(
+                        self._pool, self._run_bucket, m, bucket)
+                except Exception as exc:   # deliver, don't kill the loop
+                    t1 = self.clock()
+                    for req in batch:
+                        req.fail(exc, t1)
+                        self.metrics.on_fail(req)
+                    continue
+                t1 = self.clock()
+                self.metrics.on_model_busy(m, t1 - t0)
+                # bucket row i is batch[i]: pad_bucket preserves order
+                for i, req in enumerate(batch):
+                    req.complete(out[i], t1)
+                    self.metrics.on_complete(req)
+                continue
+            if self._stopping:
+                return
+            timeout = self.batcher.time_until_ready(queue, now)
+            try:
+                await asyncio.wait_for(event.wait(), timeout)
+            except asyncio.TimeoutError:
+                pass
+            event.clear()
+
+    # ---- determinism reference ----------------------------------------
+    def reference_assignment(self, x) -> int:
+        """The model id admission selects for a lone request — computed
+        through the exact admission scoring path (padded probe shape),
+        the only shape at which row results are stable."""
+        _w, assign = self.admission.score([np.asarray(x)])
+        return int(assign[0])
+
+    def reference_output(self, x, model_id: int) -> np.ndarray:
+        """The model called directly on one request, at the scheduler's
+        bucket shape — the bitwise reference for scheduler outputs."""
+        bucket, _ = routing.pad_bucket(
+            np.asarray(x)[None], self.cfg.max_batch_size)
+        return np.asarray(self.server.model_step(model_id, bucket))[0]

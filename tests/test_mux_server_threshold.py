@@ -1,0 +1,45 @@
+"""MuxServer threshold routing: selection policy and capacity sizing.
+
+Thresholded hybrid selection concentrates traffic on the cheapest
+clearing model by design, so serve() must size buckets to hold the
+whole batch — a balanced cf*B/N capacity would silently zero-fill the
+overflow."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.mux_server import MuxServer, MuxServerConfig
+
+
+def _server(threshold):
+    # model fns are simple row-wise maps so expected outputs are exact
+    fns = [lambda b: b * 2.0, lambda b: b * 3.0]
+    server = MuxServer(mux_params={}, model_fns=fns, model_costs=[1.0, 4.0],
+                       cfg=MuxServerConfig(threshold=threshold))
+    # deterministic probe: every request is 90% confident in the cheap
+    # model (patched before the first call, i.e. before jit tracing)
+    server._weights = lambda x: jnp.stack(
+        [jnp.full((x.shape[0],), 0.9), jnp.full((x.shape[0],), 0.1)], -1)
+    return server
+
+
+def test_threshold_concentration_keeps_every_request():
+    server = _server(threshold=0.5)
+    x = jnp.arange(24.0).reshape(8, 3)
+    res = server.serve(x)
+    assign = np.asarray(res["assign"])
+    np.testing.assert_array_equal(assign, np.zeros(8))   # all clear -> cheap
+    # balanced capacity (1.5*8/2 = 6) would drop 2; threshold mode keeps 8
+    assert np.asarray(res["kept"]).all()
+    np.testing.assert_allclose(np.asarray(res["output"]),
+                               np.asarray(x) * 2.0)
+    assert res["called_fraction"] == [1.0, 0.0]
+
+
+def test_threshold_fallback_to_largest_keeps_every_request():
+    server = _server(threshold=0.95)                     # nobody clears
+    x = jnp.arange(12.0).reshape(4, 3)
+    res = server.serve(x)
+    np.testing.assert_array_equal(np.asarray(res["assign"]), np.full(4, 1))
+    assert np.asarray(res["kept"]).all()
+    np.testing.assert_allclose(np.asarray(res["output"]),
+                               np.asarray(x) * 3.0)

@@ -1,0 +1,142 @@
+"""Overflow and capacity-edge semantics of the model-level dispatch
+(repro.core.routing) plus the selection/padding primitives the serving
+scheduler shares with it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import routing
+
+
+def _x(b, d=4, seed=0):
+    return jax.random.normal(jax.random.key(seed), (b, d))
+
+
+# ---------------------------------------------------------------------------
+# bucket_by_model / dispatch / combine
+# ---------------------------------------------------------------------------
+
+def test_no_overflow_when_capacity_covers_batch():
+    assign = jnp.array([2, 0, 1, 1, 0, 2, 1, 0])
+    plan = routing.bucket_by_model(assign, num_models=3, capacity=8)
+    assert bool(jnp.all(plan["kept"]))
+    x = _x(8)
+    buckets = routing.dispatch(x, plan, 3, 8)
+    out = routing.combine(buckets, plan)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_overflow_drops_excess_and_fills():
+    # 5 requests all want model 1; capacity 2 keeps exactly 2
+    assign = jnp.array([1, 1, 1, 1, 1])
+    plan = routing.bucket_by_model(assign, num_models=3, capacity=2)
+    assert int(plan["kept"].sum()) == 2
+    x = _x(5)
+    buckets = routing.dispatch(x, plan, 3, 2)
+    # dropped requests land in the overflow slot, not in any bucket
+    out = routing.combine(buckets, plan, fill_value=-7.0)
+    kept = np.asarray(plan["kept"])
+    np.testing.assert_array_equal(np.asarray(out)[~kept],
+                                  np.full((3, 4), -7.0))
+    np.testing.assert_array_equal(np.asarray(out)[kept],
+                                  np.asarray(x)[kept])
+
+
+def test_capacity_below_fair_share():
+    # B=9 over N=3 models, capacity 1 < B/N: at most one kept per model
+    assign = jnp.array([0, 0, 0, 1, 1, 1, 2, 2, 2])
+    plan = routing.bucket_by_model(assign, num_models=3, capacity=1)
+    kept = np.asarray(plan["kept"])
+    assert kept.sum() == 3
+    for m in range(3):
+        assert kept[np.asarray(assign) == m].sum() == 1
+
+
+def test_combine_round_trip_identity_per_model():
+    assign = jnp.array([0, 1, 0, 2, 1])
+    x = _x(5)
+    plan = routing.bucket_by_model(assign, 3, 4)
+    buckets = routing.dispatch(x, plan, 3, 4)
+    # each bucket holds its model's requests in arrival order
+    for m in range(3):
+        mine = np.asarray(x)[np.asarray(assign) == m]
+        np.testing.assert_array_equal(np.asarray(buckets[m])[:len(mine)],
+                                      mine)
+    out = routing.combine(buckets, plan)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_multiplexed_apply_overflow_kept_flags():
+    x = _x(6)
+    assign = jnp.array([0, 0, 0, 0, 1, 1])
+    fns = [lambda b: b * 2.0, lambda b: b * 3.0]
+    out, kept = routing.multiplexed_apply(x, assign, fns, capacity=2)
+    kept = np.asarray(kept)
+    assert kept.sum() == 4               # 2 kept per model
+    scale = np.where(np.asarray(assign) == 0, 2.0, 3.0)[:, None]
+    np.testing.assert_allclose(np.asarray(out)[kept],
+                               (np.asarray(x) * scale)[kept])
+
+
+# ---------------------------------------------------------------------------
+# pad_bucket: device path vs host mirror
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,capacity", [(1, 4), (3, 4), (4, 4), (6, 4)])
+def test_pad_bucket_host_matches_device(k, capacity):
+    x = _x(k, seed=k)
+    bucket_dev, valid_dev = routing.pad_bucket(x, capacity)
+    bucket_host, valid_host = routing.pad_bucket_host(list(np.asarray(x)),
+                                                      capacity)
+    np.testing.assert_array_equal(np.asarray(bucket_dev), bucket_host)
+    np.testing.assert_array_equal(np.asarray(valid_dev), valid_host)
+    # row i of the bucket is request i (order preserved)
+    n_real = min(k, capacity)
+    np.testing.assert_array_equal(bucket_host[:n_real],
+                                  np.asarray(x)[:n_real])
+    assert valid_host[:n_real].all() and not valid_host[n_real:].any()
+
+
+def test_pad_bucket_host_rejects_empty():
+    with pytest.raises(ValueError, match="at least one request"):
+        routing.pad_bucket_host([], 4)
+
+
+# ---------------------------------------------------------------------------
+# select_model: argmax and thresholded hybrid selection
+# ---------------------------------------------------------------------------
+
+def test_select_model_argmax_default():
+    w = jnp.array([[0.1, 0.7, 0.2], [0.6, 0.3, 0.1]])
+    costs = jnp.array([1.0, 2.0, 4.0])
+    np.testing.assert_array_equal(
+        np.asarray(routing.select_model(w, costs)), [1, 0])
+
+
+def test_select_model_threshold_prefers_cheapest():
+    costs = jnp.array([1.0, 2.0, 4.0])
+    w = jnp.array([
+        [0.5, 0.3, 0.2],    # cheapest clears 0.4 -> 0
+        [0.1, 0.45, 0.45],  # model 1 is cheapest above 0.4
+        [0.2, 0.3, 0.5],    # only the largest clears -> 2
+        [0.3, 0.3, 0.3],    # nobody clears -> fall back to largest
+    ])
+    np.testing.assert_array_equal(
+        np.asarray(routing.select_model(w, costs, threshold=0.4)),
+        [0, 1, 2, 2])
+
+
+def test_select_model_threshold_unsorted_costs():
+    # costs not in index order: cheapest is index 2
+    costs = jnp.array([4.0, 2.0, 1.0])
+    w = jnp.array([[0.45, 0.45, 0.45], [0.9, 0.05, 0.05]])
+    sel = np.asarray(routing.select_model(w, costs, threshold=0.4))
+    np.testing.assert_array_equal(sel, [2, 0])
+
+
+def test_select_model_jit_traceable():
+    costs = jnp.array([1.0, 2.0])
+    f = jax.jit(lambda w: routing.select_model(w, costs, threshold=0.6))
+    sel = f(jnp.array([[0.7, 0.3], [0.5, 0.5]]))
+    np.testing.assert_array_equal(np.asarray(sel), [0, 1])
