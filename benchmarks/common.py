@@ -136,3 +136,14 @@ def eval_zoo(state) -> Dict[str, Any]:
 def emit(name: str, us_per_call: float, derived: str):
     """The scaffold's CSV contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(name: str, payload: Dict[str, Any], out_dir: str = "results"
+              ) -> str:
+    """Machine-readable sibling of emit(): results/BENCH_<name>.json."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=float)
+    print(f"# wrote {path}")
+    return path

@@ -10,6 +10,7 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   fig6    — contrastive embedding separation        (paper Fig. 3/6)
   mux_kernel — fused router-head microbenchmark     (serving hot path)
   scheduler  — continuous-batching goodput vs load  (serving runtime)
+  paged      — ring vs paged KV decode, mixed lens  (serving memory/runtime)
   roofline   — dry-run roofline table               (EXPERIMENTS §Roofline)
 
 State (trained zoo + muxes) is cached under results/bench_state; set
@@ -50,7 +51,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,fig6,mux_kernel,"
-                         "scheduler,roofline")
+                         "scheduler,paged,roofline")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -80,6 +81,9 @@ def main() -> None:
     if want("scheduler"):
         from benchmarks import bench_scheduler
         bench_scheduler.run()
+    if want("paged"):
+        from benchmarks import bench_paged_decode
+        bench_paged_decode.run()
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.mux_score import mux_score as _mux_pallas
+from repro.kernels.paged_attention import paged_attention as _paged_pallas
 from repro.kernels.selective_scan import selective_scan as _scan_pallas
 
 _FORCE = os.environ.get("REPRO_FORCE_PALLAS", "")  # "interpret" | "tpu" | ""
@@ -43,6 +44,35 @@ def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     from repro.models.attention import blocked_attention
     return blocked_attention(q, k, v, causal=causal, window=window,
                              chunk=chunk, scale=scale, logit_cap=logit_cap)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    window: Optional[int] = None,
+                    chunk: Optional[int] = None,
+                    logit_cap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    k_scales=None, v_scales=None,
+                    v_dim: Optional[int] = None):
+    """Paged decode attention: Pallas kernel on TPU (block-table
+    scalar prefetch, int8 dequant in-kernel), jnp gather oracle
+    elsewhere.  q: (B, H, hd) one token per row; lengths: (B,)."""
+    if use_pallas():
+        return _paged_pallas(q, k_pages, v_pages, block_tables, lengths,
+                             window=window, chunk=chunk, logit_cap=logit_cap,
+                             scale=scale, k_scales=k_scales,
+                             v_scales=v_scales, v_dim=v_dim,
+                             interpret=_interpret())
+    # oracle fallback (the models' own jnp path is
+    # attention.paged_decode_attention; this keeps the dispatcher
+    # usable standalone): dequantize slabs, then full-materialisation
+    if k_pages.dtype == jnp.int8:
+        k_pages = k_pages.astype(jnp.bfloat16) * k_scales[..., None]
+        v_pages = v_pages.astype(jnp.bfloat16) * v_scales[..., None]
+    if v_dim is not None:
+        v_pages = v_pages[..., :v_dim]
+    return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   lengths, window=window, chunk=chunk,
+                                   scale=scale, logit_cap=logit_cap)
 
 
 def selective_scan(x, dt, b_mat, c_mat, a_mat, d_vec):

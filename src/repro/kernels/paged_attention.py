@@ -1,0 +1,174 @@
+"""Pallas TPU paged-attention decode kernel (block-table gather, GQA,
+sliding-window / chunked masks, logit soft-capping, int8 pages).
+
+One query token per batch row attends over that row's KV pages.  Pages
+are pool-wide slabs (num_pages, page_size, K, hd) shared by every
+request; each row's ordered page list arrives as a block-table row that
+is **scalar-prefetched** (pltpu.PrefetchScalarGridSpec) so the BlockSpec
+index_map can steer the K/V DMA to the right page before the kernel
+body runs — the gather never materialises a contiguous per-row KV copy
+in HBM.
+
+Grid: (batch, q_heads, num_pages_per_row).  The trailing grid dimension
+is sequential on TPU, so the online-softmax running state (m, l, acc)
+lives in VMEM scratch and is carried across a row's pages, exactly like
+the flash kernel carries it across KV blocks.  Pages past a row's
+length (and outside its window/chunk span) are skipped with pl.when on
+the *dynamic* per-row length — short rows in a mixed-length decode
+batch do proportionally less work, which is the point of paging.
+
+When the pool stores int8, per-(slot, head) bf16 scales ride along as
+two more page slabs and K/V are dequantized in-kernel after the DMA —
+HBM traffic stays at the quantized width.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                       scale: float, window: Optional[int],
+                       chunk: Optional[int], logit_cap: Optional[float],
+                       page_size: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+        ks_ref = vs_ref = None
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nm = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    q_pos = length - 1
+    k_first = i * page_size
+    k_last = k_first + page_size - 1
+
+    # dynamic per-row liveness: skip pages past the row's length and
+    # outside its window/chunk span
+    live = k_first < length
+    if window is not None:
+        live &= k_last > q_pos - window
+    if chunk is not None:
+        live &= k_last >= (q_pos // chunk) * chunk
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (1, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (ps, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # (ps, vd)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None].astype(jnp.float32)
+            v = v * vs_ref[0, :, 0][:, None].astype(jnp.float32)
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        if logit_cap is not None:
+            sc = jnp.tanh(sc / logit_cap) * logit_cap
+        kv_pos = k_first + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        mask = kv_pos < length
+        if window is not None:
+            mask &= kv_pos > q_pos - window
+        if chunk is not None:
+            mask &= kv_pos >= (q_pos // chunk) * chunk
+        sc = jnp.where(mask, sc, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=1))
+        p = jnp.exp(sc - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(i == nm - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    window: Optional[int] = None,
+                    chunk: Optional[int] = None,
+                    logit_cap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    k_scales=None, v_scales=None,
+                    v_dim: Optional[int] = None,
+                    interpret: bool = False):
+    """q: (B, H, hd); k_pages/v_pages: (P, page_size, K, hd|vd);
+    block_tables: (B, M) int32; lengths: (B,) int32 visible tokens per
+    row (query at lengths - 1).  k_scales/v_scales: (P, page_size, K)
+    bf16 when the pages are int8.  ``v_dim`` reads only the leading
+    v_dim features of each v page — with v_pages=k_pages that serves
+    absorbed-MLA decode, where v is the latent's first kv_lora features
+    of the same slab, without a second page store.
+    Returns (B, H, vd) in q.dtype.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, h, hd = q.shape
+    num_pages, ps, kk, _ = k_pages.shape
+    vd = v_dim if v_dim is not None else v_pages.shape[-1]
+    m = block_tables.shape[1]
+    g = h // kk
+    scale_ = scale if scale is not None else 1.0 / math.sqrt(hd)
+    quantized = k_pages.dtype == jnp.int8
+    block_tables = block_tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_attn_kernel, scale=scale_, window=window, chunk=chunk,
+        logit_cap=logit_cap, page_size=ps, quantized=quantized)
+
+    # index maps see the grid indices then the scalar-prefetch refs; the
+    # page id for (row b, step i) steers the K/V (and scale) DMAs
+    in_specs = [
+        pl.BlockSpec((1, 1, hd), lambda b_, h_, i, bt, ln: (b_, h_, 0)),
+        pl.BlockSpec((1, ps, 1, hd),
+                     lambda b_, h_, i, bt, ln: (bt[b_, i], 0, h_ // g, 0)),
+        pl.BlockSpec((1, ps, 1, vd),
+                     lambda b_, h_, i, bt, ln: (bt[b_, i], 0, h_ // g, 0)),
+    ]
+    args = [q, k_pages, v_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, ps, 1),
+                         lambda b_, h_, i, bt, ln: (bt[b_, i], 0, h_ // g)),
+            pl.BlockSpec((1, ps, 1),
+                         lambda b_, h_, i, bt, ln: (bt[b_, i], 0, h_ // g)),
+        ]
+        args += [k_scales, v_scales]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, m),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, vd),
+                               lambda b_, h_, i, bt, ln: (b_, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, vd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, vd), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, *args)

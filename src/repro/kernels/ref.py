@@ -49,6 +49,45 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        window: Optional[int] = None,
+                        chunk: Optional[int] = None,
+                        scale: Optional[float] = None,
+                        logit_cap: Optional[float] = None) -> jnp.ndarray:
+    """Naive paged decode attention: gather pages via block table, mask
+    by per-row length, full-materialisation softmax.
+
+    q: (B, H, hd) one query token per row; k_pages/v_pages:
+    (P, page_size, K, hd|vd) pool-wide page slabs; block_tables: (B, M)
+    int32 page ids ordered by logical position; lengths: (B,) visible
+    tokens per row (the query sits at lengths - 1).
+    Returns (B, H, vd) in q.dtype.
+    """
+    b, h, hd = q.shape
+    ps, kk = k_pages.shape[1], k_pages.shape[2]
+    g = h // kk
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = k_pages[block_tables].reshape(b, -1, kk, k_pages.shape[-1])
+    v = v_pages[block_tables].reshape(b, -1, kk, v_pages.shape[-1])
+    t = k.shape[1]
+    qr = (q * scale).reshape(b, kk, g, hd)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qr, k,
+                    preferred_element_type=jnp.float32)
+    if logit_cap is not None:
+        sc = jnp.tanh(sc / logit_cap) * logit_cap
+    kv_pos = jnp.arange(t)[None, :]                         # (1, T)
+    q_pos = lengths[:, None] - 1                            # (B, 1)
+    mask = kv_pos < lengths[:, None]
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    if chunk is not None:
+        mask &= kv_pos >= (q_pos // chunk) * chunk
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkv->bkgv", p, v.astype(p.dtype))
+    return out.reshape(b, h, v.shape[-1]).astype(q.dtype)
+
+
 def selective_scan_ref(x, dt, b_mat, c_mat, a_mat, d_vec
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sequential-in-time Mamba-1 recurrence (fp32).

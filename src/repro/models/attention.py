@@ -12,9 +12,14 @@ scans KV blocks with an online-softmax accumulator (full-causal) or
 scans Q blocks against a banded KV slice (windowed/chunked), so the HLO
 the dry-run analyses has flash-equivalent memory *and* FLOPs.
 
-Decode uses a ring-buffer KV cache of capacity = attention span.  Each
-cache slot remembers the absolute position it holds (``pos_buf``) which
-makes masking uniform across full/window/chunked variants.
+Decode uses one of two cache layouts behind the same masking core
+(``masked_decode_attention``):
+  * ring buffer of capacity = attention span, one slab per batch slot;
+    each slot remembers the absolute position it holds (``pos_buf``)
+  * paged pool — (num_pages, page_size) slabs shared by all requests,
+    addressed through per-row block tables, with per-row query
+    positions so a decode batch can mix requests at different lengths
+    (token-level continuous batching; see repro.serving.kv_cache).
 """
 from __future__ import annotations
 
@@ -363,6 +368,49 @@ def cache_prefill(cache: Params, k, v, start: int = 0) -> Params:
     return out
 
 
+def masked_decode_attention(q, k, v, kv_pos, pos, *,
+                            window: Optional[int] = None,
+                            chunk: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            logit_cap: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention over an explicit KV view — the one mask
+    every decode variant (ring or paged; full/window/chunked/GQA/MLA)
+    routes through.
+
+    q: (B, 1, H, hd); k: (B, T, K, hd); v: (B, T, K, vd).
+    kv_pos: absolute position held by each KV slot, (T,) shared or
+    (B, T) per row; -1 marks an empty slot.
+    pos: query position(s) — scalar (whole batch at one position, the
+    ring path) or (B,) (token-level continuous batching, the paged
+    path).  Returns (B, 1, H, vd).
+    """
+    b, one, h, hd = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qr = (q * scale).reshape(b, kk, g, hd)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qr, k,
+                    preferred_element_type=jnp.float32)
+    if logit_cap is not None:
+        sc = softcap(sc, logit_cap)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos.reshape((-1,)), (b,))          # (B,)
+    kv_pos = jnp.asarray(kv_pos, jnp.int32)
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None]                                   # (1|B, T)
+    lower = jnp.zeros((b,), jnp.int32)
+    if window is not None:
+        lower = pos_b - window + 1
+    if chunk is not None:
+        lower = (pos_b // chunk) * chunk
+    mask = ((kv_pos >= 0) & (kv_pos <= pos_b[:, None])
+            & (kv_pos >= lower[:, None]))                       # (B, T)
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkv->bkgv", p, v)
+    return out.reshape(b, 1, h, v.shape[-1]).astype(q.dtype)
+
+
 def decode_attention(q, cache: Params, pos, *, window: Optional[int] = None,
                      chunk: Optional[int] = None, scale: Optional[float] = None,
                      logit_cap: Optional[float] = None) -> jnp.ndarray:
@@ -372,29 +420,145 @@ def decode_attention(q, cache: Params, pos, *, window: Optional[int] = None,
     cache must already contain the query token's own k/v).
     Returns (B, 1, H, vd).
     """
-    b, one, h, hd = q.shape
-    kk = cache["k"].shape[2]
-    g = h // kk
-    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
-    qr = (q * scale).reshape(b, kk, g, hd)
     k, v = _dequant_kv(cache)
     k = shard(k, "batch", "cache_seq", "kv_heads", None)
     v = shard(v, "batch", "cache_seq", "kv_heads", None)
-    sc = jnp.einsum("bkgd,btkd->bkgt", qr, k,
-                    preferred_element_type=jnp.float32)
-    if logit_cap is not None:
-        sc = softcap(sc, logit_cap)
-    slot_pos = cache["pos"]
-    lower = 0
-    if window is not None:
-        lower = pos - window + 1
-    if chunk is not None:
-        lower = (pos // chunk) * chunk
-    mask = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos >= lower)
-    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
-    p = jax.nn.softmax(sc, axis=-1)
-    out = jnp.einsum("bkgt,btkv->bkgv", p, v)
-    return out.reshape(b, 1, h, v.shape[-1]).astype(q.dtype)
+    return masked_decode_attention(q, k, v, cache["pos"], pos, window=window,
+                                   chunk=chunk, scale=scale,
+                                   logit_cap=logit_cap)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache + decode attention
+# ---------------------------------------------------------------------------
+#
+# Pages are pool-wide, NOT per batch row: cache["k"] is
+# (num_pages, page_size, K, hd) and a request owns an ordered list of
+# pages recorded in its block-table row.  Logical token j of a request
+# lives in page block_table[j // page_size] at slot j % page_size, so a
+# gathered view is position-ordered and the mask is simply
+# kv_pos = arange(T) against the per-row query position — the same
+# masked_decode_attention core the ring path uses.  Page 0 is reserved
+# as a scratch page: padding block-table entries and inactive batch
+# rows point at it, and everything they write there is masked out.
+
+SCRATCH_PAGE = 0
+
+
+def init_paged_kv_cache(num_pages: int, page_size: int, num_kv_heads: int,
+                        head_dim: int, *, v_head_dim: Optional[int] = None,
+                        dtype=jnp.bfloat16) -> Params:
+    """Pool-wide paged KV store.  dtype=int8 stores quantized k/v with
+    per-(slot, head) max-abs scales, mirroring the ring cache."""
+    v_hd = v_head_dim or head_dim
+    if isinstance(dtype, str):
+        dtype = jnp.dtype(dtype)
+    cache = {
+        "k": jnp.zeros((num_pages, page_size, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((num_pages, page_size, num_kv_heads, v_hd), dtype),
+    }
+    if dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((num_pages, page_size, num_kv_heads),
+                                     jnp.bfloat16)
+        cache["v_scale"] = jnp.zeros((num_pages, page_size, num_kv_heads),
+                                     jnp.bfloat16)
+    return cache
+
+
+def paged_cache_insert(cache: Params, k_new, v_new, block_tables,
+                       pos) -> Params:
+    """Insert one token per row: k/v (B, 1, K, hd) at per-row position
+    ``pos`` (B,) via ``block_tables`` (B, M).  Inactive rows should
+    point at SCRATCH_PAGE; colliding scratch writes are harmless."""
+    ps = cache["k"].shape[1]
+    pos = jnp.asarray(pos, jnp.int32).reshape((-1,))
+    page = jnp.take_along_axis(block_tables, (pos // ps)[:, None],
+                               axis=1)[:, 0]                    # (B,)
+    slot = pos % ps
+    out = dict(cache)
+    if cache["k"].dtype == jnp.int8:
+        kq, ks = _quantize(k_new, jnp.int8)
+        vq, vs = _quantize(v_new, jnp.int8)
+        out["k_scale"] = cache["k_scale"].at[page, slot].set(ks[:, 0])
+        out["v_scale"] = cache["v_scale"].at[page, slot].set(vs[:, 0])
+        k_new, v_new = kq, vq
+    out["k"] = cache["k"].at[page, slot].set(
+        k_new[:, 0].astype(cache["k"].dtype))
+    out["v"] = cache["v"].at[page, slot].set(
+        v_new[:, 0].astype(cache["v"].dtype))
+    return out
+
+
+def paged_cache_prefill(cache: Params, k, v, block_tables,
+                        start: int = 0) -> Params:
+    """Write S tokens (B, S, K, hd) at positions start..start+S-1 of
+    each row's block-table mapping (prefill into pages)."""
+    ps = cache["k"].shape[1]
+    s = k.shape[1]
+    positions = (start + jnp.arange(s)).astype(jnp.int32)       # (S,)
+    page = jnp.take_along_axis(block_tables, positions[None] // ps,
+                               axis=1)                          # (B, S)
+    slot = jnp.broadcast_to(positions[None] % ps, page.shape)
+    out = dict(cache)
+    if cache["k"].dtype == jnp.int8:
+        kq, ks = _quantize(k, jnp.int8)
+        vq, vs = _quantize(v, jnp.int8)
+        out["k_scale"] = cache["k_scale"].at[page, slot].set(ks)
+        out["v_scale"] = cache["v_scale"].at[page, slot].set(vs)
+        k, v = kq, vq
+    out["k"] = cache["k"].at[page, slot].set(k.astype(cache["k"].dtype))
+    out["v"] = cache["v"].at[page, slot].set(v.astype(cache["v"].dtype))
+    return out
+
+
+def gather_pages(pages, block_tables):
+    """pages (P, ps, ...) gathered to a per-row view (B, M * ps, ...)."""
+    g = pages[block_tables]                       # (B, M, ps, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_gather_kv(cache: Params, block_tables):
+    """Block-table gather of a paged cache -> (k, v) in compute
+    precision, (B, T, K, hd) with T = M * page_size (dequantized when
+    the pool stores int8)."""
+    k = gather_pages(cache["k"], block_tables)
+    v = gather_pages(cache["v"], block_tables)
+    if k.dtype == jnp.int8:
+        k = k.astype(jnp.bfloat16) * gather_pages(cache["k_scale"],
+                                                  block_tables)[..., None]
+        v = v.astype(jnp.bfloat16) * gather_pages(cache["v_scale"],
+                                                  block_tables)[..., None]
+    return k, v
+
+
+def paged_decode_attention(q, cache: Params, block_tables, pos, *,
+                           window: Optional[int] = None,
+                           chunk: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           logit_cap: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention over a paged pool via per-row block tables.
+
+    q: (B, 1, H, hd); block_tables: (B, M) int32 page ids; pos: (B,)
+    per-row query positions (each row's k/v already inserted).
+    On TPU this lowers to the Pallas paged-attention kernel (block
+    table scalar-prefetched, pages gathered page-by-page); elsewhere it
+    runs the gather + shared-mask jnp path.  Returns (B, 1, H, vd).
+    """
+    from repro.kernels import ops as kops
+    if kops.use_pallas():
+        lengths = jnp.asarray(pos, jnp.int32).reshape((-1,)) + 1
+        out = kops.paged_attention(
+            q[:, 0], cache["k"], cache["v"], block_tables, lengths,
+            window=window, chunk=chunk, scale=scale, logit_cap=logit_cap,
+            k_scales=cache.get("k_scale"), v_scales=cache.get("v_scale"))
+        return out[:, None]
+    k, v = paged_gather_kv(cache, block_tables)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    return masked_decode_attention(q, k, v, kv_pos, pos, window=window,
+                                   chunk=chunk, scale=scale,
+                                   logit_cap=logit_cap)
 
 
 def attention_span(kind: str, seq_len: int, *, window: Optional[int] = None,

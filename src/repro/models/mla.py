@@ -18,7 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import (blocked_attention, cache_insert,
-                                    cache_prefill, decode_attention)
+                                    cache_prefill, decode_attention,
+                                    gather_pages, masked_decode_attention,
+                                    paged_cache_insert, paged_cache_prefill)
 from repro.models.layers import apply_norm, apply_rope, dense_init, init_norm
 from repro.sharding.partition import shard
 
@@ -64,7 +66,8 @@ def _project_q(params: Params, x, *, num_heads: int, d_nope: int, d_rope: int,
 
 def mla_prefill(params: Params, x, *, num_heads: int, q_lora: int, kv_lora: int,
                 d_nope: int, d_rope: int, v_head_dim: int, rope_theta: float,
-                positions, cache: Params = None, inner_remat: bool = False):
+                positions, cache: Params = None, inner_remat: bool = False,
+                block_tables=None):
     """Training / prefill forward.  Returns (out (B,S,D), new_cache)."""
     del q_lora
     b, s, _ = x.shape
@@ -87,28 +90,40 @@ def mla_prefill(params: Params, x, *, num_heads: int, q_lora: int, kv_lora: int,
     new_cache = None
     if cache is not None:
         latent = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
-        new_cache = cache_prefill(cache, latent, latent[..., :1], start=0)
-        new_cache = {"k": new_cache["k"], "v": new_cache["v"], "pos": new_cache["pos"]}
+        if block_tables is not None:
+            new_cache = paged_cache_prefill(cache, latent, latent[..., :1],
+                                            block_tables, start=0)
+        else:
+            new_cache = cache_prefill(cache, latent, latent[..., :1], start=0)
+            new_cache = {"k": new_cache["k"], "v": new_cache["v"],
+                         "pos": new_cache["pos"]}
     return out, new_cache
 
 
 def mla_decode(params: Params, x, cache: Params, pos, *, num_heads: int,
                kv_lora: int, d_nope: int, d_rope: int, v_head_dim: int,
-               rope_theta: float):
-    """Absorbed single-token decode.  cache['k']: (B, cap, 1, kv_lora+d_rope).
+               rope_theta: float, block_tables=None):
+    """Absorbed single-token decode.  cache['k']: (B, cap, 1, kv_lora+d_rope)
+    (ring), or with ``block_tables`` (B, M) a paged latent pool
+    (P, page_size, 1, kv_lora+d_rope) with per-row positions ``pos`` (B,).
 
     Returns (out (B,1,D), new_cache).
     """
     b, one, _ = x.shape
     h = num_heads
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape((-1, 1)), (b, 1))
     q_nope, q_rope = _project_q(params, x, num_heads=h, d_nope=d_nope,
                                 d_rope=d_rope, positions=positions,
                                 rope_theta=rope_theta)
     c_kv, k_rope = _project_latent(params, x, kv_lora=kv_lora, d_rope=d_rope,
                                    positions=positions, rope_theta=rope_theta)
     latent = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
-    cache = cache_insert(cache, latent, latent[..., :1], pos)
+    if block_tables is not None:
+        cache = paged_cache_insert(cache, latent, latent[..., :1],
+                                   block_tables, pos)
+    else:
+        cache = cache_insert(cache, latent, latent[..., :1], pos)
 
     # absorb W_uk into q:  (B,1,H,d_nope) x (kv_lora, H, d_nope) -> latent space
     k_up = params["k_up"].astype(x.dtype).reshape(kv_lora, h, d_nope)
@@ -116,10 +131,27 @@ def mla_decode(params: Params, x, cache: Params, pos, *, num_heads: int,
     q_cat = jnp.concatenate([q_abs, q_rope], axis=-1)      # (B,1,H,kv_lora+d_rope)
 
     # MQA over the latent cache; v = the latent's c_kv slice
-    latent_cache = {"k": cache["k"], "v": cache["k"][..., :kv_lora],
-                    "pos": cache["pos"]}
-    out_lat = decode_attention(q_cat, latent_cache, pos,
-                               scale=1.0 / math.sqrt(d_nope + d_rope))
+    if block_tables is not None:
+        from repro.kernels import ops as kops
+        if kops.use_pallas():
+            # v rides as the leading kv_lora features of the same
+            # latent slab (v_dim), so the kernel DMAs each page once
+            lengths = jnp.asarray(pos, jnp.int32).reshape((-1,)) + 1
+            out_lat = kops.paged_attention(
+                q_cat[:, 0], cache["k"], cache["k"], block_tables, lengths,
+                scale=1.0 / math.sqrt(d_nope + d_rope),
+                v_dim=kv_lora)[:, None]
+        else:
+            lat = gather_pages(cache["k"], block_tables)   # (B, T, 1, L)
+            out_lat = masked_decode_attention(
+                q_cat, lat, lat[..., :kv_lora],
+                jnp.arange(lat.shape[1], dtype=jnp.int32), pos,
+                scale=1.0 / math.sqrt(d_nope + d_rope))
+    else:
+        latent_cache = {"k": cache["k"], "v": cache["k"][..., :kv_lora],
+                        "pos": cache["pos"]}
+        out_lat = decode_attention(q_cat, latent_cache, pos,
+                                   scale=1.0 / math.sqrt(d_nope + d_rope))
     # un-absorb W_uv:  (B,1,H,kv_lora) x (kv_lora, H, v_hd)
     v_up = params["v_up"].astype(x.dtype).reshape(kv_lora, h, v_head_dim)
     out = jnp.einsum("bshl,lhv->bshv", out_lat, v_up)

@@ -6,10 +6,13 @@ forward pass is a single ``lax.scan`` over groups, so HLO size and
 compile time are O(P), not O(num_layers) — essential for the 46-64 layer
 configs on the dry-run path.
 
-Three entry points:
+Entry points:
   * ``forward``        (train; full sequence, no cache)
   * ``prefill``        (full sequence, writes KV/SSM caches)
-  * ``decode_step``    (one token, ring-buffer caches)
+  * ``prefill_paged``  (full sequence into a shared paged pool)
+  * ``decode_step``    (one token; ring caches with a shared scalar
+    position, or — via ``block_tables`` — a paged pool with per-row
+    positions so one batch mixes requests at different lengths)
 """
 from __future__ import annotations
 
@@ -132,10 +135,27 @@ def abstract_params(cfg: ModelConfig, dtype: Optional[str] = None):
 # ===========================================================================
 
 def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
-                     seq_len: int, dtype=None) -> Optional[Params]:
+                     seq_len: int, dtype=None, *,
+                     num_pages: Optional[int] = None,
+                     page_size: Optional[int] = None) -> Optional[Params]:
+    """Ring-buffer layer cache by default; pass ``num_pages``/
+    ``page_size`` for the paged-pool variant (pages shared across
+    requests, addressed via block tables — ``batch``/``seq_len`` are
+    then ignored; positions beyond a row's pages are masked, so window/
+    chunked layers use the same pool geometry as full layers)."""
     if dtype is None:
         dtype = jnp.dtype(cfg.kv_cache_dtype)
+    paged = page_size is not None
+    if paged and spec.mixer not in ("attn", "mla"):
+        raise NotImplementedError(
+            f"paged KV cache supports attn/mla mixers, got {spec.mixer!r} "
+            f"(mamba state and cross-attention context are per-request, "
+            f"not token-paged)")
     if spec.mixer == "attn":
+        if paged:
+            return attn.init_paged_kv_cache(
+                num_pages, page_size, cfg.num_kv_heads, cfg.head_dim,
+                v_head_dim=cfg.v_head_dim, dtype=dtype)
         cap = attn.attention_span(spec.attn_kind, seq_len, window=cfg.window,
                                   chunk=cfg.chunk)
         return attn.init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim,
@@ -143,6 +163,10 @@ def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
     if spec.mixer == "mla":
         # latent-cache quantization unsupported: keep bf16 for MLA
         mla_dtype = jnp.bfloat16 if dtype == jnp.int8 else dtype
+        if paged:
+            return attn.init_paged_kv_cache(
+                num_pages, page_size, 1, cfg.kv_lora + cfg.d_rope,
+                v_head_dim=1, dtype=mla_dtype)
         return attn.init_kv_cache(batch, seq_len, 1, cfg.kv_lora + cfg.d_rope,
                                   v_head_dim=1, dtype=mla_dtype)
     if spec.mixer == "mamba":
@@ -160,20 +184,24 @@ def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
 
 
 def init_caches(cfg: ModelConfig, batch: int, seq_len: int,
-                dtype=None) -> Params:
+                dtype=None, *, num_pages: Optional[int] = None,
+                page_size: Optional[int] = None) -> Params:
     g = cfg.num_groups
     caches: Params = {}
     for i, spec in enumerate(cfg.pattern):
-        one = init_layer_cache(spec, cfg, batch, seq_len, dtype)
+        one = init_layer_cache(spec, cfg, batch, seq_len, dtype,
+                               num_pages=num_pages, page_size=page_size)
         caches[f"p{i}"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (g,) + x.shape).copy(), one)
     return caches
 
 
 def abstract_caches(cfg: ModelConfig, batch: int, seq_len: int,
-                    dtype=None):
+                    dtype=None, *, num_pages: Optional[int] = None,
+                    page_size: Optional[int] = None):
     return jax.eval_shape(
-        functools.partial(init_caches, cfg, batch, seq_len, dtype))
+        functools.partial(init_caches, cfg, batch, seq_len, dtype,
+                          num_pages=num_pages, page_size=page_size))
 
 
 # ===========================================================================
@@ -188,8 +216,10 @@ def _attn_scale(cfg: ModelConfig) -> float:
 
 def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
                    *, positions, mode: str, pos=None, cache=None,
-                   image_embeds=None):
-    """Returns (out, new_cache)."""
+                   image_embeds=None, block_tables=None):
+    """Returns (out, new_cache).  ``block_tables`` (B, M) switches the
+    cache path to the paged pool; in decode mode ``pos`` is then a
+    per-row (B,) vector rather than a shared scalar."""
     b, s, _ = x.shape
     inner_remat = cfg.remat == "full_inner" and mode == "train"
     if spec.mixer == "mamba":
@@ -207,10 +237,12 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
                   v_head_dim=cfg.v_head_dim or cfg.head_dim,
                   rope_theta=cfg.rope_theta)
         if mode == "decode":
-            return mla_mod.mla_decode(p["attn"], x, cache, pos, **kw)
+            return mla_mod.mla_decode(p["attn"], x, cache, pos,
+                                      block_tables=block_tables, **kw)
         return mla_mod.mla_prefill(p["attn"], x, q_lora=cfg.q_lora,
                                    positions=positions, cache=cache,
-                                   inner_remat=inner_remat, **kw)
+                                   inner_remat=inner_remat,
+                                   block_tables=block_tables, **kw)
 
     if spec.mixer == "cross_attn":
         ap = p["attn"]
@@ -244,7 +276,8 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
                                qk_norm=cfg.qk_norm)
     if spec.rope and cfg.pos_embed == "rope":
         if mode == "decode":
-            rp = jnp.full((b, 1), pos, jnp.int32)
+            rp = jnp.broadcast_to(
+                jnp.asarray(pos, jnp.int32).reshape((-1, 1)), (b, 1))
         else:
             rp = positions
         q = apply_rope(q, rp, theta=cfg.rope_theta)
@@ -255,10 +288,16 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
     window = cfg.window if spec.attn_kind == "swa" else None
     chunk = cfg.chunk if spec.attn_kind == "chunked" else None
     if mode == "decode":
-        cache = attn.cache_insert(cache, k, v, pos)
-        out = attn.decode_attention(q, cache, pos, window=window, chunk=chunk,
-                                    scale=_attn_scale(cfg),
-                                    logit_cap=cfg.attn_logit_cap)
+        if block_tables is not None:
+            cache = attn.paged_cache_insert(cache, k, v, block_tables, pos)
+            out = attn.paged_decode_attention(
+                q, cache, block_tables, pos, window=window, chunk=chunk,
+                scale=_attn_scale(cfg), logit_cap=cfg.attn_logit_cap)
+        else:
+            cache = attn.cache_insert(cache, k, v, pos)
+            out = attn.decode_attention(q, cache, pos, window=window,
+                                        chunk=chunk, scale=_attn_scale(cfg),
+                                        logit_cap=cfg.attn_logit_cap)
         new_cache = cache
     else:
         out = attn.blocked_attention(q, k, v, causal=True, window=window,
@@ -267,19 +306,24 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
                                      inner_remat=inner_remat)
         new_cache = None
         if cache is not None:
-            new_cache = attn.cache_prefill(cache, k, v, start=0)
+            if block_tables is not None:
+                new_cache = attn.paged_cache_prefill(cache, k, v,
+                                                     block_tables, start=0)
+            else:
+                new_cache = attn.cache_prefill(cache, k, v, start=0)
     return attn.out_project(ap, out), new_cache
 
 
 def _block_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, h,
                    *, positions, mode: str, pos=None, cache=None,
-                   image_embeds=None):
+                   image_embeds=None, block_tables=None):
     """One transformer block.  Returns (h, new_cache, aux_loss)."""
     gated_residual = spec.mixer == "cross_attn"
     mix_in = apply_norm(p["norm1"], h, cfg.norm, cfg.norm_eps)
     out, new_cache = _mixer_forward(p, spec, cfg, mix_in, positions=positions,
                                     mode=mode, pos=pos, cache=cache,
-                                    image_embeds=image_embeds)
+                                    image_embeds=image_embeds,
+                                    block_tables=block_tables)
     # Megatron-SP: constrain the row-parallel output to the seq-sharded
     # layout BEFORE the residual add so XLA emits a reduce-scatter
     # instead of all-reduce + reshard (2x+ the link bytes); §Perf iter
@@ -346,7 +390,7 @@ def unembed(params: Params, cfg: ModelConfig, h):
 
 
 def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
-                 pos=None, caches=None, image_embeds=None):
+                 pos=None, caches=None, image_embeds=None, block_tables=None):
     """Scan over the G pattern groups.  Returns (h, new_caches, aux_sum)."""
     specs = cfg.pattern
 
@@ -361,7 +405,8 @@ def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
                 c = None if group_caches is None else group_caches.get(f"p{i}")
                 hh2, nc, aux = _block_forward(
                     block_params[f"p{i}"], spec, cfg, hh, positions=positions,
-                    mode=mode, pos=pos, cache=c, image_embeds=image_embeds)
+                    mode=mode, pos=pos, cache=c, image_embeds=image_embeds,
+                    block_tables=block_tables)
                 hh = hh2
                 aux_g = aux_g + aux
                 if nc is not None:
@@ -379,9 +424,11 @@ def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
 
 
 def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
-            mode: str = "train", caches=None, pos=None):
+            mode: str = "train", caches=None, pos=None, block_tables=None):
     """Main entry.  mode: train | prefill | decode.
 
+    ``block_tables`` (B, M) routes the cache path through the paged
+    pool; decode ``pos`` is then per-row (B,).
     Returns (hidden (B,S,D) post-final-norm, new_caches, aux_loss).
     """
     if mode == "decode":
@@ -391,12 +438,14 @@ def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
                                      tokens.shape[:2])
     h = embed_tokens(params, cfg, tokens)
     if cfg.pos_embed == "sinusoidal":
-        p = (jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+        p = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape((-1, 1)),
+                              (tokens.shape[0], 1))
              if mode == "decode" else positions)
         h = h + sinusoidal_positions(p, cfg.d_model).astype(h.dtype)
     h, new_caches, aux = _scan_blocks(params, cfg, h, positions=positions,
                                       mode=mode, pos=pos, caches=caches,
-                                      image_embeds=image_embeds)
+                                      image_embeds=image_embeds,
+                                      block_tables=block_tables)
     h = apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
     return h, new_caches, aux
 
@@ -453,12 +502,40 @@ def prefill(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
     return logits, caches
 
 
-def decode_step(params: Params, cfg: ModelConfig, token, caches, pos):
-    """One decode step.  token (B,1) (or (B,1,K)); pos = its position.
+def prefill_paged(params: Params, cfg: ModelConfig, tokens, caches,
+                  block_tables, last_index=None):
+    """Prefill a prompt into pages of a shared pool.
+
+    tokens: (B, S) — S may include right padding (padded slots hold
+    garbage K/V but sit at positions > the live query and are
+    overwritten by decode inserts before ever becoming visible).
+    caches: paged pool from ``init_caches(..., num_pages=, page_size=)``
+    (shared across requests; donate it through jit).
+    block_tables: (B, M) page ids for these rows.
+    last_index: position of the last real prompt token (traced ok);
+    defaults to S - 1.  Returns (next-token logits (B, 1, V), caches).
+    """
+    h, caches, _ = forward(params, cfg, tokens, mode="prefill", caches=caches,
+                           block_tables=block_tables)
+    if last_index is None:
+        h_last = h[:, -1:]
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(
+            h, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+    logits = unembed(params, cfg, h_last)
+    return logits, caches
+
+
+def decode_step(params: Params, cfg: ModelConfig, token, caches, pos, *,
+                block_tables=None):
+    """One decode step.  token (B,1) (or (B,1,K)); pos = its position —
+    a shared scalar on the ring path, or per-row (B,) when
+    ``block_tables`` routes through the paged pool (token-level
+    continuous batching: rows may sit at different positions).
 
     Returns (logits for the next token, updated caches).
     """
     h, caches, _ = forward(params, cfg, token, mode="decode", caches=caches,
-                           pos=pos)
+                           pos=pos, block_tables=block_tables)
     logits = unembed(params, cfg, h)
     return logits, caches

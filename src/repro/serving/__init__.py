@@ -1,6 +1,10 @@
-"""repro.serving — batch engines, the multiplexed server, and the
+"""repro.serving — batch engines (ring + paged KV), the multiplexed
+server, the paged KV-cache pool (repro.serving.kv_cache), and the
 continuous-batching request scheduler (repro.serving.scheduler)."""
 from repro.serving.engine import Engine, ServeConfig
+from repro.serving.kv_cache import (OutOfPages, PagePool, PagedCacheConfig,
+                                    PagedSequence)
 from repro.serving.mux_server import MuxServer, MuxServerConfig
 
-__all__ = ["Engine", "ServeConfig", "MuxServer", "MuxServerConfig"]
+__all__ = ["Engine", "ServeConfig", "MuxServer", "MuxServerConfig",
+           "OutOfPages", "PagePool", "PagedCacheConfig", "PagedSequence"]

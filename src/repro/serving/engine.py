@@ -1,25 +1,41 @@
-"""Batched serving engine: prefill + decode with ring-buffer KV caches.
+"""Batched serving engine: prefill + decode.
 
 One engine serves one model.  The multiplexed front-end (the paper's
 contribution) lives in repro.serving.mux_server and composes N engines.
+
+Two cache disciplines:
+  * ``generate`` — the classic fixed-shape path: one ring-buffer KV
+    slab per batch slot, every request in the batch at the same
+    position.  Memory = max_len x batch regardless of actual lengths.
+  * ``init_paged`` + ``prefill_into_pages`` / ``decode_step_batch`` —
+    the paged path: KV lives in a pool of (page_size)-token pages
+    shared by all in-flight requests (repro.serving.kv_cache.PagePool),
+    each request holds ceil(tokens/page_size) pages addressed through a
+    block-table row, and a decode batch mixes requests at *different*
+    positions (per-row pos vector).  This is what the token-level
+    continuous-batching scheduler drives: requests prefill into free
+    pages, join the running decode batch, and free their pages the
+    step they finish.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
+from repro.serving.kv_cache import PagePool, PagedSequence
 from repro.sharding.partition import axis_rules
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_len: int = 256                  # cache capacity
+    max_len: int = 256                  # cache capacity per request
     temperature: float = 0.0            # 0 = greedy
     seed: int = 0
 
@@ -50,11 +66,49 @@ class Engine:
             self._prefill = jax.jit(prefill_fn)
             self._decode = jax.jit(decode_fn, donate_argnums=(2,))
 
+        # paged state (populated by init_paged)
+        self.pool: Optional[PagePool] = None
+        self._paged_caches = None
+        self._paged_prefill = None
+        self._paged_decode = None
+        self._max_pages = 0
+        self._decode_batch = 0
+        self._caches_poisoned = False
+
+    @property
+    def caches_poisoned(self) -> bool:
+        """True once a paged jit call failed at execution time: both
+        paged entry points donate the cache buffers, so such a failure
+        deletes them and the engine cannot serve the paged path again
+        (rebuild via init_paged).  The scheduler uses this to tell a
+        request-local error from a dead engine."""
+        return self._caches_poisoned
+
+    def _check_capacity(self, p: int, max_new_tokens: int) -> None:
+        if p + max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"prompt length {p} + max_new_tokens {max_new_tokens} "
+                f"exceeds the engine's cache capacity "
+                f"max_len={self.scfg.max_len}; raise ServeConfig.max_len "
+                f"or shorten the request")
+
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def _sample_rows(self, logits, seeds, positions):
+        """Per-row sampling for the paged batch: row i's key is
+        fold_in(key(seeds[i]), positions[i]), so a request's sampled
+        tokens do not depend on which other requests share its batch."""
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        keys = jax.vmap(lambda s, p: jax.random.fold_in(jax.random.key(s), p)
+                        )(jnp.asarray(seeds, jnp.uint32),
+                          jnp.asarray(positions, jnp.int32))
+        return jax.vmap(lambda k, l: jax.random.categorical(
+            k, l / self.scfg.temperature))(keys, logits).astype(jnp.int32)
 
     def generate(self, prompts: jnp.ndarray, *, max_new_tokens: int,
                  image_embeds: Optional[jnp.ndarray] = None) -> Dict[str, Any]:
@@ -63,7 +117,7 @@ class Engine:
         Returns {tokens (B, P+N), prefill_s, decode_s, tokens_per_s}.
         """
         b, p = prompts.shape[:2]
-        assert p + max_new_tokens <= self.scfg.max_len, "cache too small"
+        self._check_capacity(p, max_new_tokens)
         key = jax.random.key(self.scfg.seed)
         t0 = time.time()
         logits, caches = self._prefill(self.params, prompts, image_embeds)
@@ -81,3 +135,156 @@ class Engine:
         tokens = jnp.concatenate(out, axis=1)
         return {"tokens": tokens, "prefill_s": t1 - t0, "decode_s": t2 - t1,
                 "tokens_per_s": b * max_new_tokens / max(t2 - t1, 1e-9)}
+
+    # ------------------------------------------------------------------
+    # Paged path: pool-backed caches, token-level continuous decode
+    # ------------------------------------------------------------------
+    def init_paged(self, *, num_pages: int, page_size: int = 64,
+                   decode_batch: int = 8, dtype=None) -> PagePool:
+        """Allocate the paged KV pool and compile the paged entry
+        points.  ``dtype=None`` honors ``cfg.kv_cache_dtype`` (int8
+        pools store quantized pages, dequantized in-kernel).  The pool
+        is sized in *pages*, not batch slots: memory scales with
+        resident tokens, not max_len x batch."""
+        if self.cfg.num_codebooks:
+            raise NotImplementedError(
+                "paged decode supports single-stream token LMs")
+        self.pool = PagePool(num_pages=num_pages, page_size=page_size)
+        self._max_pages = self.pool.pages_for(self.scfg.max_len)
+        self._decode_batch = decode_batch
+        self._caches_poisoned = False
+        cfg = self.cfg
+        self._paged_caches = tf.init_caches(cfg, 0, 0, dtype,
+                                            num_pages=num_pages,
+                                            page_size=page_size)
+
+        def paged_prefill_fn(p, tokens, caches, bt, last_index):
+            return tf.prefill_paged(p, cfg, tokens, caches, bt, last_index)
+
+        def paged_decode_fn(p, token, caches, bt, pos):
+            return tf.decode_step(p, cfg, token, caches, pos,
+                                  block_tables=bt)
+
+        ctx = axis_rules(self.rules) if self.rules is not None else None
+        if ctx:
+            with ctx:
+                self._paged_prefill = jax.jit(paged_prefill_fn,
+                                              donate_argnums=(2,))
+                self._paged_decode = jax.jit(paged_decode_fn,
+                                             donate_argnums=(2,))
+        else:
+            self._paged_prefill = jax.jit(paged_prefill_fn,
+                                          donate_argnums=(2,))
+            self._paged_decode = jax.jit(paged_decode_fn, donate_argnums=(2,))
+        return self.pool
+
+    @property
+    def decode_batch(self) -> int:
+        """Decode-batch capacity of the paged path (0 before
+        init_paged) — part of the engine's paged-serving contract."""
+        return self._decode_batch
+
+    def prefill_into_pages(self, prompt, *, max_new_tokens: int,
+                           seed: Optional[int] = None) -> PagedSequence:
+        """Admit one request: allocate its pages, prefill the prompt
+        into them, and sample the first token.  The returned sequence
+        can join a running decode batch immediately.
+
+        Raises ValueError if prompt + max_new_tokens exceeds max_len,
+        and OutOfPages (a ValueError) when the pool cannot hold the
+        request — the scheduler treats the latter as backpressure.
+        """
+        if self.pool is None:      # not an assert: must survive python -O
+            raise RuntimeError("no paged KV pool: call init_paged() first")
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1 (prefill always samples the "
+                f"first token), got {max_new_tokens}")
+        prompt = jnp.asarray(prompt, jnp.int32).reshape((-1,))
+        p = prompt.shape[0]
+        if p < 1:
+            raise ValueError("prompt must hold at least one token")
+        self._check_capacity(p, max_new_tokens)
+        pages = self.pool.alloc(self.pool.pages_for(p + max_new_tokens))
+        bt_row = self.pool.block_table(pages, self._max_pages)
+        ps = self.pool.page_size
+        # pad to the allocation's page rounding; pad slots are masked,
+        # then overwritten by decode inserts
+        p_pad = self.pool.pages_for(p) * ps
+        toks = jnp.zeros((1, p_pad), jnp.int32).at[0, :p].set(prompt)
+        seq_seed = self.scfg.seed if seed is None else seed
+        try:
+            logits, self._paged_caches = self._paged_prefill(
+                self.params, toks, self._paged_caches,
+                jnp.asarray(bt_row)[None], jnp.asarray(p - 1, jnp.int32))
+            # materialise INSIDE the guard: jax dispatch is async, so
+            # an execution-time failure of the donating jit call often
+            # surfaces only here
+            tok = int(np.asarray(self._sample_rows(
+                logits[:, 0], np.asarray([seq_seed]), np.asarray([p])))[0])
+        except Exception:
+            # conservatively treat any failure of the donating call as
+            # cache loss (validation errors raise before this point)
+            self._caches_poisoned = True
+            self.pool.free(pages)   # failed admission must not leak pages
+            raise
+        return PagedSequence(pages=pages, block_table=bt_row, prompt_len=p,
+                            pos=p, max_new_tokens=max_new_tokens,
+                            last_token=tok, seed=seq_seed, tokens=[tok])
+
+    def decode_step_batch(self, seqs: Sequence[PagedSequence]) -> np.ndarray:
+        """One decode step for up to ``decode_batch`` running sequences
+        at *different* positions (the token-level continuous batch).
+        Rows beyond len(seqs) are inactive: they write to the scratch
+        page and their samples are discarded.  Advances each sequence
+        in place; returns the sampled tokens (len(seqs),)."""
+        if self.pool is None:
+            raise RuntimeError("no paged KV pool: call init_paged() first")
+        cap = self._decode_batch
+        if len(seqs) > cap:
+            raise ValueError(f"{len(seqs)} sequences > decode_batch={cap}")
+        tokens = np.zeros((cap, 1), np.int32)
+        bt = np.full((cap, self._max_pages), 0, np.int32)
+        pos = np.zeros((cap,), np.int32)
+        seeds = np.zeros((cap,), np.uint32)
+        for i, seq in enumerate(seqs):
+            tokens[i, 0] = seq.last_token
+            bt[i] = seq.block_table
+            pos[i] = seq.pos
+            seeds[i] = np.uint32(seq.seed)
+        try:
+            logits, self._paged_caches = self._paged_decode(
+                self.params, jnp.asarray(tokens), self._paged_caches,
+                jnp.asarray(bt), jnp.asarray(pos))
+            # row i's next token sits at position pos[i] + 1; keying
+            # the sample by (seq.seed, position) keeps a sampled
+            # generation independent of batch composition.  Materialise
+            # inside the guard — async dispatch surfaces jit failures
+            # here, after the caches were already donated.
+            nxt = np.asarray(self._sample_rows(logits[:, 0], seeds, pos + 1))
+        except Exception:
+            self._caches_poisoned = True    # donated buffers are gone
+            raise
+        for i, seq in enumerate(seqs):
+            seq.pos += 1
+            seq.last_token = int(nxt[i])
+            seq.tokens.append(int(nxt[i]))
+        return nxt[:len(seqs)]
+
+    def generate_paged(self, prompt, *, max_new_tokens: int) -> Dict[str, Any]:
+        """Single-request convenience over the paged entry points
+        (prefill -> solo decode batch -> free pages); the reference
+        the scheduler/benchmark compare continuous batching against."""
+        t0 = time.time()
+        seq = self.prefill_into_pages(prompt, max_new_tokens=max_new_tokens)
+        t1 = time.time()
+        try:
+            while not seq.done:
+                self.decode_step_batch([seq])
+            t2 = time.time()
+        finally:
+            self.pool.free(seq.pages)   # a failed decode must not leak
+        prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
+        tokens = np.concatenate([prompt_np, np.asarray(seq.tokens, np.int32)])
+        return {"tokens": tokens, "prefill_s": t1 - t0, "decode_s": t2 - t1,
+                "tokens_per_s": max_new_tokens / max(t2 - t1, 1e-9)}

@@ -1,0 +1,180 @@
+"""Paged KV-cache pool: block-table + free-list page allocator.
+
+The device side of paging lives in repro.models.attention (pool-wide
+page slabs, block-table gather, the shared decode mask) and
+repro.kernels.paged_attention (the TPU kernel).  This module is the
+host side: a per-model ``PagePool`` hands out page ids from a free
+list, tracks peak occupancy, and renders per-request block-table rows;
+``PagedSequence`` is one request's generation state over the pool.
+
+Why pages: the ring-buffer engine reserves ``max_len`` KV slots per
+batch slot, so memory scales with the worst case.  A pool is sized in
+*pages* (num_pages x page_size tokens, shared by every in-flight
+request); a request holds ceil(tokens / page_size) pages for exactly
+as long as it runs, and frees them the step it finishes.  That is what
+lets the continuous-batching scheduler pack short (easy) and long
+(hard) requests onto the same device pool — the serving-side half of
+the paper's multiplexing win.
+
+Page 0 is the scratch page (attention.SCRATCH_PAGE): padding
+block-table entries and inactive decode rows point at it, and nothing
+written there is ever visible through the mask.  The allocator never
+hands it out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.models.attention import SCRATCH_PAGE
+
+
+class OutOfPages(ValueError):
+    """The pool cannot satisfy an allocation.  A ValueError (bad
+    request sizing and pool exhaustion read the same way to a caller
+    validating inputs), but distinct so the scheduler can treat it as
+    backpressure — hold the request until running ones free pages —
+    rather than a permanent rejection."""
+
+
+@dataclasses.dataclass
+class PagedCacheConfig:
+    """Geometry of one model's KV page pool."""
+    num_pages: int                  # total pages incl. the scratch page
+    page_size: int = 64             # tokens per page
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.num_pages < 2:
+            raise ValueError(
+                f"num_pages must be >= 2 (page {SCRATCH_PAGE} is scratch), "
+                f"got {self.num_pages}")
+
+
+class PagePool:
+    """Free-list allocator over one model's page pool (host side only).
+
+    Pages are handed out lowest-id-first so repeated traces allocate
+    deterministically; ``peak_in_use`` records the high-water mark the
+    benchmarks report as the real memory ceiling.
+    """
+
+    def __init__(self, num_pages: int, page_size: int = 64):
+        self.cfg = PagedCacheConfig(num_pages=num_pages, page_size=page_size)
+        # min-heap: lowest-id-first hand-out stays deterministic across
+        # churn at O(log F) per page instead of a sort per free()
+        self._free: List[int] = list(range(SCRATCH_PAGE + 1, num_pages))
+        heapq.heapify(self._free)
+        self._held: set = set()
+        self.peak_in_use = 0
+
+    # ---- geometry -----------------------------------------------------
+    @property
+    def num_pages(self) -> int:
+        return self.cfg.num_pages
+
+    @property
+    def page_size(self) -> int:
+        return self.cfg.page_size
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return len(self._held)
+
+    def pages_for(self, num_tokens: int) -> int:
+        """Pages needed to hold ``num_tokens`` KV entries."""
+        return max(1, -(-int(num_tokens) // self.page_size))
+
+    # ---- alloc / free -------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPages(
+                f"KV page pool exhausted: request needs {n} pages but only "
+                f"{len(self._free)} of {self.num_pages - 1} allocatable "
+                f"pages are free ({self.pages_in_use} held by in-flight "
+                f"requests); raise num_pages, shrink max_new_tokens, or "
+                f"wait for running requests to finish")
+        pages = [heapq.heappop(self._free) for _ in range(n)]
+        self._held.update(pages)
+        self.peak_in_use = max(self.peak_in_use, len(self._held))
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        uniq = set(pages)
+        bad = uniq - self._held
+        # validate (incl. duplicates in one call) before mutating
+        if bad or len(uniq) != len(pages):
+            raise ValueError(
+                f"double free / foreign pages {sorted(bad) or list(pages)}")
+        for pg in pages:
+            self._held.discard(pg)
+            heapq.heappush(self._free, pg)
+
+    def block_table(self, pages: Sequence[int], max_pages: int) -> np.ndarray:
+        """Render an ordered page list as a padded block-table row."""
+        if len(pages) > max_pages:
+            raise ValueError(f"{len(pages)} pages > block table width "
+                             f"{max_pages}")
+        row = np.full((max_pages,), SCRATCH_PAGE, np.int32)
+        row[:len(pages)] = np.asarray(pages, np.int32)
+        return row
+
+    def stats(self) -> Dict[str, int]:
+        return {"num_pages": self.num_pages, "page_size": self.page_size,
+                "pages_in_use": self.pages_in_use, "num_free": self.num_free,
+                "peak_pages_in_use": self.peak_in_use}
+
+
+@dataclasses.dataclass
+class PagedSequence:
+    """One request's generation state over a PagePool.
+
+    ``tokens`` holds generated tokens only (the first comes from
+    prefill); ``pos`` is the position the *next* decode insert writes,
+    i.e. prompt_len + number of decode steps taken.  ``seed`` roots the
+    request's sampling-key chain (the token at position i is sampled
+    with fold_in(key(seed), i)), so a sampled generation is a function
+    of (seed, prompt) alone — independent of batch composition, engine
+    history, and whether it decoded solo or continuously batched.
+    """
+    pages: List[int]
+    block_table: np.ndarray          # (max_pages,) int32, scratch-padded
+    prompt_len: int
+    pos: int
+    max_new_tokens: int
+    last_token: int
+    seed: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
+def pool_bytes_per_page(cfg, page_size: int, dtype=None) -> int:
+    """Device bytes one page costs across every layer of a model
+    (shape-only: computed via eval_shape, nothing is allocated)."""
+    import jax
+    from repro.models import transformer as tf
+    shapes = tf.abstract_caches(cfg, 0, 0, dtype, num_pages=1,
+                                page_size=page_size)
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(shapes))
+
+
+def ring_cache_bytes(cfg, batch: int, max_len: int, dtype=None) -> int:
+    """Device bytes the ring-buffer engine reserves for ``batch``
+    slots of ``max_len`` tokens (the worst-case ceiling paging lifts)."""
+    import jax
+    from repro.models import transformer as tf
+    shapes = tf.abstract_caches(cfg, batch, max_len, dtype)
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(shapes))

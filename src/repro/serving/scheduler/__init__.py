@@ -11,17 +11,28 @@ static-shape buckets, and per-model workers drive the zoo concurrently.
     async with sched:
         y = await sched.submit(x)          # one request in, one result out
     print(sched.metrics.snapshot())
+
+For LLM zoos there is additionally the *token-level* loop
+(PagedLLMScheduler): engines with paged KV pools decode one token per
+step for every running request, new requests prefill into free pages
+and join the running batch mid-generation, and finished requests free
+their pages immediately.
 """
 from repro.serving.scheduler.request import Request, RequestState
-from repro.serving.scheduler.batcher import BatchingPolicy, MicroBatcher, ModelQueue
+from repro.serving.scheduler.batcher import (ActiveSequence, BatchingPolicy,
+                                             DecodeSlots, MicroBatcher,
+                                             ModelQueue)
 from repro.serving.scheduler.admission import AdmissionController
 from repro.serving.scheduler.metrics import LatencyReservoir, SchedulerMetrics
 from repro.serving.scheduler.traffic import TrafficConfig, arrival_times, replay
-from repro.serving.scheduler.runtime import MuxScheduler, SchedulerConfig
+from repro.serving.scheduler.runtime import (MuxScheduler, PagedLLMConfig,
+                                             PagedLLMScheduler,
+                                             SchedulerConfig)
 
 __all__ = [
-    "Request", "RequestState", "BatchingPolicy", "MicroBatcher",
-    "ModelQueue", "AdmissionController", "LatencyReservoir",
-    "SchedulerMetrics", "TrafficConfig", "arrival_times", "replay",
-    "MuxScheduler", "SchedulerConfig",
+    "Request", "RequestState", "ActiveSequence", "BatchingPolicy",
+    "DecodeSlots", "MicroBatcher", "ModelQueue", "AdmissionController",
+    "LatencyReservoir", "SchedulerMetrics", "TrafficConfig", "arrival_times",
+    "replay", "MuxScheduler", "PagedLLMConfig", "PagedLLMScheduler",
+    "SchedulerConfig",
 ]

@@ -1,4 +1,4 @@
-"""Per-model queues and the micro-batch former.
+"""Per-model queues, the micro-batch former, and the decode roster.
 
 ModelQueue is a deadline-ordered (EDF) priority queue of admitted
 requests for one zoo model.  MicroBatcher decides *when* a queue is
@@ -40,6 +40,12 @@ class ModelQueue:
 
     def pop(self) -> Request:
         return heapq.heappop(self._heap)[2]
+
+    def peek(self) -> Request:
+        """Earliest-deadline request without draining it — the
+        continuous-decode admit loop sizes its page reservation off
+        this before committing to the pop."""
+        return self._heap[0][2]
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -110,3 +116,55 @@ class MicroBatcher:
         """
         return routing.pad_bucket_host([req.x for req in batch],
                                        self.policy.max_batch_size)
+
+
+# ---------------------------------------------------------------------------
+# Token-level continuous decode (the paged LLM path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ActiveSequence:
+    """One running generation: the request, its paged state, and the
+    decode-loop iteration at which it joined (so the benchmark can
+    prove a batch mixed requests admitted at different times)."""
+    req: Request
+    seq: Any                      # repro.serving.kv_cache.PagedSequence
+    admit_step: int
+
+
+class DecodeSlots:
+    """Fixed-capacity roster of running generations for one engine —
+    the token-level analogue of MicroBatcher's static bucket.  The
+    device batch shape never changes (Engine.decode_step_batch pads
+    inactive rows onto the scratch page); what changes *between* steps
+    is membership: a new request joins the roster the moment its
+    prefill lands in free pages, and a finished one leaves (freeing
+    its pages) without disturbing the rest of the batch.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._active: List[ActiveSequence] = []
+
+    def __len__(self) -> int:
+        return len(self._active)
+
+    @property
+    def free_count(self) -> int:
+        return self.capacity - len(self._active)
+
+    def join(self, req: Request, seq: Any, admit_step: int) -> ActiveSequence:
+        if not self.free_count:
+            raise RuntimeError("no free decode slot")
+        entry = ActiveSequence(req=req, seq=seq, admit_step=admit_step)
+        self._active.append(entry)
+        return entry
+
+    def active(self) -> List[ActiveSequence]:
+        return list(self._active)
+
+    def retire(self, entry: ActiveSequence) -> None:
+        self._active.remove(entry)
+
+    def admit_steps(self) -> List[int]:
+        return [e.admit_step for e in self._active]

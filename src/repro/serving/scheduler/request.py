@@ -40,6 +40,12 @@ class Request:
     weights: Any = None              # mux weights (N,) for this request
     flops: float = 0.0               # Eq. 14 metered cost of the selection
 
+    # LLM path (token-level continuous decode): generation budget
+    # (0 means "not a generation request" — one-shot model step) and
+    # optional per-request sampling seed (None = engine default)
+    max_new_tokens: int = 0
+    seed: Optional[int] = None
+
     # lifecycle timestamps (clock() seconds; 0 = not reached)
     admitted_t: float = 0.0
     batched_t: float = 0.0

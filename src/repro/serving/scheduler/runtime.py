@@ -1,4 +1,12 @@
-"""MuxScheduler — the async continuous-batching runtime.
+"""MuxScheduler / PagedLLMScheduler — the async continuous-batching
+runtimes.
+
+MuxScheduler serves one-shot model steps (the paper's CNN zoo) at
+request granularity.  PagedLLMScheduler is the *token-level* loop for
+the LLM path: per-engine workers interleave admission (prefill new
+requests into free KV pages — they join the running decode batch at
+their own position) with single-token decode steps over every running
+request, and free a request's pages the step it finishes.
 
 One event loop, N+0 tasks: each zoo model gets a worker task that
 sleeps until its queue is worth draining (MicroBatcher policy), forms
@@ -19,15 +27,18 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import functools
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import routing
+from repro.serving.kv_cache import OutOfPages
 from repro.serving.scheduler.admission import AdmissionController
-from repro.serving.scheduler.batcher import BatchingPolicy, MicroBatcher, ModelQueue
+from repro.serving.scheduler.batcher import (BatchingPolicy, DecodeSlots,
+                                             MicroBatcher, ModelQueue)
 from repro.serving.scheduler.metrics import SchedulerMetrics
 from repro.serving.scheduler.request import Request, RequestState
 
@@ -256,3 +267,360 @@ class MuxScheduler:
         bucket, _ = routing.pad_bucket(
             np.asarray(x)[None], self.cfg.max_batch_size)
         return np.asarray(self.server.model_step(model_id, bucket))[0]
+
+
+# ===========================================================================
+# Token-level continuous decode over paged engines (the LLM path)
+# ===========================================================================
+
+@dataclasses.dataclass
+class PagedLLMConfig:
+    max_new_tokens: int = 32        # generation budget when submit passes none
+    default_slo_ms: float = 5000.0  # deadline when submit passes none
+    max_workers: Optional[int] = None   # executor threads (None = N engines)
+    idle_poll_s: float = 0.05       # fallback wake-up while queues are empty
+
+
+class PagedLLMScheduler:
+    """Token-level continuous-batching runtime over paged Engines.
+
+    Each engine must already be paged (``Engine.init_paged``).  One
+    worker per engine runs the continuous-decode loop:
+
+      admit   pop deadline-ordered requests while a decode slot AND
+              enough free pages exist; prefill each into its pages on
+              the executor — the new request joins the *running* decode
+              batch at its own position, mid-generation of the others
+      step    one ``decode_step_batch`` over every running request
+              (rows at different lengths; that is the paged contract)
+      retire  a finished request frees its pages immediately (they are
+              reusable by the very next admission) and resolves its
+              future with prompt + generated tokens
+
+    Page exhaustion at admission is backpressure, not failure: the
+    request stays queued until running requests retire — except
+    requests that could never fit the pool, which fail fast.
+    """
+
+    def __init__(self, engines: Sequence, cfg: Optional[PagedLLMConfig] = None,
+                 *, select_fn: Optional[Callable[[Any], int]] = None,
+                 costs: Optional[Sequence[float]] = None,
+                 clock=time.monotonic):
+        for e in engines:
+            if e.pool is None:     # not an assert: must survive python -O
+                raise ValueError(
+                    "every engine must have a paged KV pool before it can "
+                    "serve token-level continuous decode: call "
+                    "Engine.init_paged(num_pages=..., page_size=...) first")
+        self.engines = list(engines)
+        self.cfg = cfg or PagedLLMConfig()
+        self.select_fn = select_fn
+        self.clock = clock
+        n = len(self.engines)
+        self.queues = [ModelQueue(m) for m in range(n)]
+        self.slots = [DecodeSlots(e.decode_batch) for e in self.engines]
+        self.metrics = SchedulerMetrics(
+            list(costs) if costs is not None else [1.0] * n, clock=clock)
+        # token-level counters (the benchmark's acceptance evidence)
+        self.decode_batches = 0
+        self.mixed_admission_batches = 0   # batches mixing admit times
+        self.tokens_generated = 0
+        self._events = [asyncio.Event() for _ in range(n)]
+        self._workers: List[asyncio.Task] = []
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._running = False
+        self._stopping = False
+        self._next_rid = 0
+        self._inflight: set = set()
+        self._dead = [False] * n    # engine lost its caches (see _worker)
+
+    # ---- lifecycle ----------------------------------------------------
+    async def start(self) -> None:
+        if self._running:
+            raise RuntimeError("scheduler already started")
+        self._running = True
+        self._stopping = False
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.cfg.max_workers or len(self.engines),
+            thread_name_prefix="paged-llm-worker")
+        self.metrics.on_start(self.clock())
+        self._workers = [asyncio.ensure_future(self._worker(m))
+                         for m in range(len(self.engines))]
+
+    async def stop(self, drain: bool = True) -> None:
+        if not self._running:
+            return
+        self._stopping = True
+        for ev in self._events:
+            ev.set()
+        if not drain:
+            for w in self._workers:
+                w.cancel()
+        results = await asyncio.gather(*self._workers,
+                                       return_exceptions=True)
+        for fut in list(self._inflight):
+            if not fut.done():
+                fut.cancel()
+        self._workers = []
+        self.metrics.on_stop(self.clock())
+        self._pool.shutdown(wait=True)
+        self._pool = None
+        # cancel-path cleanup: sequences stranded in slots by a
+        # no-drain stop must hand their pages back (safe only now —
+        # the executor is drained, so no zombie decode can write into
+        # reclaimed pages).  A drained stop leaves slots empty.
+        t = self.clock()
+        stopped = RuntimeError("scheduler stopped before completion")
+        for m, slots in enumerate(self.slots):
+            for e in slots.active():
+                self.engines[m].pool.free(e.seq.pages)
+                slots.retire(e)
+                e.req.fail(stopped, t)
+                self.metrics.on_fail(e.req)
+            # a no-drain stop also strands never-admitted requests in
+            # the queues: fail them through the normal path so request
+            # state and the failed counter stay consistent
+            while len(self.queues[m]):
+                req = self.queues[m].pop()
+                req.fail(stopped, t)
+                self.metrics.on_fail(req)
+        self._running = False
+        for res in results:
+            if isinstance(res, Exception):
+                raise res
+
+    async def __aenter__(self) -> "PagedLLMScheduler":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=not any(exc))
+
+    def warmup(self, prompt_lens: Sequence[int]) -> None:
+        """Compile prefill at each padded prompt length and the decode
+        step at the batch shape before traffic arrives (the pages a
+        warmup request touches are freed again; garbage it leaves in
+        the pool is never visible through the mask)."""
+        for m, engine in enumerate(self.engines):
+            # clamp so warmup itself always clears the capacity check
+            # (a real prompt near max_len compiles on first use
+            # instead); dedupe AFTER clamping
+            for pl in sorted(set(
+                    min(engine.pool.pages_for(p) * engine.pool.page_size,
+                        engine.scfg.max_len - 2)
+                    for p in prompt_lens)):
+                if pl < 1:
+                    continue
+                seq = engine.prefill_into_pages(
+                    np.zeros((pl,), np.int32), max_new_tokens=2)
+                try:
+                    engine.decode_step_batch([seq])
+                finally:
+                    engine.pool.free(seq.pages)   # never leak warmup pages
+
+    # ---- submission ---------------------------------------------------
+    def _select(self, x) -> int:
+        live = [m for m in range(len(self.engines)) if not self._dead[m]]
+        if not live:
+            raise RuntimeError("all engines are dead (decode failed with "
+                               "donated caches); rebuild the scheduler")
+        if self.select_fn is not None:
+            m = int(self.select_fn(x))
+            if self._dead[m]:
+                raise RuntimeError(f"engine {m} is dead (decode failed)")
+            return m
+        # least-loaded: fewest requests queued + running
+        loads = [len(self.queues[m]) + len(self.slots[m]) for m in live]
+        return live[int(np.argmin(loads))]
+
+    def submit_nowait(self, prompt, *, max_new_tokens: Optional[int] = None,
+                      slo_ms: Optional[float] = None,
+                      seed: Optional[int] = None) -> asyncio.Future:
+        """Admit one generation request; the future resolves to the
+        full token array (prompt + generated).  ``seed`` keys the
+        request's sampling chain when temperature > 0 (None = engine
+        default, i.e. identical prompts sample identically)."""
+        if not self._running or self._stopping:
+            raise RuntimeError("scheduler is not running (start() it, or "
+                               "it is stopping): request rejected")
+        now = self.clock()
+        slo = slo_ms if slo_ms is not None else self.cfg.default_slo_ms
+        loop = asyncio.get_running_loop()
+        req = Request(rid=self._next_rid, x=np.asarray(prompt, np.int32),
+                      arrival_t=now, deadline_t=now + slo / 1e3,
+                      future=loop.create_future(), seed=seed,
+                      max_new_tokens=(max_new_tokens if max_new_tokens
+                                      is not None
+                                      else self.cfg.max_new_tokens))
+        self._next_rid += 1
+        self.metrics.on_arrival(req)
+        m = self._select(req.x)
+        req.model_id = m
+        self.queues[m].push(req, now)
+        self.metrics.on_admit(req)
+        self._inflight.add(req.future)
+        req.future.add_done_callback(self._inflight.discard)
+        self._events[m].set()
+        return req.future
+
+    async def submit(self, prompt, *, max_new_tokens: Optional[int] = None,
+                     slo_ms: Optional[float] = None,
+                     seed: Optional[int] = None):
+        return await self.submit_nowait(prompt, max_new_tokens=max_new_tokens,
+                                        slo_ms=slo_ms, seed=seed)
+
+    async def drain(self) -> None:
+        while self._inflight:
+            await asyncio.wait(list(self._inflight))
+
+    # ---- the continuous-decode loop -----------------------------------
+    def _admissible(self, engine, req: Request) -> bool:
+        """Enough free pages right now?  (Pages for the whole request
+        are reserved at admission, so decode can never OOM mid-flight.)"""
+        need = engine.pool.pages_for(len(req.x) + req.max_new_tokens)
+        return need <= engine.pool.num_free
+
+    def _fits_ever(self, engine, req: Request) -> bool:
+        need = engine.pool.pages_for(len(req.x) + req.max_new_tokens)
+        return need <= engine.pool.num_pages - 1
+
+    async def _worker(self, m: int) -> None:
+        engine = self.engines[m]
+        queue, slots, event = self.queues[m], self.slots[m], self._events[m]
+        loop = asyncio.get_running_loop()
+        step_idx = 0
+        while True:
+            # ---- admit: prefill into free pages, join the batch -----
+            while len(queue) and slots.free_count > 0:
+                nxt = queue.peek()
+                if not self._fits_ever(engine, nxt):
+                    req = queue.pop()
+                    req.fail(OutOfPages(
+                        f"request needs more pages than the whole pool "
+                        f"({len(req.x)} + {req.max_new_tokens} tokens > "
+                        f"{(engine.pool.num_pages - 1) * engine.pool.page_size} "
+                        f"poolable)"), self.clock())
+                    self.metrics.on_fail(req)
+                    continue
+                if not self._admissible(engine, nxt):
+                    break                       # backpressure: wait for frees
+                req = queue.pop()
+                req.state = RequestState.RUNNING
+                req.started_t = self.clock()    # per request, not per sweep
+                prefill_fut = loop.run_in_executor(
+                    self._pool,
+                    functools.partial(engine.prefill_into_pages, req.x,
+                                      max_new_tokens=req.max_new_tokens,
+                                      seed=req.seed))
+                try:
+                    seq = await asyncio.shield(prefill_fut)
+                except asyncio.CancelledError:
+                    # no-drain stop cancelled us mid-prefill; the
+                    # executor call cannot be interrupted and will
+                    # allocate pages for a sequence that never joins a
+                    # slot — wait it out and hand the pages straight
+                    # back before dying
+                    try:
+                        seq = await prefill_fut
+                        engine.pool.free(seq.pages)
+                    except Exception:
+                        pass            # prefill itself failed: nothing held
+                    req.fail(RuntimeError("scheduler stopped before "
+                                          "completion"), self.clock())
+                    self.metrics.on_fail(req)
+                    raise
+                except Exception as exc:
+                    req.fail(exc, self.clock())
+                    self.metrics.on_fail(req)
+                    if engine.caches_poisoned:
+                        # the donating prefill jit failed at execution:
+                        # the engine's caches are gone, same terminal
+                        # state as a decode failure
+                        self._kill_engine(m, exc)
+                        return
+                    continue            # request-local: keep serving
+                entry = slots.join(req, seq, admit_step=step_idx)
+                if seq.done:                # max_new_tokens == 1 edge
+                    self._retire(m, entry, self.clock())
+
+            # ---- step: one token for every running request ----------
+            active = slots.active()
+            if active:
+                if len({e.admit_step for e in active}) > 1:
+                    self.mixed_admission_batches += 1
+                self.decode_batches += 1
+                self.metrics.on_batch(m, len(active), slots.capacity)
+                t0 = self.clock()
+                try:
+                    await loop.run_in_executor(
+                        self._pool, engine.decode_step_batch,
+                        [e.seq for e in active])
+                except Exception as exc:
+                    # decode donates the engine's caches; an execution
+                    # failure deletes them, so the engine cannot serve
+                    # again — fail everything it holds and retire the
+                    # worker rather than failing requests one by one
+                    self._kill_engine(m, exc)
+                    return
+                t1 = self.clock()
+                self.metrics.on_model_busy(m, t1 - t0)
+                self.tokens_generated += len(active)
+                step_idx += 1
+                for e in active:
+                    if e.seq.done:
+                        self._retire(m, e, t1)
+                continue
+
+            if self._stopping and not len(queue):
+                return
+            try:
+                await asyncio.wait_for(event.wait(), self.cfg.idle_poll_s)
+            except asyncio.TimeoutError:
+                pass
+            event.clear()
+
+    def _kill_engine(self, m: int, exc: BaseException) -> None:
+        """Terminal engine failure (donated caches deleted): free every
+        page it holds, fail its running and queued requests, and take
+        it out of the selection rotation."""
+        self._dead[m] = True
+        engine, slots, queue = self.engines[m], self.slots[m], self.queues[m]
+        t = self.clock()
+        for e in slots.active():
+            engine.pool.free(e.seq.pages)
+            slots.retire(e)
+            e.req.fail(exc, t)
+            self.metrics.on_fail(e.req)
+        while len(queue):
+            req = queue.pop()
+            req.fail(RuntimeError(f"engine {m} died (caches lost): {exc}"),
+                     self.clock())
+            self.metrics.on_fail(req)
+
+    def _retire(self, m: int, entry, t: float) -> None:
+        """Finished: free the pages *now* (the next admission can reuse
+        them) and resolve the future."""
+        engine = self.engines[m]
+        engine.pool.free(entry.seq.pages)
+        self.slots[m].retire(entry)
+        req = entry.req
+        # per-token relative cost of the engine that served the request
+        # (same units as metrics.costs, so flops_saved_frac keeps its
+        # Eq. 14 meaning vs always-largest); token counts are reported
+        # separately via tokens_generated
+        req.flops = self.metrics.costs[m]
+        out = np.concatenate([np.asarray(req.x, np.int32),
+                              np.asarray(entry.seq.tokens, np.int32)])
+        req.complete(out, t)
+        self.metrics.on_complete(req)
+
+    # ---- report -------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        snap = self.metrics.snapshot()
+        snap.update({
+            "decode_batches": self.decode_batches,
+            "mixed_admission_batches": self.mixed_admission_batches,
+            "tokens_generated": self.tokens_generated,
+            "pools": [e.pool.stats() for e in self.engines],
+        })
+        return snap

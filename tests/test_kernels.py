@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mux_score import mux_score
+from repro.kernels.paged_attention import paged_attention
 from repro.kernels.selective_scan import selective_scan
 
 KEY = jax.random.key(0)
@@ -36,6 +37,77 @@ def test_flash_attention_sweep(b, s, t, h, k, hd, vd, window, chunk, cap,
     tol = 2e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize(
+    "b,h,k,hd,vd,pages,ps,m,window,chunk,cap",
+    [
+        (3, 4, 2, 16, 16, 10, 8, 4, None, None, None),   # GQA
+        (2, 4, 1, 32, 32, 8, 4, 5, 7, None, None),       # MQA + window
+        (1, 8, 2, 16, 8, 12, 8, 3, None, 6, None),       # chunked, vd != hd
+        (2, 2, 2, 16, 16, 6, 16, 2, None, None, 25.0),   # softcap
+    ])
+def test_paged_attention_sweep(b, h, k, hd, vd, pages, ps, m, window, chunk,
+                               cap):
+    """Pallas paged decode (interpret) vs the gather oracle: per-row
+    lengths, block-table indirection, window/chunk masks."""
+    kq, kk, kv, kt = jax.random.split(KEY, 4)
+    q = jax.random.normal(kq, (b, h, hd))
+    k_pages = jax.random.normal(kk, (pages, ps, k, hd))
+    v_pages = jax.random.normal(kv, (pages, ps, k, vd))
+    # each row gets m distinct pages drawn from 1..pages-1 (0 = scratch)
+    perm = np.stack([np.random.RandomState(i).permutation(pages - 1)[:m] + 1
+                     for i in range(b)])
+    bt = jnp.asarray(perm, jnp.int32)
+    lengths = jnp.asarray(
+        np.random.RandomState(7).randint(1, m * ps + 1, size=(b,)), jnp.int32)
+    out = paged_attention(q, k_pages, v_pages, bt, lengths, window=window,
+                          chunk=chunk, logit_cap=cap, interpret=True)
+    want = ref.paged_attention_ref(q, k_pages, v_pages, bt, lengths,
+                                   window=window, chunk=chunk, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_v_dim_is_k_slice():
+    """v_dim reads v as the leading features of the k slab — the
+    absorbed-MLA latent layout (v = c_kv slice, one DMA per page)."""
+    b, h, hd, ps, m, pages, vdim = 2, 4, 24, 4, 3, 8, 16
+    kq, kk = jax.random.split(KEY)
+    q = jax.random.normal(kq, (b, h, hd))
+    k_pages = jax.random.normal(kk, (pages, ps, 1, hd))     # MQA latent
+    bt = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    lengths = jnp.asarray([m * ps, 5], jnp.int32)
+    out = paged_attention(q, k_pages, k_pages, bt, lengths, v_dim=vdim,
+                          interpret=True)
+    want = ref.paged_attention_ref(q, k_pages, k_pages[..., :vdim], bt,
+                                   lengths)
+    assert out.shape == (b, h, vdim)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_paged_attention_int8_dequant_in_kernel():
+    """int8 pages + bf16 scale slabs: kernel dequantizes after the page
+    DMA and stays within quantisation error of an unquantized pool."""
+    from repro.models.attention import (init_paged_kv_cache,
+                                        paged_cache_prefill)
+    b, h, k, hd, ps, m = 2, 4, 2, 16, 4, 3
+    pages = 1 + b * m
+    kk = jax.random.normal(jax.random.fold_in(KEY, 1), (b, m * ps, k, hd))
+    vv = jax.random.normal(jax.random.fold_in(KEY, 2), (b, m * ps, k, hd))
+    q = jax.random.normal(jax.random.fold_in(KEY, 3), (b, h, hd))
+    bt = jnp.asarray(np.arange(1, pages).reshape(b, m), jnp.int32)
+    lengths = jnp.asarray([m * ps, 2 * ps - 1], jnp.int32)
+    outs = {}
+    for dt in (jnp.float32, jnp.int8):
+        cache = init_paged_kv_cache(pages, ps, k, hd, dtype=dt)
+        cache = paged_cache_prefill(cache, kk, vv, bt, start=0)
+        outs[dt] = paged_attention(
+            q, cache["k"], cache["v"], bt, lengths,
+            k_scales=cache.get("k_scale"), v_scales=cache.get("v_scale"),
+            interpret=True)
+    np.testing.assert_allclose(np.asarray(outs[jnp.int8], np.float32),
+                               np.asarray(outs[jnp.float32], np.float32),
+                               atol=0.06)
 
 
 @pytest.mark.parametrize("b,s,d,n,chunk,bd", [

@@ -1,0 +1,359 @@
+"""Paged KV cache: pool accounting, paged<->ring decode parity (per
+step, across full/window/chunked/GQA/MLA), page reclaim, int8 pages,
+and the token-level continuous-decode scheduler."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import transformer as tf
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.kv_cache import OutOfPages, PagePool
+from repro.serving.scheduler import PagedLLMConfig, PagedLLMScheduler
+
+
+def tiny_config(variant: str, kv_cache_dtype: str = "float32") -> ModelConfig:
+    kw = dict(name=f"tiny-{variant}", arch_type="dense", num_layers=2,
+              d_model=32, d_ff=64, vocab_size=64, num_heads=4,
+              num_kv_heads=2, head_dim=8, compute_dtype="float32",
+              param_dtype="float32", kv_cache_dtype=kv_cache_dtype)
+    if variant == "full":
+        kw["pattern"] = (LayerSpec(attn_kind="full"),)
+    elif variant == "swa":
+        kw["pattern"] = (LayerSpec(attn_kind="swa"),)
+        kw["window"] = 6
+    elif variant == "chunked":
+        kw["pattern"] = (LayerSpec(attn_kind="chunked"),)
+        kw["chunk"] = 5
+    elif variant == "gqa_mixed":
+        kw["pattern"] = (LayerSpec(attn_kind="full"),
+                         LayerSpec(attn_kind="swa"))
+        kw["window"] = 6
+        kw["num_kv_heads"] = 1          # MQA
+    elif variant == "mla":
+        kw["pattern"] = (LayerSpec(mixer="mla"),)
+        kw.update(num_heads=2, q_lora=16, kv_lora=8, d_nope=8, d_rope=4,
+                  v_head_dim=8)
+    else:
+        raise ValueError(variant)
+    return ModelConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# PagePool
+# ---------------------------------------------------------------------------
+
+def test_page_pool_accounting():
+    pool = PagePool(num_pages=6, page_size=4)
+    assert pool.num_free == 5            # page 0 is scratch
+    a = pool.alloc(2)
+    b = pool.alloc(2)
+    assert not set(a) & set(b) and 0 not in a + b
+    assert pool.pages_in_use == 4 and pool.peak_in_use == 4
+    pool.free(a)
+    assert pool.num_free == 3
+    c = pool.alloc(3)                    # reuses a's pages
+    assert set(a) <= set(c)
+    assert pool.peak_in_use == 5
+    with pytest.raises(OutOfPages):
+        pool.alloc(1)
+    pool.free(b)
+    pool.free(c)
+    assert pool.pages_in_use == 0 and pool.num_free == 5
+    with pytest.raises(ValueError):
+        pool.free(b)                     # double free
+    d = pool.alloc(1)
+    with pytest.raises(ValueError):
+        pool.free(d + [99])              # foreign page: nothing mutates ...
+    assert pool.pages_in_use == 1        # ... so d stays held
+    with pytest.raises(ValueError):
+        pool.free([d[0], d[0]])          # duplicate ids in one call
+    assert pool.pages_in_use == 1
+    pool.free(d)
+    assert pool.pages_for(1) == 1 and pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+    row = pool.block_table([3, 1], max_pages=4)
+    np.testing.assert_array_equal(row, [3, 1, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Paged <-> ring numerical parity, per decode step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant",
+                         ["full", "swa", "chunked", "gqa_mixed", "mla"])
+def test_paged_matches_ring_per_step(variant):
+    cfg = tiny_config(variant)
+    key = jax.random.key(3)
+    params = tf.init_params(cfg, key)
+    b, s, p, ps = 1, 18, 7, 4
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+    logits_r, ring = tf.prefill(params, cfg, tokens[:, :p], cache_len=s,
+                                cache_dtype=jnp.float32)
+    m = -(-s // ps)
+    paged = tf.init_caches(cfg, 0, 0, jnp.float32, num_pages=m + 1,
+                           page_size=ps)
+    bt = jnp.arange(1, m + 1, dtype=jnp.int32)[None]
+    logits_p, paged = tf.prefill_paged(params, cfg, tokens[:, :p], paged, bt,
+                                       last_index=p - 1)
+    np.testing.assert_allclose(np.asarray(logits_r), np.asarray(logits_p),
+                               atol=2e-5)
+    for i in range(p, s):
+        logits_r, ring = tf.decode_step(params, cfg, tokens[:, i:i + 1],
+                                        ring, i)
+        logits_p, paged = tf.decode_step(params, cfg, tokens[:, i:i + 1],
+                                         paged, jnp.asarray([i]),
+                                         block_tables=bt)
+        np.testing.assert_allclose(np.asarray(logits_r), np.asarray(logits_p),
+                                   atol=3e-5, err_msg=f"{variant} pos={i}")
+
+
+def test_mixed_length_batch_matches_solo():
+    """Two requests at different positions decode in ONE paged batch;
+    each row matches the same request decoded alone (token-level
+    continuous batching is numerically per-row)."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=48))
+    pool = eng.init_paged(num_pages=30, page_size=4, decode_batch=4)
+    key = jax.random.key(9)
+    p1 = np.asarray(jax.random.randint(key, (6,), 0, cfg.vocab_size))
+    p2 = np.asarray(jax.random.randint(jax.random.fold_in(key, 1), (13,), 0,
+                                       cfg.vocab_size))
+    ref1 = eng.generate_paged(p1, max_new_tokens=8)["tokens"]
+    ref2 = eng.generate_paged(p2, max_new_tokens=6)["tokens"]
+
+    s1 = eng.prefill_into_pages(p1, max_new_tokens=8)
+    eng.decode_step_batch([s1])
+    eng.decode_step_batch([s1])          # s1 is 2 tokens ahead ...
+    s2 = eng.prefill_into_pages(p2, max_new_tokens=6)  # ... when s2 joins
+    while not (s1.done and s2.done):
+        eng.decode_step_batch([s for s in (s1, s2) if not s.done])
+    eng.pool.free(s1.pages)
+    eng.pool.free(s2.pages)
+    np.testing.assert_array_equal(np.concatenate([p1, s1.tokens]), ref1)
+    np.testing.assert_array_equal(np.concatenate([p2, s2.tokens]), ref2)
+    assert pool.pages_in_use == 0
+
+
+def test_page_reclaim_reuse_identical_output():
+    """After a request finishes its pages are immediately reusable, and
+    a follow-up request landing on the reclaimed (dirty) pages produces
+    the exact same output as on a fresh pool."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=32))
+    # pool fits exactly one request: reuse is forced
+    pool = eng.init_paged(num_pages=5, page_size=4, decode_batch=2)
+    key = jax.random.key(2)
+    pa = np.asarray(jax.random.randint(key, (9,), 0, cfg.vocab_size))
+    pb = np.asarray(jax.random.randint(jax.random.fold_in(key, 1), (9,), 0,
+                                       cfg.vocab_size))
+    out_a = eng.generate_paged(pa, max_new_tokens=7)["tokens"]
+    assert pool.pages_in_use == 0
+    out_b = eng.generate_paged(pb, max_new_tokens=7)["tokens"]    # dirty pages
+    out_a2 = eng.generate_paged(pa, max_new_tokens=7)["tokens"]   # dirtier
+    np.testing.assert_array_equal(out_a, out_a2)
+    assert not np.array_equal(out_a, out_b)   # actually different requests
+    assert pool.pages_in_use == 0 and pool.peak_in_use == 4
+
+
+def test_capacity_and_pool_errors():
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=16))
+    prompts = jnp.zeros((1, 10), jnp.int32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(prompts, max_new_tokens=10)
+    eng.init_paged(num_pages=4, page_size=4, decode_batch=2)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.prefill_into_pages(np.zeros((10,), np.int32), max_new_tokens=10)
+    with pytest.raises(OutOfPages, match="exhausted"):
+        eng.prefill_into_pages(np.zeros((10,), np.int32), max_new_tokens=6)
+    assert eng.pool.pages_in_use == 0    # failed admission leaked nothing
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.prefill_into_pages(np.zeros((4,), np.int32), max_new_tokens=0)
+
+
+def test_int8_paged_pool():
+    """kv_cache_dtype=int8 threads through the paged allocator: pages
+    are stored quantized and decode stays within quantisation error of
+    the float pool."""
+    cfg8 = tiny_config("full", kv_cache_dtype="int8")
+    params = tf.init_params(cfg8, jax.random.key(0))
+    s, p, ps = 16, 6, 4
+    m = -(-s // ps)
+    tokens = jax.random.randint(jax.random.key(4), (1, s), 0, cfg8.vocab_size)
+    bt = jnp.arange(1, m + 1, dtype=jnp.int32)[None]
+
+    caches8 = tf.init_caches(cfg8, 0, 0, num_pages=m + 1, page_size=ps)
+    leaf = caches8["p0"]["k"]
+    assert leaf.dtype == jnp.int8
+    assert "k_scale" in caches8["p0"]
+    cachesf = tf.init_caches(cfg8, 0, 0, jnp.float32, num_pages=m + 1,
+                             page_size=ps)
+    l8, caches8 = tf.prefill_paged(params, cfg8, tokens[:, :p], caches8, bt,
+                                   last_index=p - 1)
+    lf, cachesf = tf.prefill_paged(params, cfg8, tokens[:, :p], cachesf, bt,
+                                   last_index=p - 1)
+    np.testing.assert_allclose(np.asarray(l8), np.asarray(lf), atol=0.15)
+    for i in range(p, s):
+        l8, caches8 = tf.decode_step(params, cfg8, tokens[:, i:i + 1],
+                                     caches8, jnp.asarray([i]),
+                                     block_tables=bt)
+        lf, cachesf = tf.decode_step(params, cfg8, tokens[:, i:i + 1],
+                                     cachesf, jnp.asarray([i]),
+                                     block_tables=bt)
+        np.testing.assert_allclose(np.asarray(l8), np.asarray(lf), atol=0.15,
+                                   err_msg=f"pos={i}")
+
+
+def test_sampled_generation_batch_independent():
+    """temperature > 0: a request's sampled tokens are a function of
+    (seed, prompt) alone — repeatable across calls and identical
+    whether it decodes solo or continuously batched with others."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=32, temperature=0.7))
+    eng.init_paged(num_pages=16, page_size=4, decode_batch=2)
+    pa = np.arange(5) % cfg.vocab_size
+    pb = (np.arange(7) * 3) % cfg.vocab_size
+    out_a = eng.generate_paged(pa, max_new_tokens=6)["tokens"]
+    np.testing.assert_array_equal(
+        out_a, eng.generate_paged(pa, max_new_tokens=6)["tokens"])
+    out_b = eng.generate_paged(pb, max_new_tokens=6)["tokens"]
+    s1 = eng.prefill_into_pages(pa, max_new_tokens=6)
+    s2 = eng.prefill_into_pages(pb, max_new_tokens=6)
+    while not (s1.done and s2.done):
+        eng.decode_step_batch([s for s in (s1, s2) if not s.done])
+    eng.pool.free(s1.pages)
+    eng.pool.free(s2.pages)
+    np.testing.assert_array_equal(np.concatenate([pa, s1.tokens]), out_a)
+    np.testing.assert_array_equal(np.concatenate([pb, s2.tokens]), out_b)
+
+
+def test_warmup_page_padded_length_at_max_len():
+    """warmup must not trip the capacity check when a prompt length
+    page-pads up to max_len (regression: pages_for(30)*8 == max_len)."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=32))
+    eng.init_paged(num_pages=20, page_size=8, decode_batch=2)
+    sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=2))
+    sched.warmup([30])
+    assert eng.pool.pages_in_use == 0
+
+
+def test_paged_rejects_mamba():
+    cfg = ModelConfig(name="ssm", arch_type="ssm", num_layers=1, d_model=16,
+                      d_ff=32, vocab_size=32,
+                      pattern=(LayerSpec(mixer="mamba"),),
+                      d_inner=32, ssm_state=4, dt_rank=4)
+    with pytest.raises(NotImplementedError):
+        tf.init_caches(cfg, 0, 0, num_pages=4, page_size=4)
+
+
+# ---------------------------------------------------------------------------
+# Token-level continuous-decode scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_continuous_decode_trace():
+    """A staggered mixed-length trace through PagedLLMScheduler: every
+    output matches the solo-decoded reference, at least one decode
+    batch mixes requests admitted at different times, and the pool
+    drains back to zero pages in use."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=64))
+    eng.init_paged(num_pages=40, page_size=4, decode_batch=4)
+    key = jax.random.key(5)
+    lens = [5, 11, 17, 8]
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                             (l,), 0, cfg.vocab_size))
+               for i, l in enumerate(lens)]
+    refs = [eng.generate_paged(p, max_new_tokens=10)["tokens"]
+            for p in prompts]
+
+    async def main():
+        sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=10))
+        sched.warmup(lens)
+        async with sched:
+            futs = [sched.submit_nowait(prompts[0]),
+                    sched.submit_nowait(prompts[1])]
+            # let the first two get ahead so the later admissions join a
+            # *running* decode batch
+            while sched.decode_batches < 2:
+                await asyncio.sleep(0.005)
+            futs += [sched.submit_nowait(prompts[2]),
+                     sched.submit_nowait(prompts[3])]
+            outs = await asyncio.gather(*futs)
+        return sched, outs
+
+    sched, outs = asyncio.run(main())
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(out, ref)
+    snap = sched.snapshot()
+    assert snap["completed"] == 4 and snap["failed"] == 0
+    assert snap["mixed_admission_batches"] >= 1
+    assert snap["pools"][0]["pages_in_use"] == 0
+    assert snap["pools"][0]["peak_pages_in_use"] > 0
+    assert snap["tokens_generated"] >= 4 * 10 - 4   # first tokens from prefill
+
+
+def test_stop_without_drain_reclaims_pages():
+    """Cancelling a scheduler mid-generation must hand the stranded
+    sequences' pages back to the pool — the engine outlives the
+    scheduler and would otherwise serve with shrunken capacity."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=64))
+    eng.init_paged(num_pages=20, page_size=4, decode_batch=2)
+
+    async def main():
+        sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=40))
+        await sched.start()
+        fut = sched.submit_nowait(np.zeros((8,), np.int32))
+        while sched.decode_batches < 1:     # request is mid-generation
+            await asyncio.sleep(0.005)
+        await sched.stop(drain=False)
+        assert fut.done()
+        return sched
+
+    asyncio.run(main())
+    assert eng.pool.pages_in_use == 0
+
+
+def test_scheduler_backpressure_oversized_request():
+    """A request larger than the whole pool fails fast; one that merely
+    has to wait for pages completes once earlier requests retire."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=32))
+    eng.init_paged(num_pages=6, page_size=4, decode_batch=2)  # 20 tokens
+    key = jax.random.key(6)
+    small = [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                           (6,), 0, cfg.vocab_size))
+             for i in range(3)]
+    refs = [eng.generate_paged(p, max_new_tokens=6)["tokens"] for p in small]
+
+    async def main():
+        sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=6))
+        async with sched:
+            # 3 x 12 tokens = 3 pages each; pool holds 5 -> the third
+            # waits for reclaimed pages
+            futs = [sched.submit_nowait(p) for p in small]
+            too_big = sched.submit_nowait(
+                np.zeros((26,), np.int32), max_new_tokens=6)
+            outs = await asyncio.gather(*futs)
+            with pytest.raises(OutOfPages):
+                await too_big
+        return sched, outs
+
+    sched, outs = asyncio.run(main())
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(out, ref)
+    assert sched.snapshot()["pools"][0]["pages_in_use"] == 0
