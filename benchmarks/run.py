@@ -11,6 +11,7 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   mux_kernel — fused router-head microbenchmark     (serving hot path)
   scheduler  — continuous-batching goodput vs load  (serving runtime)
   paged      — ring vs paged KV decode, mixed lens  (serving memory/runtime)
+  prefix     — prefix-sharing COW pages vs private  (serving memory/prefill)
   roofline   — dry-run roofline table               (EXPERIMENTS §Roofline)
 
 State (trained zoo + muxes) is cached under results/bench_state; set
@@ -51,7 +52,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,fig6,mux_kernel,"
-                         "scheduler,paged,roofline")
+                         "scheduler,paged,prefix,roofline")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -84,6 +85,9 @@ def main() -> None:
     if want("paged"):
         from benchmarks import bench_paged_decode
         bench_paged_decode.run()
+    if want("prefix"):
+        from benchmarks import bench_prefix_sharing
+        bench_prefix_sharing.run()
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()

@@ -411,6 +411,72 @@ def masked_decode_attention(q, k, v, kv_pos, pos, *,
     return out.reshape(b, 1, h, v.shape[-1]).astype(q.dtype)
 
 
+def masked_causal_attention(q, k, v, kv_pos, q_pos, *,
+                            window: Optional[int] = None,
+                            chunk: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            logit_cap: Optional[float] = None) -> jnp.ndarray:
+    """Multi-token causal attention over an explicit KV view at
+    absolute positions — the S > 1 generalisation of
+    ``masked_decode_attention``, used by the shared-prefix tail
+    prefill: the queries attend KV this call did not compute (the
+    resident prefix pages) plus their own just-inserted tail.
+
+    q: (B, S, H, hd); k: (B, T, K, hd); v: (B, T, K, vd).
+    kv_pos: absolute position held by each KV slot, (T,) shared or
+    (B, T) per row; -1 marks an empty slot.
+    q_pos: (S,) absolute query positions (traced offsets are fine).
+    Materialises the S x T score block — tails are short by
+    construction; full prompts stay on the blocked flash path.
+    Returns (B, S, H, vd).
+    """
+    b, s, h, hd = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qr = (q * scale).reshape(b, s, kk, g, hd)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qr, k,
+                    preferred_element_type=jnp.float32)
+    if logit_cap is not None:
+        sc = softcap(sc, logit_cap)
+    q_pos = jnp.asarray(q_pos, jnp.int32).reshape((-1,))        # (S,)
+    kv_pos = jnp.asarray(kv_pos, jnp.int32)
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None]                                   # (1|B, T)
+    lower = jnp.zeros_like(q_pos)
+    if window is not None:
+        lower = q_pos - window + 1
+    if chunk is not None:
+        lower = (q_pos // chunk) * chunk
+    mask = ((kv_pos[:, None, :] >= 0)
+            & (kv_pos[:, None, :] <= q_pos[None, :, None])
+            & (kv_pos[:, None, :] >= lower[None, :, None]))     # (1|B, S, T)
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,btkv->bskgv", p, v)
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def paged_prefill_attention(q, cache: Params, block_tables, q_offset, *,
+                            window: Optional[int] = None,
+                            chunk: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            logit_cap: Optional[float] = None) -> jnp.ndarray:
+    """Tail-prefill attention over the paged pool: queries at absolute
+    positions q_offset + arange(S) attend the block-table gather of the
+    pool — the resident shared-prefix pages plus the tail K/V this
+    prefill just wrote.  q: (B, S, H, hd); q_offset traced ok."""
+    k, v = paged_gather_kv(cache, block_tables)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(
+        q.shape[1], dtype=jnp.int32)
+    return masked_causal_attention(q, k, v, kv_pos, q_pos, window=window,
+                                   chunk=chunk, scale=scale,
+                                   logit_cap=logit_cap)
+
+
 def decode_attention(q, cache: Params, pos, *, window: Optional[int] = None,
                      chunk: Optional[int] = None, scale: Optional[float] = None,
                      logit_cap: Optional[float] = None) -> jnp.ndarray:
@@ -490,14 +556,27 @@ def paged_cache_insert(cache: Params, k_new, v_new, block_tables,
 
 
 def paged_cache_prefill(cache: Params, k, v, block_tables,
-                        start: int = 0) -> Params:
+                        start: int = 0, *, insert_from=None) -> Params:
     """Write S tokens (B, S, K, hd) at positions start..start+S-1 of
-    each row's block-table mapping (prefill into pages)."""
+    each row's block-table mapping (prefill into pages).
+
+    ``start`` may be a traced scalar (shared-prefix tail prefill).
+    ``insert_from`` (absolute position, traced ok) redirects writes
+    *below* it to the scratch page: a tail recomputes those positions
+    for the forward pass but must not touch resident shared pages that
+    already hold their K/V.  Positions whose page index falls past the
+    block-table width also land on scratch (right-padding of a
+    page-rounded tail near max_len)."""
     ps = cache["k"].shape[1]
     s = k.shape[1]
+    m = block_tables.shape[1]
     positions = (start + jnp.arange(s)).astype(jnp.int32)       # (S,)
-    page = jnp.take_along_axis(block_tables, positions[None] // ps,
+    idx = positions[None] // ps                                 # (1, S)
+    page = jnp.take_along_axis(block_tables, jnp.minimum(idx, m - 1),
                                axis=1)                          # (B, S)
+    page = jnp.where(idx >= m, SCRATCH_PAGE, page)
+    if insert_from is not None:
+        page = jnp.where(positions[None] >= insert_from, page, SCRATCH_PAGE)
     slot = jnp.broadcast_to(positions[None] % ps, page.shape)
     out = dict(cache)
     if cache["k"].dtype == jnp.int8:

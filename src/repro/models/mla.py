@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.models.attention import (blocked_attention, cache_insert,
                                     cache_prefill, decode_attention,
-                                    gather_pages, masked_decode_attention,
+                                    gather_pages, masked_causal_attention,
+                                    masked_decode_attention,
                                     paged_cache_insert, paged_cache_prefill)
 from repro.models.layers import apply_norm, apply_rope, dense_init, init_norm
 from repro.sharding.partition import shard
@@ -67,8 +68,16 @@ def _project_q(params: Params, x, *, num_heads: int, d_nope: int, d_rope: int,
 def mla_prefill(params: Params, x, *, num_heads: int, q_lora: int, kv_lora: int,
                 d_nope: int, d_rope: int, v_head_dim: int, rope_theta: float,
                 positions, cache: Params = None, inner_remat: bool = False,
-                block_tables=None):
-    """Training / prefill forward.  Returns (out (B,S,D), new_cache)."""
+                block_tables=None, q_offset=None, insert_from=None):
+    """Training / prefill forward.  Returns (out (B,S,D), new_cache).
+
+    ``q_offset`` (traced ok) switches to the shared-prefix *tail* path:
+    the tail's latent is written into the paged pool at absolute
+    positions q_offset.., then attention runs over the block-table
+    gather of the pool (resident prefix latent + the tail), expanded to
+    per-head K/V.  ``insert_from`` keeps writes off resident shared
+    pages (see attention.paged_cache_prefill).
+    """
     del q_lora
     b, s, _ = x.shape
     h = num_heads
@@ -77,10 +86,34 @@ def mla_prefill(params: Params, x, *, num_heads: int, q_lora: int, kv_lora: int,
                                 rope_theta=rope_theta)
     c_kv, k_rope = _project_latent(params, x, kv_lora=kv_lora, d_rope=d_rope,
                                    positions=positions, rope_theta=rope_theta)
-    # expand latent to per-head K/V (MHA after expansion)
-    k_nope = (c_kv @ params["k_up"].astype(x.dtype)).reshape(b, s, h, d_nope)
-    v = (c_kv @ params["v_up"].astype(x.dtype)).reshape(b, s, h, v_head_dim)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_up = params["k_up"].astype(x.dtype)
+    v_up = params["v_up"].astype(x.dtype)
+
+    if block_tables is not None and q_offset is not None:
+        latent = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+        new_cache = paged_cache_prefill(cache, latent, latent[..., :1],
+                                        block_tables, start=q_offset,
+                                        insert_from=insert_from)
+        lat = gather_pages(new_cache["k"], block_tables)[:, :, 0]   # (B,T,L)
+        t = lat.shape[1]
+        c_g, kr_g = lat[..., :kv_lora], lat[..., kv_lora:]
+        k_g = jnp.concatenate(
+            [(c_g @ k_up).reshape(b, t, h, d_nope),
+             jnp.broadcast_to(kr_g[:, :, None, :], (b, t, h, d_rope))],
+            axis=-1)
+        v_g = (c_g @ v_up).reshape(b, t, h, v_head_dim)
+        q_pos = (jnp.asarray(q_offset, jnp.int32)
+                 + jnp.arange(s, dtype=jnp.int32))
+        out = masked_causal_attention(
+            q, k_g, v_g, jnp.arange(t, dtype=jnp.int32), q_pos,
+            scale=1.0 / math.sqrt(d_nope + d_rope))
+        out = out.reshape(b, s, h * v_head_dim) @ params["wo"].astype(x.dtype)
+        return out, new_cache
+
+    # expand latent to per-head K/V (MHA after expansion)
+    k_nope = (c_kv @ k_up).reshape(b, s, h, d_nope)
+    v = (c_kv @ v_up).reshape(b, s, h, v_head_dim)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                                   (b, s, h, d_rope))], axis=-1)
     out = blocked_attention(q, k, v, causal=True,

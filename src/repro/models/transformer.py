@@ -216,10 +216,16 @@ def _attn_scale(cfg: ModelConfig) -> float:
 
 def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
                    *, positions, mode: str, pos=None, cache=None,
-                   image_embeds=None, block_tables=None):
+                   image_embeds=None, block_tables=None, q_offset=None,
+                   insert_from=None):
     """Returns (out, new_cache).  ``block_tables`` (B, M) switches the
     cache path to the paged pool; in decode mode ``pos`` is then a
-    per-row (B,) vector rather than a shared scalar."""
+    per-row (B,) vector rather than a shared scalar.  ``q_offset``
+    (prefill mode, traced ok) is the shared-prefix tail path: K/V is
+    written at absolute positions q_offset.. and attention runs over
+    the gathered pool view (resident prefix + tail) instead of the
+    in-sequence blocked path; ``insert_from`` keeps tail writes off
+    resident shared pages."""
     b, s, _ = x.shape
     inner_remat = cfg.remat == "full_inner" and mode == "train"
     if spec.mixer == "mamba":
@@ -242,7 +248,9 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
         return mla_mod.mla_prefill(p["attn"], x, q_lora=cfg.q_lora,
                                    positions=positions, cache=cache,
                                    inner_remat=inner_remat,
-                                   block_tables=block_tables, **kw)
+                                   block_tables=block_tables,
+                                   q_offset=q_offset,
+                                   insert_from=insert_from, **kw)
 
     if spec.mixer == "cross_attn":
         ap = p["attn"]
@@ -299,6 +307,16 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
                                         chunk=chunk, scale=_attn_scale(cfg),
                                         logit_cap=cfg.attn_logit_cap)
         new_cache = cache
+    elif block_tables is not None and q_offset is not None:
+        # shared-prefix tail prefill: write the tail's K/V into the
+        # pool first, then attend over the block-table gather — the
+        # resident prefix pages this request mapped plus its own tail
+        new_cache = attn.paged_cache_prefill(cache, k, v, block_tables,
+                                             start=q_offset,
+                                             insert_from=insert_from)
+        out = attn.paged_prefill_attention(
+            q, new_cache, block_tables, q_offset, window=window, chunk=chunk,
+            scale=_attn_scale(cfg), logit_cap=cfg.attn_logit_cap)
     else:
         out = attn.blocked_attention(q, k, v, causal=True, window=window,
                                      chunk=chunk, scale=_attn_scale(cfg),
@@ -316,14 +334,16 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
 
 def _block_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, h,
                    *, positions, mode: str, pos=None, cache=None,
-                   image_embeds=None, block_tables=None):
+                   image_embeds=None, block_tables=None, q_offset=None,
+                   insert_from=None):
     """One transformer block.  Returns (h, new_cache, aux_loss)."""
     gated_residual = spec.mixer == "cross_attn"
     mix_in = apply_norm(p["norm1"], h, cfg.norm, cfg.norm_eps)
     out, new_cache = _mixer_forward(p, spec, cfg, mix_in, positions=positions,
                                     mode=mode, pos=pos, cache=cache,
                                     image_embeds=image_embeds,
-                                    block_tables=block_tables)
+                                    block_tables=block_tables,
+                                    q_offset=q_offset, insert_from=insert_from)
     # Megatron-SP: constrain the row-parallel output to the seq-sharded
     # layout BEFORE the residual add so XLA emits a reduce-scatter
     # instead of all-reduce + reshard (2x+ the link bytes); §Perf iter
@@ -390,7 +410,8 @@ def unembed(params: Params, cfg: ModelConfig, h):
 
 
 def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
-                 pos=None, caches=None, image_embeds=None, block_tables=None):
+                 pos=None, caches=None, image_embeds=None, block_tables=None,
+                 q_offset=None, insert_from=None):
     """Scan over the G pattern groups.  Returns (h, new_caches, aux_sum)."""
     specs = cfg.pattern
 
@@ -406,7 +427,8 @@ def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
                 hh2, nc, aux = _block_forward(
                     block_params[f"p{i}"], spec, cfg, hh, positions=positions,
                     mode=mode, pos=pos, cache=c, image_embeds=image_embeds,
-                    block_tables=block_tables)
+                    block_tables=block_tables, q_offset=q_offset,
+                    insert_from=insert_from)
                 hh = hh2
                 aux_g = aux_g + aux
                 if nc is not None:
@@ -424,11 +446,16 @@ def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
 
 
 def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
-            mode: str = "train", caches=None, pos=None, block_tables=None):
+            mode: str = "train", caches=None, pos=None, block_tables=None,
+            q_offset=None, insert_from=None):
     """Main entry.  mode: train | prefill | decode.
 
     ``block_tables`` (B, M) routes the cache path through the paged
-    pool; decode ``pos`` is then per-row (B,).
+    pool; decode ``pos`` is then per-row (B,).  Prefill ``q_offset``
+    (traced ok) shifts the sequence to absolute positions q_offset..
+    — the shared-prefix tail path, where the resident prefix KV is
+    read back from the pool instead of recomputed; ``insert_from``
+    bounds which of those positions write the pool.
     Returns (hidden (B,S,D) post-final-norm, new_caches, aux_loss).
     """
     if mode == "decode":
@@ -436,6 +463,8 @@ def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
     else:
         positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
                                      tokens.shape[:2])
+        if q_offset is not None:
+            positions = positions + jnp.asarray(q_offset, jnp.int32)
     h = embed_tokens(params, cfg, tokens)
     if cfg.pos_embed == "sinusoidal":
         p = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape((-1, 1)),
@@ -445,7 +474,9 @@ def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
     h, new_caches, aux = _scan_blocks(params, cfg, h, positions=positions,
                                       mode=mode, pos=pos, caches=caches,
                                       image_embeds=image_embeds,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables,
+                                      q_offset=q_offset,
+                                      insert_from=insert_from)
     h = apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
     return h, new_caches, aux
 
@@ -503,8 +534,10 @@ def prefill(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
 
 
 def prefill_paged(params: Params, cfg: ModelConfig, tokens, caches,
-                  block_tables, last_index=None):
-    """Prefill a prompt into pages of a shared pool.
+                  block_tables, last_index=None, *, q_offset=None,
+                  insert_from=None):
+    """Prefill a prompt (or a shared-prefix tail) into pages of a
+    shared pool.
 
     tokens: (B, S) — S may include right padding (padded slots hold
     garbage K/V but sit at positions > the live query and are
@@ -512,11 +545,18 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens, caches,
     caches: paged pool from ``init_caches(..., num_pages=, page_size=)``
     (shared across requests; donate it through jit).
     block_tables: (B, M) page ids for these rows.
-    last_index: position of the last real prompt token (traced ok);
-    defaults to S - 1.  Returns (next-token logits (B, 1, V), caches).
+    last_index: index of the last real token *within ``tokens``*
+    (traced ok); defaults to S - 1.
+    q_offset (traced ok): absolute position of tokens[:, 0] — the
+    shared-prefix tail path, where positions < q_offset are resident
+    pages mapped from another sequence and are read, not recomputed.
+    insert_from (traced ok): absolute position below which the tail
+    does not write the pool (those slots belong to shared pages).
+    Returns (next-token logits (B, 1, V), caches).
     """
     h, caches, _ = forward(params, cfg, tokens, mode="prefill", caches=caches,
-                           block_tables=block_tables)
+                           block_tables=block_tables, q_offset=q_offset,
+                           insert_from=insert_from)
     if last_index is None:
         h_last = h[:, -1:]
     else:

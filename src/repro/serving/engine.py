@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
-from repro.serving.kv_cache import PagePool, PagedSequence
+from repro.serving.kv_cache import OutOfPages, PagePool, PagedSequence
 from repro.sharding.partition import axis_rules
 
 
@@ -70,10 +70,18 @@ class Engine:
         self.pool: Optional[PagePool] = None
         self._paged_caches = None
         self._paged_prefill = None
+        self._paged_prefill_tail = None
         self._paged_decode = None
+        self._copy_page = None
         self._max_pages = 0
         self._decode_batch = 0
         self._caches_poisoned = False
+        # prefix-sharing accounting (the benchmark's evidence): prompt
+        # tokens actually run through prefill (padded) vs mapped from a
+        # resident shared prefix, and copy-on-write page copies made
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_shared = 0
+        self.cow_count = 0
 
     @property
     def caches_poisoned(self) -> bool:
@@ -140,19 +148,26 @@ class Engine:
     # Paged path: pool-backed caches, token-level continuous decode
     # ------------------------------------------------------------------
     def init_paged(self, *, num_pages: int, page_size: int = 64,
-                   decode_batch: int = 8, dtype=None) -> PagePool:
+                   decode_batch: int = 8, dtype=None,
+                   prefix_sharing: bool = True) -> PagePool:
         """Allocate the paged KV pool and compile the paged entry
         points.  ``dtype=None`` honors ``cfg.kv_cache_dtype`` (int8
         pools store quantized pages, dequantized in-kernel).  The pool
         is sized in *pages*, not batch slots: memory scales with
-        resident tokens, not max_len x batch."""
+        resident tokens, not max_len x batch.  ``prefix_sharing=False``
+        disables the prefix index (every request prefills and holds
+        private pages — the pre-sharing baseline)."""
         if self.cfg.num_codebooks:
             raise NotImplementedError(
                 "paged decode supports single-stream token LMs")
-        self.pool = PagePool(num_pages=num_pages, page_size=page_size)
+        self.pool = PagePool(num_pages=num_pages, page_size=page_size,
+                             prefix_sharing=prefix_sharing)
         self._max_pages = self.pool.pages_for(self.scfg.max_len)
         self._decode_batch = decode_batch
         self._caches_poisoned = False
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_shared = 0
+        self.cow_count = 0
         cfg = self.cfg
         self._paged_caches = tf.init_caches(cfg, 0, 0, dtype,
                                             num_pages=num_pages,
@@ -161,21 +176,36 @@ class Engine:
         def paged_prefill_fn(p, tokens, caches, bt, last_index):
             return tf.prefill_paged(p, cfg, tokens, caches, bt, last_index)
 
+        def paged_prefill_tail_fn(p, tokens, caches, bt, last_index,
+                                  q_offset, insert_from):
+            return tf.prefill_paged(p, cfg, tokens, caches, bt, last_index,
+                                    q_offset=q_offset,
+                                    insert_from=insert_from)
+
         def paged_decode_fn(p, token, caches, bt, pos):
             return tf.decode_step(p, cfg, token, caches, pos,
                                   block_tables=bt)
 
+        def copy_page_fn(caches, src, dst):
+            # copy-on-write: duplicate one physical page across every
+            # layer slab (leaves are (G, num_pages, page_size, ...))
+            return jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]),
+                                caches)
+
+        def compile_all():
+            self._paged_prefill = jax.jit(paged_prefill_fn,
+                                          donate_argnums=(2,))
+            self._paged_prefill_tail = jax.jit(paged_prefill_tail_fn,
+                                               donate_argnums=(2,))
+            self._paged_decode = jax.jit(paged_decode_fn, donate_argnums=(2,))
+            self._copy_page = jax.jit(copy_page_fn, donate_argnums=(0,))
+
         ctx = axis_rules(self.rules) if self.rules is not None else None
         if ctx:
             with ctx:
-                self._paged_prefill = jax.jit(paged_prefill_fn,
-                                              donate_argnums=(2,))
-                self._paged_decode = jax.jit(paged_decode_fn,
-                                             donate_argnums=(2,))
+                compile_all()
         else:
-            self._paged_prefill = jax.jit(paged_prefill_fn,
-                                          donate_argnums=(2,))
-            self._paged_decode = jax.jit(paged_decode_fn, donate_argnums=(2,))
+            compile_all()
         return self.pool
 
     @property
@@ -184,11 +214,48 @@ class Engine:
         init_paged) — part of the engine's paged-serving contract."""
         return self._decode_batch
 
+    def _shared_prefix(self, prompt_np: np.ndarray,
+                       p: int) -> Tuple[List[int], int, int]:
+        """Resident pages this prompt can map: (mapped_pages,
+        matched_len, shared_len).  shared_len (the tokens *not*
+        recomputed) is clamped to p - 1 — prefill must always run at
+        least the final prompt token to produce next-token logits."""
+        if self.pool is None or not self.pool.prefix_sharing:
+            return [], 0, 0
+        mapped, matched = self.pool.lookup_prefix(prompt_np)
+        shared_len = min(matched, p - 1)
+        if shared_len <= 0:
+            return [], 0, 0
+        return mapped, matched, shared_len
+
+    def admission_page_cost(self, prompt, max_new_tokens: int
+                            ) -> Tuple[int, int]:
+        """(pages a fresh admission would allocate now, free pages to
+        hold back for its future copy-on-write).  With prefix sharing
+        this is the *unique*-page cost — shared pages cost nothing
+        extra; the headroom is 1 when the prompt would map a
+        resident's partially-filled boundary page (identical prompt),
+        because decode later copies that page before inserting."""
+        prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
+        p = len(prompt_np)
+        total = self.pool.pages_for(p + max_new_tokens)
+        mapped, matched, shared_len = self._shared_prefix(prompt_np, p)
+        if not mapped:
+            return total, 0
+        headroom = 1 if (matched == p and p % self.pool.page_size) else 0
+        return total - len(mapped), headroom
+
     def prefill_into_pages(self, prompt, *, max_new_tokens: int,
                            seed: Optional[int] = None) -> PagedSequence:
-        """Admit one request: allocate its pages, prefill the prompt
-        into them, and sample the first token.  The returned sequence
-        can join a running decode batch immediately.
+        """Admit one request: map any resident shared-prefix pages,
+        allocate fresh pages for the rest, prefill the (divergent tail
+        of the) prompt, and sample the first token.  The returned
+        sequence can join a running decode batch immediately.
+
+        With prefix sharing, a prompt whose page-aligned prefix matches
+        a resident sequence recomputes only the tail: the shared pages
+        are increfed, skipped by prefill, and protected from writes —
+        decode copy-on-writes before its first insert into one.
 
         Raises ValueError if prompt + max_new_tokens exceeds max_len,
         and OutOfPages (a ValueError) when the pool cannot hold the
@@ -205,18 +272,52 @@ class Engine:
         if p < 1:
             raise ValueError("prompt must hold at least one token")
         self._check_capacity(p, max_new_tokens)
-        pages = self.pool.alloc(self.pool.pages_for(p + max_new_tokens))
-        bt_row = self.pool.block_table(pages, self._max_pages)
-        ps = self.pool.page_size
-        # pad to the allocation's page rounding; pad slots are masked,
-        # then overwritten by decode inserts
-        p_pad = self.pool.pages_for(p) * ps
-        toks = jnp.zeros((1, p_pad), jnp.int32).at[0, :p].set(prompt)
+        pool = self.pool
+        ps = pool.page_size
+        prompt_np = np.asarray(prompt)
+        total = pool.pages_for(p + max_new_tokens)
+        mapped, matched, shared_len = self._shared_prefix(prompt_np, p)
+        if mapped:
+            pool.incref(mapped)
+            if matched == p and p % ps:
+                # the resident's partially-filled boundary page is now
+                # shared; whichever holder inserts into it first must
+                # copy-on-write (admission reserved the headroom)
+                pool.mark_cow_risk(mapped[-1])
+        try:
+            new_pages = pool.alloc(total - len(mapped))
+        except OutOfPages:
+            if mapped:
+                pool.decref(mapped)
+            raise
+        pages = list(mapped) + new_pages
+        bt_row = pool.block_table(pages, self._max_pages)
         seq_seed = self.scfg.seed if seed is None else seed
         try:
-            logits, self._paged_caches = self._paged_prefill(
-                self.params, toks, self._paged_caches,
-                jnp.asarray(bt_row)[None], jnp.asarray(p - 1, jnp.int32))
+            if shared_len:
+                # tail-only prefill: positions < shared_len are read
+                # back from the mapped pages; writes below the mapped
+                # span are redirected to scratch (insert_from)
+                tail_len = p - shared_len
+                t_pad = pool.pages_for(tail_len) * ps
+                toks = jnp.zeros((1, t_pad), jnp.int32).at[
+                    0, :tail_len].set(prompt[shared_len:])
+                logits, self._paged_caches = self._paged_prefill_tail(
+                    self.params, toks, self._paged_caches,
+                    jnp.asarray(bt_row)[None],
+                    jnp.asarray(tail_len - 1, jnp.int32),
+                    jnp.asarray(shared_len, jnp.int32),
+                    jnp.asarray(len(mapped) * ps, jnp.int32))
+                self.prefill_tokens_computed += t_pad
+            else:
+                # pad to the allocation's page rounding; pad slots are
+                # masked, then overwritten by decode inserts
+                p_pad = pool.pages_for(p) * ps
+                toks = jnp.zeros((1, p_pad), jnp.int32).at[0, :p].set(prompt)
+                logits, self._paged_caches = self._paged_prefill(
+                    self.params, toks, self._paged_caches,
+                    jnp.asarray(bt_row)[None], jnp.asarray(p - 1, jnp.int32))
+                self.prefill_tokens_computed += p_pad
             # materialise INSIDE the guard: jax dispatch is async, so
             # an execution-time failure of the donating jit call often
             # surfaces only here
@@ -226,11 +327,15 @@ class Engine:
             # conservatively treat any failure of the donating call as
             # cache loss (validation errors raise before this point)
             self._caches_poisoned = True
-            self.pool.free(pages)   # failed admission must not leak pages
+            pool.decref(pages)      # failed admission must not leak pages
             raise
-        return PagedSequence(pages=pages, block_table=bt_row, prompt_len=p,
+        self.prefill_tokens_shared += shared_len
+        seq = PagedSequence(pages=pages, block_table=bt_row, prompt_len=p,
                             pos=p, max_new_tokens=max_new_tokens,
-                            last_token=tok, seed=seq_seed, tokens=[tok])
+                            last_token=tok, seed=seq_seed, tokens=[tok],
+                            shared_prefix_len=shared_len)
+        seq.prefix_keys = pool.register_prefix(prompt_np, pages)
+        return seq
 
     def decode_step_batch(self, seqs: Sequence[PagedSequence]) -> np.ndarray:
         """One decode step for up to ``decode_batch`` running sequences
@@ -243,6 +348,15 @@ class Engine:
         cap = self._decode_batch
         if len(seqs) > cap:
             raise ValueError(f"{len(seqs)} sequences > decode_batch={cap}")
+        ps = self.pool.page_size
+        for seq in seqs:
+            # copy-on-write BEFORE the donating decode jit: a sequence
+            # about to insert into a page other sequences still map
+            # gets a private copy first (sharing must never let one
+            # request's decode tokens leak into another's prefix)
+            idx = seq.pos // ps
+            if self.pool.refcount(seq.pages[idx]) > 1:
+                self._cow_page(seq, idx)
         tokens = np.zeros((cap, 1), np.int32)
         bt = np.full((cap, self._max_pages), 0, np.int32)
         pos = np.zeros((cap,), np.int32)
@@ -271,9 +385,38 @@ class Engine:
             seq.tokens.append(int(nxt[i]))
         return nxt[:len(seqs)]
 
+    def _cow_page(self, seq: PagedSequence, idx: int) -> None:
+        """Give ``seq`` a private copy of its shared page ``idx``
+        before it writes into it.  Raises OutOfPages (tagged with
+        ``cow_seq``) when no page is free — before any donation, so
+        the engine's caches survive and only this request need fail."""
+        old = seq.pages[idx]
+        try:
+            new = self.pool.alloc(1)[0]
+        except OutOfPages as exc:
+            exc.cow_seq = seq
+            raise
+        try:
+            self._paged_caches = self._copy_page(
+                self._paged_caches, jnp.asarray(old, jnp.int32),
+                jnp.asarray(new, jnp.int32))
+            jax.block_until_ready(jax.tree.leaves(self._paged_caches)[0])
+        except Exception:
+            self._caches_poisoned = True    # donated buffers are gone
+            self.pool.decref([new])         # unowned copy must not leak
+            raise
+        # the copy diverges from the indexed prefix the moment we
+        # insert, so this sequence stops backing entries for the old
+        # page; the remaining holders keep them valid
+        seq.prefix_keys = self.pool.disown_prefix(seq.prefix_keys, old)
+        self.pool.decref([old])
+        seq.pages[idx] = new
+        seq.block_table[idx] = new
+        self.cow_count += 1
+
     def generate_paged(self, prompt, *, max_new_tokens: int) -> Dict[str, Any]:
         """Single-request convenience over the paged entry points
-        (prefill -> solo decode batch -> free pages); the reference
+        (prefill -> solo decode batch -> release pages); the reference
         the scheduler/benchmark compare continuous batching against."""
         t0 = time.time()
         seq = self.prefill_into_pages(prompt, max_new_tokens=max_new_tokens)
@@ -283,7 +426,7 @@ class Engine:
                 self.decode_step_batch([seq])
             t2 = time.time()
         finally:
-            self.pool.free(seq.pages)   # a failed decode must not leak
+            self.pool.release(seq)      # a failed decode must not leak
         prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
         tokens = np.concatenate([prompt_np, np.asarray(seq.tokens, np.int32)])
         return {"tokens": tokens, "prefill_s": t1 - t0, "decode_s": t2 - t1,

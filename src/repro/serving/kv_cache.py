@@ -1,4 +1,5 @@
-"""Paged KV-cache pool: block-table + free-list page allocator.
+"""Paged KV-cache pool: refcounted block-table + free-list allocator
+with content-addressed prefix sharing.
 
 The device side of paging lives in repro.models.attention (pool-wide
 page slabs, block-table gather, the shared decode mask) and
@@ -11,10 +12,20 @@ Why pages: the ring-buffer engine reserves ``max_len`` KV slots per
 batch slot, so memory scales with the worst case.  A pool is sized in
 *pages* (num_pages x page_size tokens, shared by every in-flight
 request); a request holds ceil(tokens / page_size) pages for exactly
-as long as it runs, and frees them the step it finishes.  That is what
-lets the continuous-batching scheduler pack short (easy) and long
+as long as it runs, and releases them the step it finishes.  That is
+what lets the continuous-batching scheduler pack short (easy) and long
 (hard) requests onto the same device pool — the serving-side half of
 the paper's multiplexing win.
+
+Why sharing: the paper's zoo repeatedly probes models with the *same*
+input, and production prompts share long system-prefix heads.  Pages
+are therefore *refcounted*: a new request whose prompt shares a
+page-aligned prefix with a resident sequence maps the same physical
+pages (found through ``PrefixIndex``, a chain-hash over page-aligned
+prompt-token chunks), prefills only the divergent tail, and the pools'
+admission cost becomes *unique* pages.  ``free`` is decref-to-zero;
+a write into a page with refcount > 1 must copy-on-write first
+(Engine does the device copy; the pool does the bookkeeping).
 
 Page 0 is the scratch page (attention.SCRATCH_PAGE): padding
 block-table entries and inactive decode rows point at it, and nothing
@@ -24,8 +35,9 @@ hands it out.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import heapq
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -55,21 +67,171 @@ class PagedCacheConfig:
                 f"got {self.num_pages}")
 
 
-class PagePool:
-    """Free-list allocator over one model's page pool (host side only).
+# ---------------------------------------------------------------------------
+# Prefix index: page-aligned prompt chunks -> resident physical pages
+# ---------------------------------------------------------------------------
 
-    Pages are handed out lowest-id-first so repeated traces allocate
-    deterministically; ``peak_in_use`` records the high-water mark the
-    benchmarks report as the real memory ceiling.
+def _chunk_key(prev: bytes, tokens: np.ndarray, partial: bool) -> bytes:
+    """Chain hash of one page chunk.  Keying on the whole token chain
+    (prev digest + this chunk's bytes) makes a key a content address
+    for *prefix + chunk*, so two prompts can only collide on a key if
+    their page-aligned prefixes are token-identical (modulo sha1)."""
+    h = hashlib.sha1(prev)
+    h.update(b"P" if partial else b"F")       # a partial chunk never
+    h.update(tokens.tobytes())                # aliases a full one
+    return h.digest()
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    page: int           # resident physical page holding this chunk's KV
+    count: int          # resident sequences currently backing the entry
+
+
+class PrefixIndex:
+    """Content-addressed map from page-aligned prompt chunks to
+    resident physical pages.
+
+    Entries exist only while at least one registered (resident)
+    sequence still holds the page, so a lookup can never hand out a
+    freed page: ``PagePool.decref`` purges a page's entries the moment
+    its refcount reaches zero, and retiring sequences ``unregister``
+    their claims first.  The terminal *partial* chunk of a prompt is
+    indexed too (under a distinct key tag): that is what lets a fully
+    identical prompt share its boundary page — the page decode later
+    copy-on-writes.
     """
 
-    def __init__(self, num_pages: int, page_size: int = 64):
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._entries: Dict[bytes, _PrefixEntry] = {}
+        self._page_keys: Dict[int, Set[bytes]] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _keys_for(self, tokens) -> List[Tuple[bytes, bool]]:
+        """(key, is_partial) for every page-aligned chunk of ``tokens``.
+        A zero-token prompt yields no keys — empty chunks are never
+        indexed (see PagePool.pages_for: zero tokens need zero pages)."""
+        toks = np.ascontiguousarray(np.asarray(tokens).reshape(-1), np.int64)
+        ps = self.page_size
+        keys: List[Tuple[bytes, bool]] = []
+        prev = b""
+        for start in range(0, len(toks), ps):
+            chunk = toks[start:start + ps]
+            partial = len(chunk) < ps
+            prev = _chunk_key(prev, chunk, partial)
+            keys.append((prev, partial))
+        return keys
+
+    def lookup(self, tokens) -> Tuple[List[int], int]:
+        """Longest indexed page-aligned prefix of ``tokens``.
+
+        Returns (pages, matched_len): matched_len is a multiple of
+        page_size (full chunks only), except when the *entire* prompt —
+        including its partial terminal chunk — is resident, in which
+        case matched_len == len(tokens) and the last returned page is
+        the resident's partially-filled boundary page.
+        """
+        toks = np.asarray(tokens).reshape(-1)
+        pages: List[int] = []
+        matched = 0
+        for key, partial in self._keys_for(toks):
+            ent = self._entries.get(key)
+            if ent is None:
+                break
+            pages.append(ent.page)
+            matched = len(toks) if partial else matched + self.page_size
+        return pages, matched
+
+    def register(self, tokens, pages: Sequence[int]) -> List[bytes]:
+        """Register a resident sequence's prompt chunks -> its pages.
+        Returns the keys this sequence now backs; the sequence must
+        keep them and hand them to ``unregister`` when it retires."""
+        out: List[bytes] = []
+        for i, (key, _partial) in enumerate(self._keys_for(tokens)):
+            if i >= len(pages):
+                break
+            ent = self._entries.get(key)
+            if ent is None:
+                ent = _PrefixEntry(page=int(pages[i]), count=0)
+                self._entries[key] = ent
+                self._page_keys.setdefault(ent.page, set()).add(key)
+            elif ent.page != int(pages[i]):
+                # same content resident under a different physical page
+                # (e.g. after a copy-on-write): don't back an entry
+                # whose page this sequence does not hold
+                continue
+            ent.count += 1
+            out.append(key)
+        return out
+
+    def unregister(self, keys: Sequence[bytes]) -> None:
+        """Drop one backing per key; entries fall away at zero.
+        Lenient: keys already purged by a page free are skipped."""
+        for key in keys:
+            ent = self._entries.get(key)
+            if ent is None:
+                continue
+            ent.count -= 1
+            if ent.count <= 0:
+                del self._entries[key]
+                pk = self._page_keys.get(ent.page)
+                if pk is not None:
+                    pk.discard(key)
+                    if not pk:
+                        del self._page_keys[ent.page]
+
+    def disown(self, keys: Sequence[bytes], page: int) -> List[bytes]:
+        """A sequence stops backing entries that point at ``page``
+        (it copy-on-wrote the page away).  Returns the surviving keys."""
+        kept: List[bytes] = []
+        for key in keys:
+            ent = self._entries.get(key)
+            if ent is not None and ent.page == int(page):
+                self.unregister([key])
+            else:
+                kept.append(key)
+        return kept
+
+    def drop_page(self, page: int) -> None:
+        """Purge every entry that maps to ``page`` (the page is being
+        freed — a legacy ``free(pages)`` caller may not have
+        unregistered first; the index must never outlive the page)."""
+        for key in self._page_keys.pop(int(page), set()):
+            self._entries.pop(key, None)
+
+
+# ---------------------------------------------------------------------------
+# PagePool
+# ---------------------------------------------------------------------------
+
+class PagePool:
+    """Refcounted free-list allocator over one model's page pool (host
+    side only).
+
+    Pages are handed out lowest-id-first so repeated traces allocate
+    deterministically; ``peak_in_use`` records the high-water mark of
+    *unique* pages — the benchmarks report it as the real memory
+    ceiling, and with prefix sharing it is what admission budgets
+    against (a shared page costs nothing extra).
+    """
+
+    def __init__(self, num_pages: int, page_size: int = 64,
+                 prefix_sharing: bool = True):
         self.cfg = PagedCacheConfig(num_pages=num_pages, page_size=page_size)
+        self.prefix_sharing = prefix_sharing
         # min-heap: lowest-id-first hand-out stays deterministic across
         # churn at O(log F) per page instead of a sort per free()
         self._free: List[int] = list(range(SCRATCH_PAGE + 1, num_pages))
         heapq.heapify(self._free)
-        self._held: set = set()
+        self._ref: Dict[int, int] = {}
+        self._index = PrefixIndex(page_size)
+        # pages some holder may still write while shared (a resident's
+        # partially-filled boundary page mapped by an identical prompt):
+        # each may yet need refcount-1 copy-on-write allocations
+        self._cow_risk: Set[int] = set()
         self.peak_in_use = 0
 
     # ---- geometry -----------------------------------------------------
@@ -87,13 +249,34 @@ class PagePool:
 
     @property
     def pages_in_use(self) -> int:
-        return len(self._held)
+        """Unique physical pages held (shared pages count once)."""
+        return len(self._ref)
+
+    @property
+    def shared_pages(self) -> int:
+        return sum(1 for r in self._ref.values() if r > 1)
+
+    @property
+    def prefix_entries(self) -> int:
+        return len(self._index)
+
+    @property
+    def cow_headroom(self) -> int:
+        """Free pages admission must hold back: every writable shared
+        page may still need (refcount - 1) copy-on-write copies."""
+        return sum(max(self._ref.get(p, 0) - 1, 0) for p in self._cow_risk)
 
     def pages_for(self, num_tokens: int) -> int:
-        """Pages needed to hold ``num_tokens`` KV entries."""
-        return max(1, -(-int(num_tokens) // self.page_size))
+        """Pages needed to hold ``num_tokens`` KV entries.  Zero tokens
+        need zero pages — an empty sequence holds nothing and must
+        index nothing (the prefix index refuses empty chunks for the
+        same reason); negative counts are a sizing bug and raise."""
+        n = int(num_tokens)
+        if n < 0:
+            raise ValueError(f"num_tokens must be >= 0, got {n}")
+        return -(-n // self.page_size)
 
-    # ---- alloc / free -------------------------------------------------
+    # ---- alloc / refcounts --------------------------------------------
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
             raise OutOfPages(
@@ -103,21 +286,93 @@ class PagePool:
                 f"requests); raise num_pages, shrink max_new_tokens, or "
                 f"wait for running requests to finish")
         pages = [heapq.heappop(self._free) for _ in range(n)]
-        self._held.update(pages)
-        self.peak_in_use = max(self.peak_in_use, len(self._held))
+        for pg in pages:
+            self._ref[pg] = 1
+        self.peak_in_use = max(self.peak_in_use, len(self._ref))
         return pages
 
-    def free(self, pages: Sequence[int]) -> None:
-        uniq = set(pages)
-        bad = uniq - self._held
-        # validate (incl. duplicates in one call) before mutating
+    def refcount(self, page: int) -> int:
+        """Current reference count (0 for a free page)."""
+        return self._ref.get(int(page), 0)
+
+    def incref(self, pages: Sequence[int]) -> None:
+        """Add one reference per listed page (prefix sharing: a new
+        request maps a resident's pages).  All pages must be held."""
+        bad = [pg for pg in pages if int(pg) not in self._ref]
+        if bad:
+            raise ValueError(f"incref of free/foreign pages {sorted(bad)}")
+        for pg in pages:
+            self._ref[int(pg)] += 1
+
+    def decref(self, pages: Sequence[int]) -> None:
+        """Drop one reference per listed page; a page reaching zero
+        returns to the free list (and any prefix-index entries still
+        pointing at it are purged, so the index never outlives the
+        page).  ``decref([])`` is a no-op by contract — retiring an
+        empty sequence must succeed.  Duplicates in one call and
+        free/foreign pages are rejected before anything mutates."""
+        uniq = {int(pg) for pg in pages}
+        bad = uniq - set(self._ref)
         if bad or len(uniq) != len(pages):
             raise ValueError(
                 f"double free / foreign pages {sorted(bad) or list(pages)}")
         for pg in pages:
-            self._held.discard(pg)
-            heapq.heappush(self._free, pg)
+            pg = int(pg)
+            self._ref[pg] -= 1
+            if self._ref[pg] == 0:
+                del self._ref[pg]
+                self._index.drop_page(pg)
+                self._cow_risk.discard(pg)
+                heapq.heappush(self._free, pg)
+            elif self._ref[pg] == 1:
+                # exclusive again: no copy-on-write can be pending
+                self._cow_risk.discard(pg)
 
+    def free(self, pages: Sequence[int]) -> None:
+        """Decref-to-zero compatibility alias: with refcounts, "free"
+        means dropping this holder's reference — the page only returns
+        to the free list when no other sequence still maps it."""
+        self.decref(pages)
+
+    def mark_cow_risk(self, page: int) -> None:
+        """Flag a shared page some holder may still write (admission
+        reserves ``cow_headroom`` free pages against these)."""
+        if self.refcount(page) > 1:
+            self._cow_risk.add(int(page))
+
+    # ---- prefix sharing -----------------------------------------------
+    def lookup_prefix(self, tokens) -> Tuple[List[int], int]:
+        """Resident pages matching ``tokens``' page-aligned prefix:
+        (pages, matched_len).  Pure — call ``incref`` to map them."""
+        if not self.prefix_sharing:
+            return [], 0
+        return self._index.lookup(tokens)
+
+    def register_prefix(self, tokens, pages: Sequence[int]) -> List[bytes]:
+        """Index a now-resident sequence's prompt chunks so later
+        requests can share them.  Returns the backing keys (store on
+        the sequence; ``release`` hands them back)."""
+        if not self.prefix_sharing:
+            return []
+        return self._index.register(tokens, pages)
+
+    def unregister_prefix(self, keys: Sequence[bytes]) -> None:
+        self._index.unregister(keys)
+
+    def disown_prefix(self, keys: Sequence[bytes], page: int) -> List[bytes]:
+        return self._index.disown(keys, page)
+
+    def release(self, seq: "PagedSequence") -> None:
+        """Retire one sequence: unregister its prefix-index claims,
+        then decref its pages.  Pages still shared by other residents
+        survive; exclusive ones return to the free list."""
+        keys = getattr(seq, "prefix_keys", None)
+        if keys:
+            self._index.unregister(keys)
+            seq.prefix_keys = []
+        self.decref(seq.pages)
+
+    # ---- rendering / stats --------------------------------------------
     def block_table(self, pages: Sequence[int], max_pages: int) -> np.ndarray:
         """Render an ordered page list as a padded block-table row."""
         if len(pages) > max_pages:
@@ -130,7 +385,10 @@ class PagePool:
     def stats(self) -> Dict[str, int]:
         return {"num_pages": self.num_pages, "page_size": self.page_size,
                 "pages_in_use": self.pages_in_use, "num_free": self.num_free,
-                "peak_pages_in_use": self.peak_in_use}
+                "peak_pages_in_use": self.peak_in_use,
+                "shared_pages": self.shared_pages,
+                "prefix_entries": self.prefix_entries,
+                "cow_headroom": self.cow_headroom}
 
 
 @dataclasses.dataclass
@@ -144,6 +402,11 @@ class PagedSequence:
     with fold_in(key(seed), i)), so a sampled generation is a function
     of (seed, prompt) alone — independent of batch composition, engine
     history, and whether it decoded solo or continuously batched.
+
+    ``shared_prefix_len`` is how many prompt tokens were mapped from a
+    resident sequence instead of prefilled (0 = no sharing), and
+    ``prefix_keys`` are this sequence's prefix-index claims —
+    ``PagePool.release`` retires both together.
     """
     pages: List[int]
     block_table: np.ndarray          # (max_pages,) int32, scratch-padded
@@ -153,6 +416,8 @@ class PagedSequence:
     last_token: int
     seed: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
+    shared_prefix_len: int = 0
+    prefix_keys: List[bytes] = dataclasses.field(default_factory=list)
 
     @property
     def done(self) -> bool:

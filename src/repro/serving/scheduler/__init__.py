@@ -27,12 +27,13 @@ from repro.serving.scheduler.metrics import LatencyReservoir, SchedulerMetrics
 from repro.serving.scheduler.traffic import TrafficConfig, arrival_times, replay
 from repro.serving.scheduler.runtime import (MuxScheduler, PagedLLMConfig,
                                              PagedLLMScheduler,
-                                             SchedulerConfig)
+                                             SchedulerConfig,
+                                             SchedulerLifecycle)
 
 __all__ = [
     "Request", "RequestState", "ActiveSequence", "BatchingPolicy",
     "DecodeSlots", "MicroBatcher", "ModelQueue", "AdmissionController",
     "LatencyReservoir", "SchedulerMetrics", "TrafficConfig", "arrival_times",
     "replay", "MuxScheduler", "PagedLLMConfig", "PagedLLMScheduler",
-    "SchedulerConfig",
+    "SchedulerConfig", "SchedulerLifecycle",
 ]

@@ -43,50 +43,27 @@ from repro.serving.scheduler.metrics import SchedulerMetrics
 from repro.serving.scheduler.request import Request, RequestState
 
 
-@dataclasses.dataclass
-class SchedulerConfig:
-    max_batch_size: int = 8        # bucket capacity per model step
-    max_wait_ms: float = 5.0       # flush a partial batch after this
-    default_slo_ms: float = 100.0  # deadline when submit passes none
-    max_workers: Optional[int] = None  # executor threads (None = N models)
-    probe_batch_size: int = 1      # admission probe shape: arrivals are
-    #   padded/chunked to this so the probe compiles exactly once
-    #   regardless of burst size.  1 is right for open-loop singleton
-    #   submits (a bigger shape taxes every submit — the probe costs
-    #   grow with batch); raise it when traffic arrives in ticks fed
-    #   through submit_many
+class SchedulerLifecycle:
+    """Start/stop/drain + inflight-future bookkeeping shared by the
+    request-level (MuxScheduler) and token-level (PagedLLMScheduler)
+    runtimes.
 
-    def policy(self) -> BatchingPolicy:
-        return BatchingPolicy(max_batch_size=self.max_batch_size,
-                              max_wait_ms=self.max_wait_ms)
-
-
-class MuxScheduler:
-    """Request-level serving runtime over a MuxServer-compatible server.
-
-    The server must expose ``probe_weights(x)``, ``select(w)``,
-    ``model_step(m, bucket)``, ``costs`` and ``num_models`` —
-    MuxServer does; tests may duck-type it.
+    A subclass calls ``_init_lifecycle`` from its constructor (after
+    setting ``self.metrics``), implements ``_worker(m)`` as its serving
+    loop, and may override ``_reclaim_stranded`` to hand back resources
+    a no-drain stop leaves behind.  Everything else — worker task
+    management, executor lifetime, graceful vs cancelled shutdown, and
+    the inflight-future set that ``drain`` waits on — lives here once.
     """
 
-    def __init__(self, server, cfg: Optional[SchedulerConfig] = None,
-                 clock=time.monotonic):
-        # clock parameterizes timestamps/deadlines for testability, but
-        # worker waits still run on the event loop's real time — it
-        # must advance with wall clock (a frozen fake clock would keep
-        # max-wait flushes from ever firing)
-        self.server = server
-        self.cfg = cfg or SchedulerConfig()
+    _thread_prefix = "serving-worker"
+
+    def _init_lifecycle(self, n_workers: int, max_workers: Optional[int],
+                        clock) -> None:
         self.clock = clock
-        n = server.num_models
-        self.queues = [ModelQueue(m) for m in range(n)]
-        self.metrics = SchedulerMetrics(np.asarray(server.costs).tolist(),
-                                        clock=clock)
-        self.batcher = MicroBatcher(self.cfg.policy())
-        self.admission = AdmissionController(
-            server, self.queues, self.metrics, clock,
-            probe_batch=self.cfg.probe_batch_size)
-        self._events = [asyncio.Event() for _ in range(n)]
+        self._n_workers = n_workers
+        self._max_workers = max_workers
+        self._events = [asyncio.Event() for _ in range(n_workers)]
         self._workers: List[asyncio.Task] = []
         self._pool: Optional[ThreadPoolExecutor] = None
         self._running = False
@@ -94,23 +71,27 @@ class MuxScheduler:
         self._next_rid = 0
         self._inflight: set = set()
 
+    async def _worker(self, m: int) -> None:
+        raise NotImplementedError
+
     # ---- lifecycle ----------------------------------------------------
     async def start(self) -> None:
-        assert not self._running, "scheduler already started"
+        if self._running:
+            raise RuntimeError("scheduler already started")
         self._running = True
         self._stopping = False
         self._pool = ThreadPoolExecutor(
-            max_workers=self.cfg.max_workers or self.server.num_models,
-            thread_name_prefix="mux-worker")
+            max_workers=self._max_workers or self._n_workers,
+            thread_name_prefix=self._thread_prefix)
         self.metrics.on_start(self.clock())
         self._workers = [asyncio.ensure_future(self._worker(m))
-                         for m in range(self.server.num_models)]
+                         for m in range(self._n_workers)]
 
     async def stop(self, drain: bool = True) -> None:
-        """Graceful shutdown: stop accepting, flush every queued request
-        (partial buckets form immediately), join the workers.  With
-        drain=False, workers are cancelled and still-pending futures
-        are cancelled with them."""
+        """Graceful shutdown: stop accepting, flush/finish every queued
+        request, join the workers.  With drain=False, workers are
+        cancelled, still-pending futures are cancelled with them, and
+        ``_reclaim_stranded`` hands back whatever they held."""
         if not self._running:
             return
         self._stopping = True
@@ -130,17 +111,91 @@ class MuxScheduler:
         self.metrics.on_stop(self.clock())
         self._pool.shutdown(wait=True)
         self._pool = None
+        self._reclaim_stranded(self.clock())
         self._running = False
         for res in results:
             if isinstance(res, Exception):
                 raise res
 
-    async def __aenter__(self) -> "MuxScheduler":
+    def _reclaim_stranded(self, t: float) -> None:
+        """Hook: reclaim resources (pages, queued requests) a no-drain
+        stop stranded.  Runs after the executor has drained, so no
+        zombie model step can race the reclamation.  Default: nothing
+        to reclaim."""
+
+    async def __aenter__(self):
         await self.start()
         return self
 
     async def __aexit__(self, *exc) -> None:
         await self.stop(drain=not any(exc))
+
+    async def drain(self) -> None:
+        """Wait until every submitted request has completed."""
+        while self._inflight:
+            await asyncio.wait(list(self._inflight))
+
+    # ---- submission bookkeeping ---------------------------------------
+    def _check_accepting(self) -> None:
+        if not self._running or self._stopping:
+            raise RuntimeError("scheduler is not running (start() it, or "
+                               "it is stopping): request rejected")
+
+    def _next_request_id(self) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
+
+    def _register_inflight(self, req: Request) -> None:
+        self._inflight.add(req.future)
+        req.future.add_done_callback(self._inflight.discard)
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch_size: int = 8        # bucket capacity per model step
+    max_wait_ms: float = 5.0       # flush a partial batch after this
+    default_slo_ms: float = 100.0  # deadline when submit passes none
+    max_workers: Optional[int] = None  # executor threads (None = N models)
+    probe_batch_size: int = 1      # admission probe shape: arrivals are
+    #   padded/chunked to this so the probe compiles exactly once
+    #   regardless of burst size.  1 is right for open-loop singleton
+    #   submits (a bigger shape taxes every submit — the probe costs
+    #   grow with batch); raise it when traffic arrives in ticks fed
+    #   through submit_many
+
+    def policy(self) -> BatchingPolicy:
+        return BatchingPolicy(max_batch_size=self.max_batch_size,
+                              max_wait_ms=self.max_wait_ms)
+
+
+class MuxScheduler(SchedulerLifecycle):
+    """Request-level serving runtime over a MuxServer-compatible server.
+
+    The server must expose ``probe_weights(x)``, ``select(w)``,
+    ``model_step(m, bucket)``, ``costs`` and ``num_models`` —
+    MuxServer does; tests may duck-type it.
+    """
+
+    _thread_prefix = "mux-worker"
+
+    def __init__(self, server, cfg: Optional[SchedulerConfig] = None,
+                 clock=time.monotonic):
+        # clock parameterizes timestamps/deadlines for testability, but
+        # worker waits still run on the event loop's real time — it
+        # must advance with wall clock (a frozen fake clock would keep
+        # max-wait flushes from ever firing)
+        self.server = server
+        self.cfg = cfg or SchedulerConfig()
+        n = server.num_models
+        self.queues = [ModelQueue(m) for m in range(n)]
+        self.metrics = SchedulerMetrics(np.asarray(server.costs).tolist(),
+                                        clock=clock)
+        self.batcher = MicroBatcher(self.cfg.policy())
+        self.admission = AdmissionController(
+            server, self.queues, self.metrics, clock,
+            probe_batch=self.cfg.probe_batch_size)
+        self._init_lifecycle(n, self.cfg.max_workers, clock)
 
     def warmup(self, sample_x) -> None:
         """Compile the probe and every model step at their serving
@@ -166,18 +221,15 @@ class MuxScheduler:
         the probe over a bursty arrival tick, raise probe_batch_size
         toward the tick size — ceil(k / probe_batch_size) device
         dispatches run inline on the event loop either way."""
-        if not self._running or self._stopping:
-            raise RuntimeError("scheduler is not running (start() it, or "
-                               "it is stopping): request rejected")
+        self._check_accepting()
         now = self.clock()
         slo = (slo_ms if slo_ms is not None else self.cfg.default_slo_ms)
         loop = asyncio.get_running_loop()
         reqs = []
         for x in xs:
-            req = Request(rid=self._next_rid, x=x, arrival_t=now,
+            req = Request(rid=self._next_request_id(), x=x, arrival_t=now,
                           deadline_t=now + slo / 1e3,
                           future=loop.create_future())
-            self._next_rid += 1
             self.metrics.on_arrival(req)
             reqs.append(req)
         try:
@@ -192,18 +244,12 @@ class MuxScheduler:
                 self.metrics.on_fail(req)
             return [req.future for req in reqs]
         for req in reqs:
-            self._inflight.add(req.future)
-            req.future.add_done_callback(self._inflight.discard)
+            self._register_inflight(req)
             self._events[req.model_id].set()
         return [req.future for req in reqs]
 
     async def submit(self, x, *, slo_ms: Optional[float] = None):
         return await self.submit_nowait(x, slo_ms=slo_ms)
-
-    async def drain(self) -> None:
-        """Wait until every submitted request has completed."""
-        while self._inflight:
-            await asyncio.wait(list(self._inflight))
 
     # ---- workers ------------------------------------------------------
     def _run_bucket(self, m: int, bucket) -> np.ndarray:
@@ -281,26 +327,32 @@ class PagedLLMConfig:
     idle_poll_s: float = 0.05       # fallback wake-up while queues are empty
 
 
-class PagedLLMScheduler:
+class PagedLLMScheduler(SchedulerLifecycle):
     """Token-level continuous-batching runtime over paged Engines.
 
     Each engine must already be paged (``Engine.init_paged``).  One
     worker per engine runs the continuous-decode loop:
 
       admit   pop deadline-ordered requests while a decode slot AND
-              enough free pages exist; prefill each into its pages on
+              enough *unique* pages exist — with prefix sharing, pages
+              mapped from a resident sequence cost nothing, and one
+              free page per writable shared page is held back for
+              copy-on-write; prefill each request's divergent tail on
               the executor — the new request joins the *running* decode
               batch at its own position, mid-generation of the others
       step    one ``decode_step_batch`` over every running request
               (rows at different lengths; that is the paged contract)
-      retire  a finished request frees its pages immediately (they are
-              reusable by the very next admission) and resolves its
-              future with prompt + generated tokens
+      retire  a finished request decrefs its pages immediately (pages
+              still shared with other residents survive; exclusive
+              ones are reusable by the very next admission) and
+              resolves its future with prompt + generated tokens
 
     Page exhaustion at admission is backpressure, not failure: the
     request stays queued until running requests retire — except
     requests that could never fit the pool, which fail fast.
     """
+
+    _thread_prefix = "paged-llm-worker"
 
     def __init__(self, engines: Sequence, cfg: Optional[PagedLLMConfig] = None,
                  *, select_fn: Optional[Callable[[Any], int]] = None,
@@ -315,7 +367,6 @@ class PagedLLMScheduler:
         self.engines = list(engines)
         self.cfg = cfg or PagedLLMConfig()
         self.select_fn = select_fn
-        self.clock = clock
         n = len(self.engines)
         self.queues = [ModelQueue(m) for m in range(n)]
         self.slots = [DecodeSlots(e.decode_batch) for e in self.engines]
@@ -325,55 +376,18 @@ class PagedLLMScheduler:
         self.decode_batches = 0
         self.mixed_admission_batches = 0   # batches mixing admit times
         self.tokens_generated = 0
-        self._events = [asyncio.Event() for _ in range(n)]
-        self._workers: List[asyncio.Task] = []
-        self._pool: Optional[ThreadPoolExecutor] = None
-        self._running = False
-        self._stopping = False
-        self._next_rid = 0
-        self._inflight: set = set()
         self._dead = [False] * n    # engine lost its caches (see _worker)
+        self._init_lifecycle(n, self.cfg.max_workers, clock)
 
-    # ---- lifecycle ----------------------------------------------------
-    async def start(self) -> None:
-        if self._running:
-            raise RuntimeError("scheduler already started")
-        self._running = True
-        self._stopping = False
-        self._pool = ThreadPoolExecutor(
-            max_workers=self.cfg.max_workers or len(self.engines),
-            thread_name_prefix="paged-llm-worker")
-        self.metrics.on_start(self.clock())
-        self._workers = [asyncio.ensure_future(self._worker(m))
-                         for m in range(len(self.engines))]
-
-    async def stop(self, drain: bool = True) -> None:
-        if not self._running:
-            return
-        self._stopping = True
-        for ev in self._events:
-            ev.set()
-        if not drain:
-            for w in self._workers:
-                w.cancel()
-        results = await asyncio.gather(*self._workers,
-                                       return_exceptions=True)
-        for fut in list(self._inflight):
-            if not fut.done():
-                fut.cancel()
-        self._workers = []
-        self.metrics.on_stop(self.clock())
-        self._pool.shutdown(wait=True)
-        self._pool = None
+    def _reclaim_stranded(self, t: float) -> None:
         # cancel-path cleanup: sequences stranded in slots by a
         # no-drain stop must hand their pages back (safe only now —
         # the executor is drained, so no zombie decode can write into
         # reclaimed pages).  A drained stop leaves slots empty.
-        t = self.clock()
         stopped = RuntimeError("scheduler stopped before completion")
         for m, slots in enumerate(self.slots):
             for e in slots.active():
-                self.engines[m].pool.free(e.seq.pages)
+                self.engines[m].pool.release(e.seq)
                 slots.retire(e)
                 e.req.fail(stopped, t)
                 self.metrics.on_fail(e.req)
@@ -384,23 +398,19 @@ class PagedLLMScheduler:
                 req = self.queues[m].pop()
                 req.fail(stopped, t)
                 self.metrics.on_fail(req)
-        self._running = False
-        for res in results:
-            if isinstance(res, Exception):
-                raise res
-
-    async def __aenter__(self) -> "PagedLLMScheduler":
-        await self.start()
-        return self
-
-    async def __aexit__(self, *exc) -> None:
-        await self.stop(drain=not any(exc))
 
     def warmup(self, prompt_lens: Sequence[int]) -> None:
         """Compile prefill at each padded prompt length and the decode
         step at the batch shape before traffic arrives (the pages a
         warmup request touches are freed again; garbage it leaves in
-        the pool is never visible through the mask)."""
+        the pool is never visible through the mask).
+
+        With prefix sharing, each length also admits an identical twin
+        prompt so the tail-prefill jit (at the one-page tail shape that
+        covers any sub-page divergence — its offsets are traced) and
+        the copy-on-write page copy compile up front instead of
+        stalling the first sharing request mid-traffic; multi-page
+        tails still compile on first use."""
         for m, engine in enumerate(self.engines):
             # clamp so warmup itself always clears the capacity check
             # (a real prompt near max_len compiles on first use
@@ -413,10 +423,24 @@ class PagedLLMScheduler:
                     continue
                 seq = engine.prefill_into_pages(
                     np.zeros((pl,), np.int32), max_new_tokens=2)
+                twin = None
+                if engine.pool.prefix_sharing:
+                    try:
+                        twin = engine.prefill_into_pages(
+                            np.zeros((pl,), np.int32), max_new_tokens=2)
+                    except OutOfPages:
+                        pass    # pool too small for a warmup pair:
+                        #         the tail path compiles on first use
                 try:
+                    # with a twin sharing the boundary page this decode
+                    # step also copy-on-writes, compiling _copy_page
                     engine.decode_step_batch([seq])
+                except OutOfPages:
+                    pass        # warmup COW found no free page: ditto
                 finally:
-                    engine.pool.free(seq.pages)   # never leak warmup pages
+                    engine.pool.release(seq)      # never leak warmup pages
+                    if twin is not None:
+                        engine.pool.release(twin)
 
     # ---- submission ---------------------------------------------------
     def _select(self, x) -> int:
@@ -440,26 +464,23 @@ class PagedLLMScheduler:
         full token array (prompt + generated).  ``seed`` keys the
         request's sampling chain when temperature > 0 (None = engine
         default, i.e. identical prompts sample identically)."""
-        if not self._running or self._stopping:
-            raise RuntimeError("scheduler is not running (start() it, or "
-                               "it is stopping): request rejected")
+        self._check_accepting()
         now = self.clock()
         slo = slo_ms if slo_ms is not None else self.cfg.default_slo_ms
         loop = asyncio.get_running_loop()
-        req = Request(rid=self._next_rid, x=np.asarray(prompt, np.int32),
+        req = Request(rid=self._next_request_id(),
+                      x=np.asarray(prompt, np.int32),
                       arrival_t=now, deadline_t=now + slo / 1e3,
                       future=loop.create_future(), seed=seed,
                       max_new_tokens=(max_new_tokens if max_new_tokens
                                       is not None
                                       else self.cfg.max_new_tokens))
-        self._next_rid += 1
         self.metrics.on_arrival(req)
         m = self._select(req.x)
         req.model_id = m
         self.queues[m].push(req, now)
         self.metrics.on_admit(req)
-        self._inflight.add(req.future)
-        req.future.add_done_callback(self._inflight.discard)
+        self._register_inflight(req)
         self._events[m].set()
         return req.future
 
@@ -469,16 +490,17 @@ class PagedLLMScheduler:
         return await self.submit_nowait(prompt, max_new_tokens=max_new_tokens,
                                         slo_ms=slo_ms, seed=seed)
 
-    async def drain(self) -> None:
-        while self._inflight:
-            await asyncio.wait(list(self._inflight))
-
     # ---- the continuous-decode loop -----------------------------------
     def _admissible(self, engine, req: Request) -> bool:
-        """Enough free pages right now?  (Pages for the whole request
-        are reserved at admission, so decode can never OOM mid-flight.)"""
-        need = engine.pool.pages_for(len(req.x) + req.max_new_tokens)
-        return need <= engine.pool.num_free
+        """Enough free pages right now?  Admission budgets *unique*
+        pages — the prompt's resident shared prefix costs nothing —
+        plus the pool's copy-on-write headroom (pages held back so a
+        later write into a shared page can always get its private
+        copy; decode must never OOM mid-flight)."""
+        need, cow_extra = engine.admission_page_cost(req.x,
+                                                     req.max_new_tokens)
+        reserve = engine.pool.cow_headroom + cow_extra
+        return need + reserve <= engine.pool.num_free
 
     def _fits_ever(self, engine, req: Request) -> bool:
         need = engine.pool.pages_for(len(req.x) + req.max_new_tokens)
@@ -522,13 +544,25 @@ class PagedLLMScheduler:
                     # back before dying
                     try:
                         seq = await prefill_fut
-                        engine.pool.free(seq.pages)
+                        engine.pool.release(seq)
                     except Exception:
                         pass            # prefill itself failed: nothing held
                     req.fail(RuntimeError("scheduler stopped before "
                                           "completion"), self.clock())
                     self.metrics.on_fail(req)
                     raise
+                except OutOfPages as exc:
+                    if engine.caches_poisoned:
+                        req.fail(exc, self.clock())
+                        self.metrics.on_fail(req)
+                        self._kill_engine(m, exc)
+                        return
+                    # the unique-page admission estimate went stale
+                    # between check and prefill (a shared resident
+                    # retired).  Backpressure, not failure: requeue and
+                    # wait for running requests to free pages.
+                    queue.push(req, self.clock())
+                    break
                 except Exception as exc:
                     req.fail(exc, self.clock())
                     self.metrics.on_fail(req)
@@ -546,16 +580,27 @@ class PagedLLMScheduler:
             # ---- step: one token for every running request ----------
             active = slots.active()
             if active:
-                if len({e.admit_step for e in active}) > 1:
-                    self.mixed_admission_batches += 1
-                self.decode_batches += 1
-                self.metrics.on_batch(m, len(active), slots.capacity)
                 t0 = self.clock()
                 try:
                     await loop.run_in_executor(
                         self._pool, engine.decode_step_batch,
                         [e.seq for e in active])
                 except Exception as exc:
+                    cow_seq = getattr(exc, "cow_seq", None)
+                    if (isinstance(exc, OutOfPages) and cow_seq is not None
+                            and not engine.caches_poisoned):
+                        # copy-on-write found no free page (admission
+                        # headroom raced).  The COW check runs before
+                        # the donating jit, so the engine survives:
+                        # fail only the writer and keep serving.
+                        for e in active:
+                            if e.seq is cow_seq:
+                                engine.pool.release(e.seq)
+                                slots.retire(e)
+                                e.req.fail(exc, self.clock())
+                                self.metrics.on_fail(e.req)
+                                break
+                        continue
                     # decode donates the engine's caches; an execution
                     # failure deletes them, so the engine cannot serve
                     # again — fail everything it holds and retire the
@@ -563,6 +608,13 @@ class PagedLLMScheduler:
                     self._kill_engine(m, exc)
                     return
                 t1 = self.clock()
+                # count only after the step ran: the COW-failure retry
+                # path above must not double-count a batch that never
+                # executed
+                if len({e.admit_step for e in active}) > 1:
+                    self.mixed_admission_batches += 1
+                self.decode_batches += 1
+                self.metrics.on_batch(m, len(active), slots.capacity)
                 self.metrics.on_model_busy(m, t1 - t0)
                 self.tokens_generated += len(active)
                 step_idx += 1
@@ -587,7 +639,7 @@ class PagedLLMScheduler:
         engine, slots, queue = self.engines[m], self.slots[m], self.queues[m]
         t = self.clock()
         for e in slots.active():
-            engine.pool.free(e.seq.pages)
+            engine.pool.release(e.seq)
             slots.retire(e)
             e.req.fail(exc, t)
             self.metrics.on_fail(e.req)
@@ -598,10 +650,11 @@ class PagedLLMScheduler:
             self.metrics.on_fail(req)
 
     def _retire(self, m: int, entry, t: float) -> None:
-        """Finished: free the pages *now* (the next admission can reuse
-        them) and resolve the future."""
+        """Finished: decref the pages *now* (exclusive pages are
+        reusable by the next admission; shared ones live on with the
+        sequences still mapping them) and resolve the future."""
         engine = self.engines[m]
-        engine.pool.free(entry.seq.pages)
+        engine.pool.release(entry.seq)
         self.slots[m].retire(entry)
         req = entry.req
         # per-token relative cost of the engine that served the request
@@ -621,6 +674,11 @@ class PagedLLMScheduler:
             "decode_batches": self.decode_batches,
             "mixed_admission_batches": self.mixed_admission_batches,
             "tokens_generated": self.tokens_generated,
+            "prefill_tokens_computed": sum(e.prefill_tokens_computed
+                                           for e in self.engines),
+            "prefill_tokens_shared": sum(e.prefill_tokens_shared
+                                         for e in self.engines),
+            "cow_copies": sum(e.cow_count for e in self.engines),
             "pools": [e.pool.stats() for e in self.engines],
         })
         return snap

@@ -79,6 +79,30 @@ def test_page_pool_accounting():
     np.testing.assert_array_equal(row, [3, 1, 0, 0])
 
 
+def test_page_pool_refcounts():
+    """Refcount semantics under sharing: incref'd pages survive decref
+    by one holder, return to the free list only at zero, and the COW
+    headroom tracks writable shared pages (see test_pool_property.py
+    for the randomized harness over the same invariants)."""
+    pool = PagePool(num_pages=8, page_size=4)
+    a = pool.alloc(3)
+    assert [pool.refcount(pg) for pg in a] == [1, 1, 1]
+    pool.incref(a[:2])                       # a second holder maps 2 pages
+    assert pool.refcount(a[0]) == 2
+    assert pool.pages_in_use == 3            # unique pages, shared count once
+    assert pool.shared_pages == 2
+    pool.mark_cow_risk(a[1])
+    assert pool.cow_headroom == 1
+    pool.decref(a)                           # first holder retires
+    assert pool.pages_in_use == 2 and pool.num_free == 5
+    assert pool.cow_headroom == 0            # exclusive again: no copy due
+    with pytest.raises(ValueError):
+        pool.incref([a[2]])                  # free page cannot be increfed
+    pool.decref(a[:2])                       # last holder retires
+    assert pool.pages_in_use == 0 and pool.num_free == 7
+    assert pool.refcount(a[0]) == 0
+
+
 # ---------------------------------------------------------------------------
 # Paged <-> ring numerical parity, per decode step
 # ---------------------------------------------------------------------------
@@ -322,6 +346,67 @@ def test_stop_without_drain_reclaims_pages():
         await sched.stop(drain=False)
         assert fut.done()
         return sched
+
+    asyncio.run(main())
+    assert eng.pool.pages_in_use == 0
+
+
+def test_paged_lifecycle_restart_and_double_start():
+    """SchedulerLifecycle regression on the token-level runtime:
+    double start raises, a stopped scheduler rejects submissions, and
+    the same instance restarts cleanly and serves again."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=32))
+    eng.init_paged(num_pages=12, page_size=4, decode_batch=2)
+    prompt = np.arange(5, dtype=np.int32) % cfg.vocab_size
+    ref = eng.generate_paged(prompt, max_new_tokens=4)["tokens"]
+
+    async def main():
+        sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=4))
+        await sched.start()
+        with pytest.raises(RuntimeError, match="already started"):
+            await sched.start()
+        out1 = await sched.submit(prompt)
+        await sched.stop()
+        await sched.stop()                   # idempotent
+        with pytest.raises(RuntimeError, match="not running"):
+            sched.submit_nowait(prompt)
+        async with sched:                    # restart the same instance
+            out2 = await sched.submit(prompt)
+        return out1, out2
+
+    out1, out2 = asyncio.run(main())
+    np.testing.assert_array_equal(out1, ref)
+    np.testing.assert_array_equal(out2, ref)
+    assert eng.pool.pages_in_use == 0
+
+
+def test_paged_lifecycle_drain_then_cancel_mid_decode():
+    """drain() leaves nothing inflight; a later no-drain stop mid
+    generation fails the stranded future AND returns its pages —
+    cancel-mid-decode must not shrink the engine's pool."""
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, ServeConfig(max_len=64))
+    eng.init_paged(num_pages=20, page_size=4, decode_batch=2)
+
+    async def main():
+        sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=30))
+        await sched.start()
+        fut1 = sched.submit_nowait(np.zeros(4, np.int32), max_new_tokens=2)
+        await sched.drain()
+        assert fut1.done() and not fut1.cancelled()
+        fut2 = sched.submit_nowait(np.zeros(8, np.int32))
+        while sched.decode_batches < 2:      # provably mid-generation
+            await asyncio.sleep(0.005)
+        await sched.stop(drain=False)
+        # the stranded future is resolved one way or the other —
+        # cancelled by stop, or failed by the reclamation hook
+        assert fut2.done()
+        if not fut2.cancelled():
+            with pytest.raises(RuntimeError, match="stopped before"):
+                fut2.result()
 
     asyncio.run(main())
     assert eng.pool.pages_in_use == 0

@@ -1,0 +1,175 @@
+"""Hypothesis property tests for the refcounted PagePool under random
+interleaved alloc / share / copy-on-write / decref op sequences, and
+for the prefix index under random prompt traffic.
+
+Invariants (the ownership contract the prefix-sharing serving stack
+leans on):
+  * refcount(page) always equals the number of holders — no page is
+    ever double-owned at refcount 1;
+  * pages_in_use + num_free is conserved at num_pages - 1;
+  * the scratch page is never handed out;
+  * allocation is lowest-id deterministic: replaying an op trace on a
+    fresh pool yields identical page assignments;
+  * after every sequence retires the pool drains to zero pages held,
+    zero prefix entries, zero COW headroom — nothing leaks.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import SCRATCH_PAGE
+from repro.serving.kv_cache import PagePool
+
+settings.register_profile("pool-ci", max_examples=40, deadline=None)
+settings.load_profile("pool-ci")
+
+
+class SimSeq:
+    """Shadow model of one sequence's page holdings."""
+
+    def __init__(self, pages):
+        self.pages = list(pages)
+        self.prefix_keys = []
+
+
+def apply_op(pool: PagePool, live, op):
+    """One deterministic interpreter for both the generation pass and
+    the replay pass (determinism is asserted between the two)."""
+    kind = op[0]
+    if kind == "alloc":
+        live.append(SimSeq(pool.alloc(op[1])))
+    elif kind == "share":
+        # a prefix-sharing join: the new sequence maps the same pages;
+        # its (now shared) boundary page may later need copy-on-write
+        src = live[op[1]]
+        pool.incref(src.pages)
+        pool.mark_cow_risk(src.pages[-1])
+        live.append(SimSeq(src.pages))
+    elif kind == "cow":
+        seq = live[op[1]]
+        old = seq.pages[op[2]]
+        new = pool.alloc(1)[0]
+        pool.decref([old])
+        seq.pages[op[2]] = new
+    elif kind == "release":
+        pool.release(live.pop(op[1]))
+    else:
+        raise AssertionError(op)
+
+
+def run_trace(pool: PagePool, trace):
+    live = []
+    for op in trace:
+        apply_op(pool, live, op)
+    return live
+
+
+def check_invariants(pool: PagePool, live):
+    assert pool.pages_in_use + pool.num_free == pool.num_pages - 1
+    holders = {}
+    for seq in live:
+        for pg in seq.pages:
+            assert pg != SCRATCH_PAGE
+            holders[pg] = holders.get(pg, 0) + 1
+    assert pool.pages_in_use == len(holders)
+    for pg, n in holders.items():
+        assert pool.refcount(pg) == n     # no double-own at refcount 1
+    assert pool.peak_in_use >= pool.pages_in_use
+    assert pool.cow_headroom <= pool.num_free + pool.pages_in_use
+
+
+@given(st.data())
+def test_pool_random_alloc_share_cow_decref(data):
+    num_pages = data.draw(st.integers(4, 20), label="num_pages")
+    pool = PagePool(num_pages=num_pages, page_size=4)
+    live, trace = [], []
+    for _ in range(data.draw(st.integers(1, 30), label="steps")):
+        ops = []
+        if pool.num_free:
+            ops.append("alloc")
+        if live:
+            ops.append("share")
+            ops.append("release")
+        if live and pool.num_free and any(
+                pool.refcount(pg) > 1 for s in live for pg in s.pages):
+            ops.append("cow")
+        kind = data.draw(st.sampled_from(sorted(ops)), label="op")
+        if kind == "alloc":
+            n = data.draw(st.integers(1, pool.num_free), label="n")
+            op = ("alloc", n)
+        elif kind == "share":
+            op = ("share", data.draw(st.integers(0, len(live) - 1),
+                                     label="seq"))
+        elif kind == "cow":
+            cands = [(i, j) for i, s in enumerate(live)
+                     for j, pg in enumerate(s.pages)
+                     if pool.refcount(pg) > 1]
+            op = ("cow",) + data.draw(st.sampled_from(cands), label="page")
+        else:
+            op = ("release", data.draw(st.integers(0, len(live) - 1),
+                                       label="seq"))
+        apply_op(pool, live, op)
+        trace.append(op)
+        check_invariants(pool, live)
+
+    # determinism: the same trace on a fresh pool hands out the same
+    # lowest-id pages in the same order
+    pool2 = PagePool(num_pages=num_pages, page_size=4)
+    live2 = run_trace(pool2, trace)
+    assert [s.pages for s in live2] == [s.pages for s in live]
+    assert pool2.pages_in_use == pool.pages_in_use
+
+    # zero leaks once everything retires
+    for seq in list(live):
+        pool.release(seq)
+    assert pool.pages_in_use == 0
+    assert pool.num_free == num_pages - 1
+    assert pool.prefix_entries == 0
+    assert pool.cow_headroom == 0
+    assert SCRATCH_PAGE not in pool._free           # scratch never freed
+    assert pool.refcount(SCRATCH_PAGE) == 0         # and never held
+
+
+@given(st.data())
+def test_prefix_index_random_prompt_traffic(data):
+    """Register/lookup/release under random prompts from a tiny
+    alphabet (forcing prefix collisions): lookups only ever return
+    resident pages covering a page-aligned (or whole-prompt) prefix,
+    empty prompts index nothing, and the index drains with the pool."""
+    ps = data.draw(st.sampled_from([2, 4]), label="page_size")
+    pool = PagePool(num_pages=24, page_size=ps)
+    live = []
+    for _ in range(data.draw(st.integers(1, 20), label="steps")):
+        if live and data.draw(st.booleans(), label="retire"):
+            pool.release(live.pop(data.draw(
+                st.integers(0, len(live) - 1), label="seq")))
+        else:
+            toks = np.asarray(data.draw(
+                st.lists(st.integers(0, 2), min_size=0, max_size=3 * ps),
+                label="prompt"), np.int32)
+            mapped, matched = pool.lookup_prefix(toks)
+            assert matched <= len(toks)
+            assert matched % ps == 0 or matched == len(toks)
+            assert len(mapped) == -(-matched // ps)
+            for pg in mapped:
+                assert pool.refcount(pg) >= 1
+            total = pool.pages_for(len(toks))
+            assert total == -(-len(toks) // ps)     # 0 tokens -> 0 pages
+            if total - len(mapped) > pool.num_free:
+                continue                    # backpressure: skip admission
+            pool.incref(mapped)
+            pages = list(mapped) + pool.alloc(total - len(mapped))
+            seq = SimSeq(pages)
+            seq.prefix_keys = pool.register_prefix(toks, pages)
+            assert len(seq.prefix_keys) <= len(pages)
+            if len(toks) == 0:
+                assert seq.prefix_keys == [] and pages == []
+            live.append(seq)
+        assert pool.pages_in_use + pool.num_free == pool.num_pages - 1
+    for seq in list(live):
+        pool.release(seq)
+    assert pool.pages_in_use == 0
+    assert pool.prefix_entries == 0
+    assert pool.num_free == pool.num_pages - 1

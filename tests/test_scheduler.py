@@ -415,6 +415,66 @@ def test_scheduler_stop_drains_partial_batches():
     asyncio.run(main())
 
 
+def test_lifecycle_double_start_raises_and_stop_is_idempotent():
+    """SchedulerLifecycle contract (shared by MuxScheduler and
+    PagedLLMScheduler): start() twice raises, stop() twice is a no-op,
+    and a stopped scheduler rejects submissions."""
+    server = FakeServer()
+
+    async def main():
+        sched = MuxScheduler(server, SchedulerConfig(max_batch_size=2,
+                                                     max_wait_ms=1.0))
+        await sched.start()
+        with pytest.raises(RuntimeError, match="already started"):
+            await sched.start()
+        await sched.submit(np.zeros(4, np.float32))
+        await sched.stop()
+        await sched.stop()                      # idempotent
+        with pytest.raises(RuntimeError, match="not running"):
+            sched.submit_nowait(np.zeros(4, np.float32))
+        assert sched.metrics.completed == 1
+
+    asyncio.run(main())
+
+
+def test_lifecycle_drain_waits_for_all_inflight():
+    server = FakeServer()
+
+    async def main():
+        sched = MuxScheduler(server, SchedulerConfig(max_batch_size=4,
+                                                     max_wait_ms=1.0))
+        async with sched:
+            futs = [sched.submit_nowait(np.zeros(4, np.float32))
+                    for _ in range(6)]
+            await sched.drain()
+            assert all(f.done() for f in futs)
+        assert sched.metrics.completed == 6
+
+    asyncio.run(main())
+
+
+def test_lifecycle_cancel_without_drain_fails_pending_futures():
+    """A no-drain stop must not leave futures unresolved: queued work
+    is cancelled with the workers."""
+    class SlowServer(FakeServer):
+        def model_step(self, m, bucket):
+            import time as _t
+            _t.sleep(0.05)
+            return super().model_step(m, bucket)
+
+    async def main():
+        sched = MuxScheduler(SlowServer(),
+                             SchedulerConfig(max_batch_size=64,
+                                             max_wait_ms=60_000.0))
+        await sched.start()
+        futs = [sched.submit_nowait(np.zeros(4, np.float32))
+                for _ in range(3)]
+        await sched.stop(drain=False)
+        assert all(f.done() for f in futs)       # resolved or cancelled
+
+    asyncio.run(main())
+
+
 def test_open_loop_replay_respects_schedule():
     server = FakeServer()
     xs = [np.zeros(4) for _ in range(10)]
