@@ -87,16 +87,16 @@ def bench_ring(cfg: ModelConfig, params, prompts) -> Dict:
 async def _drive_paged(sched: PagedLLMScheduler, prompts) -> None:
     async with sched:
         half = len(prompts) // 2
-        futures = [sched.submit_nowait(p, max_new_tokens=MAX_NEW)
+        handles = [sched.submit(p, max_new_tokens=MAX_NEW)
                    for p in prompts[:half]]
         # late arrivals join only after the first wave is mid-decode, so
         # the trace provably exercises join-a-running-batch admission
         while sched.decode_batches < 1:
             await asyncio.sleep(0.001)
         for p in prompts[half:]:
-            futures.append(sched.submit_nowait(p, max_new_tokens=MAX_NEW))
+            handles.append(sched.submit(p, max_new_tokens=MAX_NEW))
             await asyncio.sleep(ARRIVAL_GAP_S)
-        await asyncio.gather(*futures)
+        await asyncio.gather(*handles)
 
 
 def bench_paged(cfg: ModelConfig, params, prompts) -> Dict:

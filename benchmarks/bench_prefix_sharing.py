@@ -93,9 +93,9 @@ def serve_trace(cfg: ModelConfig, params, prompts, *,
             # index) before any follower admits: per-engine admissions
             # are serialized by the worker, so one submission order
             # exercises first-prefills / followers-map deterministically
-            futures = [sched.submit_nowait(p, max_new_tokens=MAX_NEW)
+            handles = [sched.submit(p, max_new_tokens=MAX_NEW)
                        for p in prompts]
-            outs.extend(await asyncio.gather(*futures))
+            outs.extend(await asyncio.gather(*handles))
 
     t0 = time.time()
     asyncio.run(run_and_collect())

@@ -64,7 +64,7 @@ async def _drive(server: MuxServer, traffic: TrafficConfig,
     sched = MuxScheduler(server, scfg)
     sched.warmup(xs[0])
     async with sched:
-        futures = await replay(sched.submit_nowait, list(xs),
+        futures = await replay(sched.submit, list(xs),
                                arrival_times(traffic))
         outputs = await asyncio.gather(*futures)
     # determinism contract: bitwise-identical to the direct model call.

@@ -12,6 +12,7 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   scheduler  — continuous-batching goodput vs load  (serving runtime)
   paged      — ring vs paged KV decode, mixed lens  (serving memory/runtime)
   prefix     — prefix-sharing COW pages vs private  (serving memory/prefill)
+  chunked    — chunked vs serial prefill TTFT       (serving streaming/TTFT)
   roofline   — dry-run roofline table               (EXPERIMENTS §Roofline)
 
 State (trained zoo + muxes) is cached under results/bench_state; set
@@ -52,7 +53,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,fig6,mux_kernel,"
-                         "scheduler,paged,prefix,roofline")
+                         "scheduler,paged,prefix,chunked,roofline")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -88,6 +89,9 @@ def main() -> None:
     if want("prefix"):
         from benchmarks import bench_prefix_sharing
         bench_prefix_sharing.run()
+    if want("chunked"):
+        from benchmarks import bench_chunked_prefill
+        bench_chunked_prefill.run()
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()

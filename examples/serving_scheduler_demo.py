@@ -81,7 +81,9 @@ async def serve(names, server, samples) -> None:
         tc = TrafficConfig(rate=rate, num_requests=len(samples),
                            pattern=pattern, seed=1)
         async with sched:
-            futures = await replay(sched.submit_nowait, list(samples),
+            # submit returns GenerationHandles; replay collects their
+            # futures so the open-loop schedule stays non-blocking
+            futures = await replay(sched.submit, list(samples),
                                    arrival_times(tc))
             outputs = await asyncio.gather(*futures)
         snap = sched.metrics.snapshot()
@@ -89,6 +91,8 @@ async def serve(names, server, samples) -> None:
         print(f"completed={snap['completed']}  "
               f"throughput={snap['throughput_rps']:.1f} req/s  "
               f"slo_violations={snap['slo_violations']}")
+        print(f"ttft ms: p50={snap['ttft_p50_ms']:.1f} "
+              f"p99={snap['ttft_p99_ms']:.1f}")
         print(f"latency ms: queue p50={snap['queue_p50_ms']:.1f} "
               f"p99={snap['queue_p99_ms']:.1f} | total "
               f"p50={snap['total_p50_ms']:.1f} p99={snap['total_p99_ms']:.1f}")

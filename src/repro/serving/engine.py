@@ -19,7 +19,9 @@ Two cache disciplines:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -82,6 +84,16 @@ class Engine:
         self.prefill_tokens_computed = 0
         self.prefill_tokens_shared = 0
         self.cow_count = 0
+        # cross-request logit cache: full-prompt chain hash -> the
+        # final prompt token's logits row.  A fully-resident repeat
+        # prompt (every page mapped from the prefix index) skips even
+        # the one-token tail prefill — a zero-FLOP admission.  Bounded
+        # LRU; disabled at capacity 0.
+        self._logit_cache: "collections.OrderedDict[bytes, np.ndarray]" = \
+            collections.OrderedDict()
+        self._logit_cache_cap = 0
+        self.logit_cache_hits = 0
+        self.logit_cache_misses = 0
 
     @property
     def caches_poisoned(self) -> bool:
@@ -106,17 +118,28 @@ class Engine:
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
 
-    def _sample_rows(self, logits, seeds, positions):
+    def _sample_rows(self, logits, seeds, positions, temps=None):
         """Per-row sampling for the paged batch: row i's key is
         fold_in(key(seeds[i]), positions[i]), so a request's sampled
-        tokens do not depend on which other requests share its batch."""
-        if self.scfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens do not depend on which other requests share its batch.
+        ``temps`` carries per-request temperature overrides (None entry
+        = engine default); rows at temperature <= 0 take the argmax."""
+        if temps is None:
+            t = np.full((np.shape(logits)[0],), self.scfg.temperature,
+                        np.float32)
+        else:
+            t = np.asarray([self.scfg.temperature if x is None else x
+                            for x in temps], np.float32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not (t > 0.0).any():
+            return greedy
         keys = jax.vmap(lambda s, p: jax.random.fold_in(jax.random.key(s), p)
                         )(jnp.asarray(seeds, jnp.uint32),
                           jnp.asarray(positions, jnp.int32))
-        return jax.vmap(lambda k, l: jax.random.categorical(
-            k, l / self.scfg.temperature))(keys, logits).astype(jnp.int32)
+        safe_t = jnp.where(t > 0.0, t, 1.0)
+        sampled = jax.vmap(lambda k, l: jax.random.categorical(k, l))(
+            keys, logits / safe_t[:, None]).astype(jnp.int32)
+        return jnp.where(jnp.asarray(t) > 0.0, sampled, greedy)
 
     def generate(self, prompts: jnp.ndarray, *, max_new_tokens: int,
                  image_embeds: Optional[jnp.ndarray] = None) -> Dict[str, Any]:
@@ -149,14 +172,18 @@ class Engine:
     # ------------------------------------------------------------------
     def init_paged(self, *, num_pages: int, page_size: int = 64,
                    decode_batch: int = 8, dtype=None,
-                   prefix_sharing: bool = True) -> PagePool:
+                   prefix_sharing: bool = True,
+                   logit_cache: int = 0) -> PagePool:
         """Allocate the paged KV pool and compile the paged entry
         points.  ``dtype=None`` honors ``cfg.kv_cache_dtype`` (int8
         pools store quantized pages, dequantized in-kernel).  The pool
         is sized in *pages*, not batch slots: memory scales with
         resident tokens, not max_len x batch.  ``prefix_sharing=False``
         disables the prefix index (every request prefills and holds
-        private pages — the pre-sharing baseline)."""
+        private pages — the pre-sharing baseline).  ``logit_cache`` is
+        the LRU capacity of the cross-request logit cache (0 = off): a
+        repeat prompt whose pages are all still resident skips even the
+        final-token tail prefill and samples from the cached logits."""
         if self.cfg.num_codebooks:
             raise NotImplementedError(
                 "paged decode supports single-stream token LMs")
@@ -168,6 +195,10 @@ class Engine:
         self.prefill_tokens_computed = 0
         self.prefill_tokens_shared = 0
         self.cow_count = 0
+        self._logit_cache = collections.OrderedDict()
+        self._logit_cache_cap = int(logit_cache)
+        self.logit_cache_hits = 0
+        self.logit_cache_misses = 0
         cfg = self.cfg
         self._paged_caches = tf.init_caches(cfg, 0, 0, dtype,
                                             num_pages=num_pages,
@@ -228,38 +259,68 @@ class Engine:
             return [], 0, 0
         return mapped, matched, shared_len
 
-    def admission_page_cost(self, prompt, max_new_tokens: int
+    def admission_page_cost(self, prompt, max_new_tokens: int, *,
+                            chunk_tokens: Optional[int] = None
                             ) -> Tuple[int, int]:
         """(pages a fresh admission would allocate now, free pages to
         hold back for its future copy-on-write).  With prefix sharing
         this is the *unique*-page cost — shared pages cost nothing
         extra; the headroom is 1 when the prompt would map a
         resident's partially-filled boundary page (identical prompt),
-        because decode later copies that page before inserting."""
+        because decode later copies that page before inserting.
+
+        With ``chunk_tokens`` (chunked prefill), admission budgets the
+        *first chunk* rather than the whole prompt: a long prompt only
+        needs its opening chunk's pages free to start prefilling —
+        later chunks allocate as they run, backpressured against the
+        running batch's frees."""
         prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
         p = len(prompt_np)
         total = self.pool.pages_for(p + max_new_tokens)
         mapped, matched, shared_len = self._shared_prefix(prompt_np, p)
-        if not mapped:
-            return total, 0
-        headroom = 1 if (matched == p and p % self.pool.page_size) else 0
+        headroom = (1 if (mapped and matched == p and p % self.pool.page_size)
+                    else 0)
+        if chunk_tokens is not None and shared_len + chunk_tokens < p:
+            first = self.pool.pages_for(shared_len + chunk_tokens)
+            return max(first - len(mapped), 0), headroom
         return total - len(mapped), headroom
 
-    def prefill_into_pages(self, prompt, *, max_new_tokens: int,
-                           seed: Optional[int] = None) -> PagedSequence:
-        """Admit one request: map any resident shared-prefix pages,
-        allocate fresh pages for the rest, prefill the (divergent tail
-        of the) prompt, and sample the first token.  The returned
-        sequence can join a running decode batch immediately.
+    @staticmethod
+    def _prompt_key(prompt_np: np.ndarray) -> bytes:
+        return hashlib.sha1(
+            np.ascontiguousarray(prompt_np, np.int64).tobytes()).digest()
 
-        With prefix sharing, a prompt whose page-aligned prefix matches
-        a resident sequence recomputes only the tail: the shared pages
-        are increfed, skipped by prefill, and protected from writes —
-        decode copy-on-writes before its first insert into one.
+    def _logit_cache_get(self, key: bytes) -> Optional[np.ndarray]:
+        row = self._logit_cache.get(key)
+        if row is not None:
+            self._logit_cache.move_to_end(key)
+        return row
 
-        Raises ValueError if prompt + max_new_tokens exceeds max_len,
-        and OutOfPages (a ValueError) when the pool cannot hold the
-        request — the scheduler treats the latter as backpressure.
+    def _logit_cache_put(self, key: bytes, row: np.ndarray) -> None:
+        if self._logit_cache_cap <= 0:
+            return
+        self._logit_cache[key] = row
+        self._logit_cache.move_to_end(key)
+        while len(self._logit_cache) > self._logit_cache_cap:
+            self._logit_cache.popitem(last=False)
+
+    # ---- resumable prefill (chunked prefill / streaming admission) ----
+    def begin_prefill(self, prompt, *, max_new_tokens: int,
+                      seed: Optional[int] = None,
+                      temperature: Optional[float] = None,
+                      stop_tokens: Sequence[int] = ()) -> PagedSequence:
+        """Host-side admission of one request: validate, map any
+        resident shared-prefix pages (incref), and return a *resumable*
+        sequence — ``prefill_chunk`` then runs the prompt through the
+        device in page-sized chunks, allocating pages as it goes, until
+        the first token samples.  ``PagePool.release(seq)`` at any
+        point (cancellation, failure, eviction) hands back exactly what
+        the sequence holds.
+
+        The shared-prefix lookup is *deferred* to the first
+        ``prefill_chunk`` call: a burst of admissions all begun in one
+        scheduler sweep can still share a prefix that the first of
+        them only registers when its own prefill seals.
         """
         if self.pool is None:      # not an assert: must survive python -O
             raise RuntimeError("no paged KV pool: call init_paged() first")
@@ -267,16 +328,34 @@ class Engine:
             raise ValueError(
                 f"max_new_tokens must be >= 1 (prefill always samples the "
                 f"first token), got {max_new_tokens}")
-        prompt = jnp.asarray(prompt, jnp.int32).reshape((-1,))
-        p = prompt.shape[0]
+        prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
+        p = len(prompt_np)
         if p < 1:
             raise ValueError("prompt must hold at least one token")
         self._check_capacity(p, max_new_tokens)
-        pool = self.pool
-        ps = pool.page_size
-        prompt_np = np.asarray(prompt)
-        total = pool.pages_for(p + max_new_tokens)
-        mapped, matched, shared_len = self._shared_prefix(prompt_np, p)
+        seq_seed = self.scfg.seed if seed is None else seed
+        return PagedSequence(
+            pages=[],
+            block_table=self.pool.block_table([], self._max_pages),
+            prompt_len=p, pos=0, max_new_tokens=max_new_tokens,
+            last_token=-1, seed=seq_seed, shared_prefix_len=0,
+            prompt=prompt_np, prefill_pos=0, prefill_done=False,
+            prefix_mapped=False, insert_from=0,
+            stop_tokens=frozenset(int(t) for t in stop_tokens),
+            temperature=temperature)
+
+    def _map_shared_prefix(self, seq: PagedSequence) -> None:
+        """Lazy first-chunk mapping: incref any resident shared-prefix
+        pages and, on a fully-resident repeat prompt with a cached
+        final-token logits row, seal the prefill with zero device FLOPs
+        (the logit-cache fast path).  Runs exactly once per sequence;
+        an OutOfPages from the fast path leaves the mapped pages held
+        and the sequence resumable — a retry proceeds through the
+        normal tail-prefill flow."""
+        pool, ps = self.pool, self.pool.page_size
+        p = seq.prompt_len
+        mapped, matched, shared_len = self._shared_prefix(seq.prompt, p)
+        seq.prefix_mapped = True
         if mapped:
             pool.incref(mapped)
             if matched == p and p % ps:
@@ -284,57 +363,164 @@ class Engine:
                 # shared; whichever holder inserts into it first must
                 # copy-on-write (admission reserved the headroom)
                 pool.mark_cow_risk(mapped[-1])
+            for i, pg in enumerate(mapped):
+                seq.block_table[i] = pg
+            seq.pages = list(mapped)
+            seq.prefill_pos = shared_len
+            seq.shared_prefix_len = shared_len
+            seq.insert_from = len(mapped) * ps
+        # zero-FLOP admission: fully-resident repeat prompt + cached
+        # final-token logits -> skip even the one-token tail prefill
+        if matched == p and self._logit_cache_cap > 0:
+            row = self._logit_cache_get(self._prompt_key(seq.prompt))
+            if row is not None:
+                self._grow_pages(seq,
+                                 pool.pages_for(p + seq.max_new_tokens))
+                tok = int(np.asarray(self._sample_rows(
+                    jnp.asarray(row)[None], np.asarray([seq.seed]),
+                    np.asarray([p]), temps=[seq.temperature]))[0])
+                self.logit_cache_hits += 1
+                self.prefill_tokens_shared += p
+                seq.shared_prefix_len = p
+                self._seal_prefill(seq, tok)
+
+    def _grow_pages(self, seq: PagedSequence, upto: int) -> None:
+        """Extend ``seq`` to hold ``upto`` pages (alloc + block-table
+        update).  Raises OutOfPages with nothing mutated."""
+        need = upto - len(seq.pages)
+        if need <= 0:
+            return
+        new = self.pool.alloc(need)
+        for pg in new:
+            seq.block_table[len(seq.pages)] = pg
+            seq.pages.append(pg)
+
+    def _seal_prefill(self, seq: PagedSequence, tok: int) -> None:
+        seq.last_token = tok
+        seq.tokens = [tok]
+        seq.pos = seq.prompt_len
+        seq.prefill_pos = seq.prompt_len
+        seq.prefill_done = True
+        seq.prefix_keys = self.pool.register_prefix(seq.prompt, seq.pages)
+
+    def prefill_chunk(self, seq: PagedSequence, *,
+                      chunk_tokens: Optional[int] = None) -> bool:
+        """Run the next prefill chunk of a sequence started by
+        ``begin_prefill``; returns True once the prompt is fully
+        prefilled and the first token sampled (the sequence can then
+        join a running decode batch).
+
+        ``chunk_tokens`` (a multiple of page_size) caps this step's
+        prompt span — the q_offset tail path computes positions
+        ``prefill_pos .. prefill_pos + chunk - 1`` against everything
+        already resident, so a scheduler can interleave one chunk per
+        decode step and a long prompt never stalls running streams.
+        ``chunk_tokens=None`` runs the whole remaining prompt in one
+        call (the serial path).  Pages for the chunk (plus the decode
+        budget, on the final chunk) allocate here; OutOfPages raises
+        *before* any device work with the sequence unchanged — callers
+        treat it as backpressure and retry after frees.
+        """
+        if seq.prefill_done:
+            return True
+        pool = self.pool
+        ps = pool.page_size
+        if chunk_tokens is not None and (chunk_tokens < ps
+                                         or chunk_tokens % ps):
+            raise ValueError(
+                f"chunk_tokens must be a positive multiple of the page "
+                f"size {ps}, got {chunk_tokens}")
+        if not seq.prefix_mapped:
+            self._map_shared_prefix(seq)    # OutOfPages: seq resumable
+            if seq.prefill_done:            # logit-cache fast path
+                return True
+        p = seq.prompt_len
+        o = seq.prefill_pos
+        length = p - o if chunk_tokens is None else min(chunk_tokens, p - o)
+        final = o + length >= p
+        span = (p + seq.max_new_tokens) if final else (o + length)
+        self._grow_pages(seq, pool.pages_for(span))    # OutOfPages: no-op
+        prompt = jnp.asarray(seq.prompt, jnp.int32)
+        bt = jnp.asarray(seq.block_table)[None]
         try:
-            new_pages = pool.alloc(total - len(mapped))
-        except OutOfPages:
-            if mapped:
-                pool.decref(mapped)
-            raise
-        pages = list(mapped) + new_pages
-        bt_row = pool.block_table(pages, self._max_pages)
-        seq_seed = self.scfg.seed if seed is None else seed
-        try:
-            if shared_len:
-                # tail-only prefill: positions < shared_len are read
-                # back from the mapped pages; writes below the mapped
-                # span are redirected to scratch (insert_from)
-                tail_len = p - shared_len
-                t_pad = pool.pages_for(tail_len) * ps
-                toks = jnp.zeros((1, t_pad), jnp.int32).at[
-                    0, :tail_len].set(prompt[shared_len:])
-                logits, self._paged_caches = self._paged_prefill_tail(
-                    self.params, toks, self._paged_caches,
-                    jnp.asarray(bt_row)[None],
-                    jnp.asarray(tail_len - 1, jnp.int32),
-                    jnp.asarray(shared_len, jnp.int32),
-                    jnp.asarray(len(mapped) * ps, jnp.int32))
-                self.prefill_tokens_computed += t_pad
-            else:
-                # pad to the allocation's page rounding; pad slots are
-                # masked, then overwritten by decode inserts
-                p_pad = pool.pages_for(p) * ps
-                toks = jnp.zeros((1, p_pad), jnp.int32).at[0, :p].set(prompt)
+            if o == 0 and final:
+                # whole-prompt single call (no resident prefix): the
+                # classic prefill path, padded to its page rounding
+                pad = pool.pages_for(p) * ps
+                toks = jnp.zeros((1, pad), jnp.int32).at[0, :p].set(prompt)
                 logits, self._paged_caches = self._paged_prefill(
-                    self.params, toks, self._paged_caches,
-                    jnp.asarray(bt_row)[None], jnp.asarray(p - 1, jnp.int32))
-                self.prefill_tokens_computed += p_pad
-            # materialise INSIDE the guard: jax dispatch is async, so
-            # an execution-time failure of the donating jit call often
-            # surfaces only here
-            tok = int(np.asarray(self._sample_rows(
-                logits[:, 0], np.asarray([seq_seed]), np.asarray([p])))[0])
+                    self.params, toks, self._paged_caches, bt,
+                    jnp.asarray(p - 1, jnp.int32))
+            else:
+                # q_offset tail path: positions < o are read back from
+                # pages earlier chunks (or a resident shared prefix)
+                # already filled; writes below ``insert_from`` are
+                # redirected to scratch so a shared boundary page is
+                # never touched.  A fixed chunk_tokens pad keeps every
+                # chunk at ONE compiled shape (offsets are traced).
+                pad = (chunk_tokens if chunk_tokens is not None
+                       else pool.pages_for(length) * ps)
+                toks = jnp.zeros((1, pad), jnp.int32).at[
+                    0, :length].set(prompt[o:o + length])
+                last = (p - 1 - o) if final else (length - 1)
+                logits, self._paged_caches = self._paged_prefill_tail(
+                    self.params, toks, self._paged_caches, bt,
+                    jnp.asarray(last, jnp.int32),
+                    jnp.asarray(o, jnp.int32),
+                    jnp.asarray(seq.insert_from, jnp.int32))
+            self.prefill_tokens_computed += int(pad)
+            if final:
+                # materialise INSIDE the guard: jax dispatch is async,
+                # so an execution-time failure of the donating jit call
+                # often surfaces only here
+                row = np.asarray(logits)[0, 0]
+                tok = int(np.asarray(self._sample_rows(
+                    jnp.asarray(row)[None], np.asarray([seq.seed]),
+                    np.asarray([p]), temps=[seq.temperature]))[0])
+            else:
+                jax.block_until_ready(
+                    jax.tree.leaves(self._paged_caches)[0])
         except Exception:
             # conservatively treat any failure of the donating call as
-            # cache loss (validation errors raise before this point)
+            # cache loss; the caller still holds (and must release) the
+            # sequence — its page list is exact, so release() is a
+            # complete rollback
             self._caches_poisoned = True
-            pool.decref(pages)      # failed admission must not leak pages
             raise
-        self.prefill_tokens_shared += shared_len
-        seq = PagedSequence(pages=pages, block_table=bt_row, prompt_len=p,
-                            pos=p, max_new_tokens=max_new_tokens,
-                            last_token=tok, seed=seq_seed, tokens=[tok],
-                            shared_prefix_len=shared_len)
-        seq.prefix_keys = pool.register_prefix(prompt_np, pages)
+        if final:
+            self.prefill_tokens_shared += seq.shared_prefix_len
+            if self._logit_cache_cap > 0:
+                self.logit_cache_misses += 1
+                self._logit_cache_put(self._prompt_key(seq.prompt), row)
+            self._seal_prefill(seq, tok)
+        else:
+            seq.prefill_pos = o + length
+        return seq.prefill_done
+
+    def prefill_into_pages(self, prompt, *, max_new_tokens: int,
+                           seed: Optional[int] = None,
+                           temperature: Optional[float] = None,
+                           stop_tokens: Sequence[int] = ()) -> PagedSequence:
+        """Admit one request in one call: ``begin_prefill`` + the whole
+        prompt through ``prefill_chunk`` (serial, tail-only when a
+        shared prefix is resident).  The returned sequence can join a
+        running decode batch immediately.
+
+        Raises ValueError if prompt + max_new_tokens exceeds max_len,
+        and OutOfPages (a ValueError) when the pool cannot hold the
+        request — the scheduler treats the latter as backpressure.
+        Any failure releases everything the admission held: the pool is
+        exactly as it was before the call.
+        """
+        seq = self.begin_prefill(prompt, max_new_tokens=max_new_tokens,
+                                 seed=seed, temperature=temperature,
+                                 stop_tokens=stop_tokens)
+        try:
+            while not seq.prefill_done:
+                self.prefill_chunk(seq)
+        except Exception:
+            self.pool.release(seq)  # failed admission must not leak pages
+            raise
         return seq
 
     def decode_step_batch(self, seqs: Sequence[PagedSequence]) -> np.ndarray:
@@ -361,11 +547,13 @@ class Engine:
         bt = np.full((cap, self._max_pages), 0, np.int32)
         pos = np.zeros((cap,), np.int32)
         seeds = np.zeros((cap,), np.uint32)
+        temps: List[Optional[float]] = [None] * cap
         for i, seq in enumerate(seqs):
             tokens[i, 0] = seq.last_token
             bt[i] = seq.block_table
             pos[i] = seq.pos
             seeds[i] = np.uint32(seq.seed)
+            temps[i] = seq.temperature
         try:
             logits, self._paged_caches = self._paged_decode(
                 self.params, jnp.asarray(tokens), self._paged_caches,
@@ -375,7 +563,8 @@ class Engine:
             # generation independent of batch composition.  Materialise
             # inside the guard — async dispatch surfaces jit failures
             # here, after the caches were already donated.
-            nxt = np.asarray(self._sample_rows(logits[:, 0], seeds, pos + 1))
+            nxt = np.asarray(self._sample_rows(logits[:, 0], seeds, pos + 1,
+                                               temps=temps))
         except Exception:
             self._caches_poisoned = True    # donated buffers are gone
             raise
@@ -414,12 +603,17 @@ class Engine:
         seq.block_table[idx] = new
         self.cow_count += 1
 
-    def generate_paged(self, prompt, *, max_new_tokens: int) -> Dict[str, Any]:
+    def generate_paged(self, prompt, *, max_new_tokens: int,
+                       seed: Optional[int] = None,
+                       temperature: Optional[float] = None,
+                       stop_tokens: Sequence[int] = ()) -> Dict[str, Any]:
         """Single-request convenience over the paged entry points
         (prefill -> solo decode batch -> release pages); the reference
         the scheduler/benchmark compare continuous batching against."""
         t0 = time.time()
-        seq = self.prefill_into_pages(prompt, max_new_tokens=max_new_tokens)
+        seq = self.prefill_into_pages(prompt, max_new_tokens=max_new_tokens,
+                                      seed=seed, temperature=temperature,
+                                      stop_tokens=stop_tokens)
         t1 = time.time()
         try:
             while not seq.done:
@@ -430,4 +624,5 @@ class Engine:
         prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
         tokens = np.concatenate([prompt_np, np.asarray(seq.tokens, np.int32)])
         return {"tokens": tokens, "prefill_s": t1 - t0, "decode_s": t2 - t1,
-                "tokens_per_s": max_new_tokens / max(t2 - t1, 1e-9)}
+                "finish_reason": seq.finish_reason,
+                "tokens_per_s": len(seq.tokens) / max(t2 - t1, 1e-9)}

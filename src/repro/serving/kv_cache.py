@@ -37,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import heapq
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -407,6 +407,16 @@ class PagedSequence:
     resident sequence instead of prefilled (0 = no sharing), and
     ``prefix_keys`` are this sequence's prefix-index claims —
     ``PagePool.release`` retires both together.
+
+    Chunked prefill (Engine.begin_prefill / prefill_chunk) makes the
+    state *resumable*: ``prefill_pos`` is the next prompt position to
+    run, ``prefill_done`` flips once the final prompt token's logits
+    sampled the first token, and pages are allocated chunk by chunk —
+    ``pages`` always lists exactly what this sequence holds, so
+    ``PagePool.release(seq)`` is a complete rollback at any phase
+    (that is what makes mid-prefill cancellation leak-free).
+    ``stop_tokens`` ends generation early; ``temperature`` overrides
+    the engine's sampling temperature for this request only.
     """
     pages: List[int]
     block_table: np.ndarray          # (max_pages,) int32, scratch-padded
@@ -418,10 +428,33 @@ class PagedSequence:
     tokens: List[int] = dataclasses.field(default_factory=list)
     shared_prefix_len: int = 0
     prefix_keys: List[bytes] = dataclasses.field(default_factory=list)
+    # resumable-prefill state (chunked prefill / streaming API)
+    prompt: Optional[np.ndarray] = None   # needed while prefill resumes
+    prefill_pos: int = 0                  # next prompt position to compute
+    prefill_done: bool = True             # False between begin and finish
+    prefix_mapped: bool = True            # False until the lazy shared-
+    #   prefix lookup ran (first prefill_chunk; begin defers it so a
+    #   burst of admissions can still share a prefix the first of them
+    #   only registers when ITS prefill seals)
+    insert_from: int = 0                  # writes below this go to scratch
+    stop_tokens: FrozenSet[int] = frozenset()
+    temperature: Optional[float] = None   # None = engine default
 
     @property
     def done(self) -> bool:
+        if not self.prefill_done:
+            return False
+        if self.tokens and int(self.tokens[-1]) in self.stop_tokens:
+            return True
         return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def finish_reason(self) -> str:
+        """"stop" | "length" once ``done``; generation-loop callers
+        surface it through the FINISHED event."""
+        if self.tokens and int(self.tokens[-1]) in self.stop_tokens:
+            return "stop"
+        return "length"
 
 
 def pool_bytes_per_page(cfg, page_size: int, dtype=None) -> int:

@@ -9,16 +9,24 @@ static-shape buckets, and per-model workers drive the zoo concurrently.
     server = MuxServer(mux_params, model_fns, costs)
     sched = MuxScheduler(server, SchedulerConfig(max_batch_size=8))
     async with sched:
-        y = await sched.submit(x)          # one request in, one result out
+        handle = sched.submit(x)               # -> GenerationHandle
+        y = await handle.result()              # one-shot output
     print(sched.metrics.snapshot())
 
 For LLM zoos there is additionally the *token-level* loop
 (PagedLLMScheduler): engines with paged KV pools decode one token per
-step for every running request, new requests prefill into free pages
-and join the running batch mid-generation, and finished requests free
-their pages immediately.
+step for every running request, new requests run their prompt through
+chunked prefill interleaved with the running batch's decode steps, and
+finished requests free their pages immediately.  Its handles stream:
+
+    handle = sched.submit(prompt, SamplingParams(stream=True))
+    async for ev in handle:                    # PREFILLING, FIRST_TOKEN,
+        ...                                    # TOKEN..., FINISHED
+    handle.cancel()                            # abort at any phase
 """
-from repro.serving.scheduler.request import Request, RequestState
+from repro.serving.scheduler.request import (EventType, GenerationEvent,
+                                             GenerationHandle, Request,
+                                             RequestState, SamplingParams)
 from repro.serving.scheduler.batcher import (ActiveSequence, BatchingPolicy,
                                              DecodeSlots, MicroBatcher,
                                              ModelQueue)
@@ -31,7 +39,8 @@ from repro.serving.scheduler.runtime import (MuxScheduler, PagedLLMConfig,
                                              SchedulerLifecycle)
 
 __all__ = [
-    "Request", "RequestState", "ActiveSequence", "BatchingPolicy",
+    "Request", "RequestState", "SamplingParams", "GenerationEvent",
+    "GenerationHandle", "EventType", "ActiveSequence", "BatchingPolicy",
     "DecodeSlots", "MicroBatcher", "ModelQueue", "AdmissionController",
     "LatencyReservoir", "SchedulerMetrics", "TrafficConfig", "arrival_times",
     "replay", "MuxScheduler", "PagedLLMConfig", "PagedLLMScheduler",

@@ -14,6 +14,14 @@ at ONE fixed batch shape: arrivals are chunked and padded to
 the padded weights before slicing, so neither the jit'd probe nor the
 eager selection ever recompiles for a novel burst size — a fresh XLA
 compile on the event loop would stall every in-flight request.
+
+With ``deadline_degrade=True`` (off by default), admission additionally
+checks the selected model's estimated service time (the metrics
+registry's per-model EMA) against the request's remaining SLO budget
+and, when the selection cannot meet the deadline, re-routes to the
+cheapest model whose estimate still fits — or the cheapest model
+outright when none fits.  This is the MDInference policy: degrade to a
+cheaper model rather than enqueue a request that will certainly miss.
 """
 from __future__ import annotations
 
@@ -32,12 +40,14 @@ class AdmissionController:
 
     def __init__(self, server, queues: Sequence[ModelQueue],
                  metrics: SchedulerMetrics,
-                 clock: Callable[[], float], probe_batch: int = 1):
+                 clock: Callable[[], float], probe_batch: int = 1,
+                 deadline_degrade: bool = False):
         self.server = server
         self.queues = list(queues)
         self.metrics = metrics
         self.clock = clock
         self.probe_batch = probe_batch
+        self.deadline_degrade = deadline_degrade
         # hoisted once: a per-request device->host transfer on the
         # event loop is exactly what this module exists to avoid
         self._costs_host = np.asarray(server.costs)
@@ -75,6 +85,26 @@ class AdmissionController:
             self._signature = sigs[0]
         return np.concatenate(ws), np.concatenate(assigns)
 
+    def degrade_for_deadline(self, req: Request, model_id: int,
+                             now: float) -> int:
+        """MDInference-style deadline degrade: if the selected model's
+        estimated service time exceeds the request's remaining SLO
+        budget, re-route to the cheapest model whose estimate fits the
+        budget (the cheapest model outright when none does).  A model
+        with no estimate yet is treated as fitting — the policy only
+        degrades on evidence, never speculatively."""
+        est = self.metrics.service_estimate(model_id)
+        budget = req.deadline_t - now
+        if est is None or est <= budget:
+            return model_id
+        fits = [m for m in range(len(self._costs_host))
+                if (self.metrics.service_estimate(m) or 0.0) <= budget]
+        pool = fits if fits else list(range(len(self._costs_host)))
+        new_m = min(pool, key=lambda m: self._costs_host[m])
+        if new_m != model_id:
+            self.metrics.on_degrade(req, model_id, new_m)
+        return new_m
+
     def admit(self, requests: List[Request]) -> None:
         """Score + enqueue.  Synchronous: the probe is the paper's
         "very light-weight" CNN/transformer — cheap by design."""
@@ -85,7 +115,10 @@ class AdmissionController:
         now = self.clock()
         for i, req in enumerate(requests):
             req.weights = w[i]
-            req.model_id = int(assign[i])
+            m = int(assign[i])
+            if self.deadline_degrade:
+                m = self.degrade_for_deadline(req, m, now)
+            req.model_id = m
             req.flops = float(costs[req.model_id])
             self.queues[req.model_id].push(req, now)
             self.metrics.on_admit(req)

@@ -1,11 +1,13 @@
 """Per-model queues, the micro-batch former, and the decode roster.
 
-ModelQueue is a deadline-ordered (EDF) priority queue of admitted
-requests for one zoo model.  MicroBatcher decides *when* a queue is
-worth draining — batch full, or the oldest request has waited
+ModelQueue is a (priority, deadline)-ordered queue of admitted
+requests for one zoo model: higher SamplingParams.priority is served
+first, EDF breaks ties within a band.  MicroBatcher decides *when* a
+queue is worth draining — batch full, or the oldest request has waited
 max_wait_ms — and *what* to drain (up to max_batch_size requests in
-deadline order), then pads the drained samples into the worker's
-static-shape bucket with routing.pad_bucket, the same scatter math the
+queue order, silently discarding requests cancelled while they
+waited), then pads the drained samples into the worker's static-shape
+bucket with routing.pad_bucket, the same scatter math the
 single-program multiplexer uses for its per-model buckets.
 """
 from __future__ import annotations
@@ -20,11 +22,11 @@ from repro.serving.scheduler.request import Request, RequestState
 
 
 class ModelQueue:
-    """Deadline-first queue of admitted requests for one model."""
+    """Priority-then-deadline queue of admitted requests for one model."""
 
     def __init__(self, model_id: int):
         self.model_id = model_id
-        self._heap: List[Tuple[float, int, Request]] = []
+        self._heap: List[Tuple[int, float, int, Request]] = []
         # FIFO shadow for the max-wait flush decision: push times are
         # monotonic, so the oldest pending enqueue (req.admitted_t) is
         # at the left once drained entries are skipped — O(1) amortized
@@ -34,34 +36,32 @@ class ModelQueue:
     def push(self, req: Request, now: float) -> None:
         req.state = RequestState.QUEUED
         req.admitted_t = now
-        # (deadline, rid) orders EDF with FIFO tie-break
-        heapq.heappush(self._heap, (req.deadline_t, req.rid, req))
+        # (-priority, deadline, rid): higher priority first, EDF within
+        # a band, FIFO tie-break
+        heapq.heappush(self._heap,
+                       (-req.priority, req.deadline_t, req.rid, req))
         self._fifo.append(req)
 
     def pop(self) -> Request:
-        return heapq.heappop(self._heap)[2]
+        return heapq.heappop(self._heap)[3]
 
     def peek(self) -> Request:
-        """Earliest-deadline request without draining it — the
-        continuous-decode admit loop sizes its page reservation off
-        this before committing to the pop."""
-        return self._heap[0][2]
+        """Next-up request without draining it — the continuous-decode
+        admit loop sizes its page reservation off this before
+        committing to the pop."""
+        return self._heap[0][3]
 
     def __len__(self) -> int:
         return len(self._heap)
 
     @property
     def oldest_enqueue_t(self) -> Optional[float]:
+        """Enqueue time of the oldest request still actually QUEUED —
+        None when the heap holds only cancelled/drained leftovers."""
         fifo = self._fifo
         while fifo and fifo[0].state is not RequestState.QUEUED:
             fifo.popleft()
         return fifo[0].admitted_t if fifo else None
-
-    @property
-    def earliest_deadline(self) -> Optional[float]:
-        if not self._heap:
-            return None
-        return self._heap[0][0]
 
 
 @dataclasses.dataclass
@@ -83,6 +83,8 @@ class MicroBatcher:
         if len(queue) >= self.policy.max_batch_size:
             return True
         oldest = queue.oldest_enqueue_t
+        if oldest is None:           # only cancelled leftovers in the heap
+            return False
         return (now - oldest) * 1e3 >= self.policy.max_wait_ms
 
     def time_until_ready(self, queue: ModelQueue, now: float
@@ -95,10 +97,15 @@ class MicroBatcher:
 
     # ---- what ---------------------------------------------------------
     def form(self, queue: ModelQueue, now: float) -> List[Request]:
-        """Drain up to max_batch_size requests in deadline order."""
+        """Drain up to max_batch_size requests in queue order.
+        Requests cancelled while they waited are discarded here — their
+        futures were already resolved by the cancel — so a cancel never
+        occupies a bucket row."""
         batch: List[Request] = []
         while len(queue) and len(batch) < self.policy.max_batch_size:
             req = queue.pop()
+            if req.state is not RequestState.QUEUED:    # cancelled in queue
+                continue
             req.state = RequestState.BATCHED
             req.batched_t = now
             batch.append(req)
@@ -124,12 +131,15 @@ class MicroBatcher:
 
 @dataclasses.dataclass
 class ActiveSequence:
-    """One running generation: the request, its paged state, and the
+    """One running generation: the request, its paged state, the
     decode-loop iteration at which it joined (so the benchmark can
-    prove a batch mixed requests admitted at different times)."""
+    prove a batch mixed requests admitted at different times), and the
+    timestamp of its latest token (feeds the inter-token-latency
+    reservoir)."""
     req: Request
     seq: Any                      # repro.serving.kv_cache.PagedSequence
     admit_step: int
+    last_token_t: float = 0.0
 
 
 class DecodeSlots:

@@ -3,9 +3,16 @@
 Counts every lifecycle transition and keeps latency reservoirs so a
 snapshot can report the serving numbers that matter for the paper's
 cloud story: throughput, p50/p99 queue + service + total latency,
-per-model utilization and call fractions, micro-batch fill, and the
-Eq. 14 compute saving of mux routing vs always calling the largest
-model.
+time-to-first-token and inter-token latency (the streaming-API
+numbers — response-time *variance* dominates perceived latency, per
+Ogden & Guo's mobile-DNN characterization), per-model utilization and
+call fractions, micro-batch fill, and the Eq. 14 compute saving of mux
+routing vs always calling the largest model.
+
+The registry also keeps a per-model EMA of observed service time;
+the admission controller's deadline-degrade hook (MDInference-style)
+consults it to re-route requests whose remaining SLO budget the
+selected model cannot meet.
 """
 from __future__ import annotations
 
@@ -62,6 +69,8 @@ class LatencyReservoir:
 class SchedulerMetrics:
     """One registry per scheduler; workers and admission feed it."""
 
+    SERVICE_EMA_ALPHA = 0.2     # per-model service-time estimate smoothing
+
     def __init__(self, costs: Sequence[float], clock=time.monotonic):
         self.clock = clock
         self.costs = [float(c) for c in costs]
@@ -70,6 +79,8 @@ class SchedulerMetrics:
         self.admitted = 0
         self.completed = 0
         self.failed = 0
+        self.cancelled = 0
+        self.deadline_degraded = 0       # admission degrade-hook re-routes
         self.slo_violations = 0
         self.batches = 0
         self.batched_requests = 0        # real rows across all buckets
@@ -80,6 +91,9 @@ class SchedulerMetrics:
         self.queue_lat = LatencyReservoir()
         self.service_lat = LatencyReservoir()
         self.total_lat = LatencyReservoir()
+        self.ttft_lat = LatencyReservoir()       # arrival -> first token
+        self.itl_lat = LatencyReservoir()        # inter-token gaps
+        self._service_ema: List[Optional[float]] = [None] * n
         self.started_t: Optional[float] = None
         self.stopped_t: Optional[float] = None
         self._elapsed_accum = 0.0       # serving time of finished runs
@@ -119,11 +133,35 @@ class SchedulerMetrics:
         self.queue_lat.add(req.queue_latency)
         self.service_lat.add(req.service_latency)
         self.total_lat.add(req.total_latency)
+        ttft = req.ttft
+        if ttft is not None:
+            self.ttft_lat.add(ttft)
+        prev = self._service_ema[req.model_id]
+        obs = req.service_latency
+        self._service_ema[req.model_id] = (
+            obs if prev is None
+            else self.SERVICE_EMA_ALPHA * obs
+            + (1.0 - self.SERVICE_EMA_ALPHA) * prev)
         if req.missed_deadline():
             self.slo_violations += 1
 
     def on_fail(self, req: Request) -> None:
         self.failed += 1
+
+    def on_cancel(self, req: Request) -> None:
+        self.cancelled += 1
+
+    def on_degrade(self, req: Request, from_model: int, to_model: int) -> None:
+        self.deadline_degraded += 1
+
+    def on_decode_gap(self, seconds: float) -> None:
+        """One inter-token gap from the continuous-decode loop."""
+        self.itl_lat.add(seconds)
+
+    def service_estimate(self, model_id: int) -> Optional[float]:
+        """EMA of observed service time for one model (seconds); None
+        until that model has completed at least one request."""
+        return self._service_ema[model_id]
 
     # ---- report -------------------------------------------------------
     def snapshot(self, now: Optional[float] = None) -> Dict[str, Any]:
@@ -141,6 +179,8 @@ class SchedulerMetrics:
             "admitted": self.admitted,
             "completed": self.completed,
             "failed": self.failed,
+            "cancelled": self.cancelled,
+            "deadline_degraded": self.deadline_degraded,
             "slo_violations": self.slo_violations,
             "elapsed_s": elapsed,
             "throughput_rps": self.completed / elapsed if elapsed else 0.0,
@@ -150,6 +190,10 @@ class SchedulerMetrics:
             "service_p99_ms": self.service_lat.percentile_ms(99),
             "total_p50_ms": self.total_lat.percentile_ms(50),
             "total_p99_ms": self.total_lat.percentile_ms(99),
+            "ttft_p50_ms": self.ttft_lat.percentile_ms(50),
+            "ttft_p99_ms": self.ttft_lat.percentile_ms(99),
+            "itl_p50_ms": self.itl_lat.percentile_ms(50),
+            "itl_p99_ms": self.itl_lat.percentile_ms(99),
             "batches": self.batches,
             "mean_batch_fill": (self.batched_requests / self.bucket_rows
                                 if self.bucket_rows else 0.0),

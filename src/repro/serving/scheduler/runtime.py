@@ -3,21 +3,32 @@ runtimes.
 
 MuxScheduler serves one-shot model steps (the paper's CNN zoo) at
 request granularity.  PagedLLMScheduler is the *token-level* loop for
-the LLM path: per-engine workers interleave admission (prefill new
-requests into free KV pages — they join the running decode batch at
-their own position) with single-token decode steps over every running
-request, and free a request's pages the step it finishes.
+the LLM path: per-engine workers interleave chunked prefill (new
+requests run their prompt through the device one page-sized chunk at a
+time, joining the running decode batch when the first token samples)
+with single-token decode steps over every running request, and free a
+request's pages the step it finishes.
 
-One event loop, N+0 tasks: each zoo model gets a worker task that
-sleeps until its queue is worth draining (MicroBatcher policy), forms
-a static-shape bucket, and runs the model step in a thread-pool
-executor so model execution overlaps across models and with the event
-loop.  Admission (mux probe + model selection) runs inline in
-``submit_nowait`` — the probe is the paper's lightweight CNN/probe, so
-scoring on the submission path keeps the design simple and the arrival
-timestamps honest.
+Both runtimes share ONE submission surface:
 
-Determinism contract: every bucket has the same static shape
+    handle = sched.submit(x, SamplingParams(...))   # -> GenerationHandle
+    out = await handle.result()                     # classic one-shot
+    async for ev in handle: ...                     # stream=True events
+    handle.cancel()                                 # abort at any phase
+
+``submit_nowait`` survives as a thin compatibility shim returning the
+raw future (``submit(...).future``).
+
+One event loop, N+0 tasks: each model gets a worker task that sleeps
+until its queue is worth draining, forms a static-shape bucket (mux)
+or sweeps its two-phase chunk-prefill + decode step (paged), and runs
+device work in a thread-pool executor so model execution overlaps
+across models and with the event loop.  Admission (mux probe + model
+selection) runs inline in ``submit`` — the probe is the paper's
+lightweight CNN/probe, so scoring on the submission path keeps the
+design simple and the arrival timestamps honest.
+
+Determinism contract: every mux bucket has the same static shape
 (max_batch_size), so each model runs exactly one compiled program and
 a request's output is bitwise-identical to ``reference_output`` — the
 same model step applied to that request alone in a padded bucket.
@@ -40,7 +51,18 @@ from repro.serving.scheduler.admission import AdmissionController
 from repro.serving.scheduler.batcher import (BatchingPolicy, DecodeSlots,
                                              MicroBatcher, ModelQueue)
 from repro.serving.scheduler.metrics import SchedulerMetrics
-from repro.serving.scheduler.request import Request, RequestState
+from repro.serving.scheduler.request import (GenerationHandle, Request,
+                                             RequestState, SamplingParams)
+
+
+def _resolve_params(params: Optional[SamplingParams],
+                    **overrides) -> SamplingParams:
+    """Fold keyword-argument overrides into a SamplingParams (None
+    overrides are 'keep the params value')."""
+    if params is None:
+        params = SamplingParams()
+    updates = {k: v for k, v in overrides.items() if v is not None}
+    return dataclasses.replace(params, **updates) if updates else params
 
 
 class SchedulerLifecycle:
@@ -52,8 +74,9 @@ class SchedulerLifecycle:
     setting ``self.metrics``), implements ``_worker(m)`` as its serving
     loop, and may override ``_reclaim_stranded`` to hand back resources
     a no-drain stop leaves behind.  Everything else — worker task
-    management, executor lifetime, graceful vs cancelled shutdown, and
-    the inflight-future set that ``drain`` waits on — lives here once.
+    management, executor lifetime, graceful vs cancelled shutdown,
+    request cancellation, and the inflight-future set that ``drain``
+    waits on — lives here once.
     """
 
     _thread_prefix = "serving-worker"
@@ -69,7 +92,7 @@ class SchedulerLifecycle:
         self._running = False
         self._stopping = False
         self._next_rid = 0
-        self._inflight: set = set()
+        self._inflight: Dict[asyncio.Future, Request] = {}
 
     async def _worker(self, m: int) -> None:
         raise NotImplementedError
@@ -90,8 +113,10 @@ class SchedulerLifecycle:
     async def stop(self, drain: bool = True) -> None:
         """Graceful shutdown: stop accepting, flush/finish every queued
         request, join the workers.  With drain=False, workers are
-        cancelled, still-pending futures are cancelled with them, and
-        ``_reclaim_stranded`` hands back whatever they held."""
+        cancelled, still-pending requests are *failed* with them (so a
+        streaming consumer receives its FINISHED event rather than
+        hanging on an abandoned queue), and ``_reclaim_stranded`` hands
+        back whatever they held."""
         if not self._running:
             return
         self._stopping = True
@@ -104,9 +129,17 @@ class SchedulerLifecycle:
         # half-stopped state; re-raise after cleanup completes
         results = await asyncio.gather(*self._workers,
                                        return_exceptions=True)
-        for fut in list(self._inflight):
-            if not fut.done():
-                fut.cancel()
+        t = self.clock()
+        stopped = RuntimeError("scheduler stopped before completion")
+        for fut, req in list(self._inflight.items()):
+            if fut.done():
+                continue
+            # fail through the request so the FINISHED event reaches
+            # streaming consumers; metrics count each stranding once
+            if req.fail(stopped, t):
+                self.metrics.on_fail(req)
+            if not fut.done():          # belt: a future fail() couldn't
+                fut.cancel()            # resolve must still unblock
         self._workers = []
         self.metrics.on_stop(self.clock())
         self._pool.shutdown(wait=True)
@@ -147,8 +180,23 @@ class SchedulerLifecycle:
         return rid
 
     def _register_inflight(self, req: Request) -> None:
-        self._inflight.add(req.future)
-        req.future.add_done_callback(self._inflight.discard)
+        self._inflight[req.future] = req
+        req.future.add_done_callback(
+            lambda fut: self._inflight.pop(fut, None))
+
+    # ---- cancellation -------------------------------------------------
+    def _cancel_request(self, req: Request) -> bool:
+        """GenerationHandle.cancel() lands here.  The request's future
+        resolves immediately (idempotently: a completion that already
+        won is left alone); the owning worker notices the terminal
+        state at its next sweep and releases any pages or slots it
+        still holds for the request."""
+        if not req.cancel(self.clock()):
+            return False
+        self.metrics.on_cancel(req)
+        if 0 <= req.model_id < len(self._events):
+            self._events[req.model_id].set()   # wake the worker to reap
+        return True
 
 
 @dataclasses.dataclass
@@ -163,6 +211,10 @@ class SchedulerConfig:
     #   submits (a bigger shape taxes every submit — the probe costs
     #   grow with batch); raise it when traffic arrives in ticks fed
     #   through submit_many
+    deadline_degrade: bool = False  # MDInference-style admission hook:
+    #   re-route a request to the cheapest admissible model when the
+    #   selected model's estimated service time cannot meet the
+    #   request's remaining SLO budget
 
     def policy(self) -> BatchingPolicy:
         return BatchingPolicy(max_batch_size=self.max_batch_size,
@@ -194,7 +246,8 @@ class MuxScheduler(SchedulerLifecycle):
         self.batcher = MicroBatcher(self.cfg.policy())
         self.admission = AdmissionController(
             server, self.queues, self.metrics, clock,
-            probe_batch=self.cfg.probe_batch_size)
+            probe_batch=self.cfg.probe_batch_size,
+            deadline_degrade=self.cfg.deadline_degrade)
         self._init_lifecycle(n, self.cfg.max_workers, clock)
 
     def warmup(self, sample_x) -> None:
@@ -209,26 +262,34 @@ class MuxScheduler(SchedulerLifecycle):
             np.asarray(self.server.model_step(m, bucket))
 
     # ---- submission ---------------------------------------------------
-    def submit_nowait(self, x, *, slo_ms: Optional[float] = None
-                      ) -> asyncio.Future:
-        """Admit one request; returns a future resolving to its output."""
-        return self.submit_many([x], slo_ms=slo_ms)[0]
+    def submit(self, x, params: Optional[SamplingParams] = None, *,
+               slo_ms: Optional[float] = None,
+               priority: Optional[int] = None,
+               stream: Optional[bool] = None) -> GenerationHandle:
+        """Admit one request; returns its GenerationHandle."""
+        return self.submit_many([x], params, slo_ms=slo_ms,
+                                priority=priority, stream=stream)[0]
 
-    def submit_many(self, xs, *, slo_ms: Optional[float] = None
-                    ) -> List[asyncio.Future]:
+    def submit_many(self, xs, params: Optional[SamplingParams] = None, *,
+                    slo_ms: Optional[float] = None,
+                    priority: Optional[int] = None,
+                    stream: Optional[bool] = None) -> List[GenerationHandle]:
         """Admit a batch of arrivals in one call.  Scoring is chunked
         to cfg.probe_batch_size (default 1), so to actually amortize
         the probe over a bursty arrival tick, raise probe_batch_size
         toward the tick size — ceil(k / probe_batch_size) device
         dispatches run inline on the event loop either way."""
         self._check_accepting()
+        params = _resolve_params(params, slo_ms=slo_ms, priority=priority,
+                                 stream=stream)
         now = self.clock()
-        slo = (slo_ms if slo_ms is not None else self.cfg.default_slo_ms)
+        slo = (params.slo_ms if params.slo_ms is not None
+               else self.cfg.default_slo_ms)
         loop = asyncio.get_running_loop()
         reqs = []
         for x in xs:
             req = Request(rid=self._next_request_id(), x=x, arrival_t=now,
-                          deadline_t=now + slo / 1e3,
+                          deadline_t=now + slo / 1e3, params=params,
                           future=loop.create_future())
             self.metrics.on_arrival(req)
             reqs.append(req)
@@ -237,19 +298,21 @@ class MuxScheduler(SchedulerLifecycle):
         except Exception as exc:
             # deliver through the futures (same contract as a worker
             # failure) so accounting stays closed: arrived == completed
-            # + failed, and no future is left unresolved
+            # + failed + cancelled, and no future is left unresolved
             t = self.clock()
             for req in reqs:
-                req.fail(exc, t)
-                self.metrics.on_fail(req)
-            return [req.future for req in reqs]
+                if req.fail(exc, t):
+                    self.metrics.on_fail(req)
+            return [GenerationHandle(req, self) for req in reqs]
         for req in reqs:
             self._register_inflight(req)
             self._events[req.model_id].set()
-        return [req.future for req in reqs]
+        return [GenerationHandle(req, self) for req in reqs]
 
-    async def submit(self, x, *, slo_ms: Optional[float] = None):
-        return await self.submit_nowait(x, slo_ms=slo_ms)
+    def submit_nowait(self, x, *, slo_ms: Optional[float] = None
+                      ) -> asyncio.Future:
+        """One-shot compatibility shim: the handle's raw future."""
+        return self.submit(x, slo_ms=slo_ms).future
 
     # ---- workers ------------------------------------------------------
     def _run_bucket(self, m: int, bucket) -> np.ndarray:
@@ -265,6 +328,8 @@ class MuxScheduler(SchedulerLifecycle):
             flush = self._stopping and len(queue) > 0
             if flush or self.batcher.ready(queue, now):
                 batch = self.batcher.form(queue, now)
+                if not batch:          # the drain hit only cancelled
+                    continue           # leftovers: nothing to run
                 self.metrics.on_batch(m, len(batch), capacity)
                 for req in batch:
                     req.state = RequestState.RUNNING
@@ -280,15 +345,18 @@ class MuxScheduler(SchedulerLifecycle):
                 except Exception as exc:   # deliver, don't kill the loop
                     t1 = self.clock()
                     for req in batch:
-                        req.fail(exc, t1)
-                        self.metrics.on_fail(req)
+                        if req.fail(exc, t1):
+                            self.metrics.on_fail(req)
                     continue
                 t1 = self.clock()
                 self.metrics.on_model_busy(m, t1 - t0)
                 # bucket row i is batch[i]: pad_bucket preserves order
                 for i, req in enumerate(batch):
-                    req.complete(out[i], t1)
-                    self.metrics.on_complete(req)
+                    # one-shot path: the whole output IS the first
+                    # token for TTFT purposes
+                    req.first_token_t = t1
+                    if req.complete(out[i], t1):
+                        self.metrics.on_complete(req)
                 continue
             if self._stopping:
                 return
@@ -325,31 +393,62 @@ class PagedLLMConfig:
     default_slo_ms: float = 5000.0  # deadline when submit passes none
     max_workers: Optional[int] = None   # executor threads (None = N engines)
     idle_poll_s: float = 0.05       # fallback wake-up while queues are empty
+    prefill_chunk_pages: int = 0    # >0: chunked prefill — the prompt runs
+    #   in chunks of this many pages, one chunk interleaved per decode
+    #   step, so a long prompt never head-of-line-blocks running
+    #   streams; admission budgets first-chunk pages, later chunks
+    #   allocate as they run.  0 = serial whole-prompt prefill.
+
+
+@dataclasses.dataclass
+class _Prefilling:
+    """One request mid-chunked-prefill: not yet in a decode slot, but
+    holding pages (everything ``seq.pages`` lists)."""
+    req: Request
+    seq: Any            # repro.serving.kv_cache.PagedSequence
 
 
 class PagedLLMScheduler(SchedulerLifecycle):
     """Token-level continuous-batching runtime over paged Engines.
 
     Each engine must already be paged (``Engine.init_paged``).  One
-    worker per engine runs the continuous-decode loop:
+    worker per engine runs the two-phase continuous loop:
 
-      admit   pop deadline-ordered requests while a decode slot AND
-              enough *unique* pages exist — with prefix sharing, pages
-              mapped from a resident sequence cost nothing, and one
-              free page per writable shared page is held back for
-              copy-on-write; prefill each request's divergent tail on
-              the executor — the new request joins the *running* decode
+      admit   pop queue-ordered requests while a decode slot AND the
+              first prefill chunk's *unique* pages exist — with prefix
+              sharing, pages mapped from a resident sequence cost
+              nothing, and one free page per writable shared page is
+              held back for copy-on-write; ``Engine.begin_prefill``
+              (host-side) maps the shared prefix and the request
+              enters the prefilling roster
+      chunk   run ONE page-sized prefill chunk for the earliest-
+              deadline prefilling request on the executor; when the
+              chunk is final the first token samples (FIRST_TOKEN,
+              TTFT stops) and the request joins the *running* decode
               batch at its own position, mid-generation of the others
       step    one ``decode_step_batch`` over every running request
-              (rows at different lengths; that is the paged contract)
+              (rows at different lengths; that is the paged contract),
+              emitting one TOKEN event per row
       retire  a finished request decrefs its pages immediately (pages
               still shared with other residents survive; exclusive
               ones are reusable by the very next admission) and
               resolves its future with prompt + generated tokens
 
+    With ``prefill_chunk_pages=0`` the chunk phase runs the whole
+    remaining prompt in one call — the serial baseline.
+
     Page exhaustion at admission is backpressure, not failure: the
     request stays queued until running requests retire — except
-    requests that could never fit the pool, which fail fast.
+    requests that could never fit the pool, which fail fast.  A chunk
+    that cannot allocate mid-prefill waits for decode frees; if
+    nothing is decoding, the latest-deadline prefilling request is
+    evicted (pages released, requeued) so the earliest can proceed —
+    chunked admission can never deadlock the pool.
+
+    Cancellation (``handle.cancel()``) resolves the future instantly;
+    this worker releases the request's pages at its next sweep —
+    queued, mid-prefill, or mid-decode alike, the pool returns to its
+    pre-admission unique-page count.
     """
 
     _thread_prefix = "paged-llm-worker"
@@ -376,28 +475,43 @@ class PagedLLMScheduler(SchedulerLifecycle):
         self.decode_batches = 0
         self.mixed_admission_batches = 0   # batches mixing admit times
         self.tokens_generated = 0
+        self.prefill_chunks = 0            # chunk-phase device calls
+        self.interleaved_chunks = 0        # chunks run while decoding
+        self.prefill_evictions = 0         # chunk-starvation evictions
+        self._prefilling: List[List[_Prefilling]] = [[] for _ in range(n)]
         self._dead = [False] * n    # engine lost its caches (see _worker)
         self._init_lifecycle(n, self.cfg.max_workers, clock)
 
+    def _chunk_tokens(self, engine) -> Optional[int]:
+        if self.cfg.prefill_chunk_pages <= 0:
+            return None
+        return self.cfg.prefill_chunk_pages * engine.pool.page_size
+
     def _reclaim_stranded(self, t: float) -> None:
-        # cancel-path cleanup: sequences stranded in slots by a
-        # no-drain stop must hand their pages back (safe only now —
-        # the executor is drained, so no zombie decode can write into
-        # reclaimed pages).  A drained stop leaves slots empty.
+        # cancel-path cleanup: sequences stranded in slots or the
+        # prefilling roster by a no-drain stop must hand their pages
+        # back (safe only now — the executor is drained, so no zombie
+        # device call can write into reclaimed pages).  A drained stop
+        # leaves both empty.
         stopped = RuntimeError("scheduler stopped before completion")
         for m, slots in enumerate(self.slots):
+            for ent in self._prefilling[m]:
+                self.engines[m].pool.release(ent.seq)
+                if ent.req.fail(stopped, t):
+                    self.metrics.on_fail(ent.req)
+            self._prefilling[m].clear()
             for e in slots.active():
                 self.engines[m].pool.release(e.seq)
                 slots.retire(e)
-                e.req.fail(stopped, t)
-                self.metrics.on_fail(e.req)
+                if e.req.fail(stopped, t):
+                    self.metrics.on_fail(e.req)
             # a no-drain stop also strands never-admitted requests in
             # the queues: fail them through the normal path so request
             # state and the failed counter stay consistent
             while len(self.queues[m]):
                 req = self.queues[m].pop()
-                req.fail(stopped, t)
-                self.metrics.on_fail(req)
+                if req.fail(stopped, t):
+                    self.metrics.on_fail(req)
 
     def warmup(self, prompt_lens: Sequence[int]) -> None:
         """Compile prefill at each padded prompt length and the decode
@@ -410,37 +524,72 @@ class PagedLLMScheduler(SchedulerLifecycle):
         covers any sub-page divergence — its offsets are traced) and
         the copy-on-write page copy compile up front instead of
         stalling the first sharing request mid-traffic; multi-page
-        tails still compile on first use."""
+        tails still compile on first use.  With chunked prefill, a
+        two-chunk prompt additionally compiles the fixed chunk shape.
+        The logit cache is bypassed and cleared: warmup prompts must
+        neither skip the compiles they exist to trigger nor leave
+        synthetic entries behind."""
         for m, engine in enumerate(self.engines):
-            # clamp so warmup itself always clears the capacity check
-            # (a real prompt near max_len compiles on first use
-            # instead); dedupe AFTER clamping
-            for pl in sorted(set(
-                    min(engine.pool.pages_for(p) * engine.pool.page_size,
-                        engine.scfg.max_len - 2)
-                    for p in prompt_lens)):
-                if pl < 1:
-                    continue
-                seq = engine.prefill_into_pages(
-                    np.zeros((pl,), np.int32), max_new_tokens=2)
-                twin = None
-                if engine.pool.prefix_sharing:
+            cache_cap = engine._logit_cache_cap
+            engine._logit_cache_cap = 0
+            try:
+                self._warmup_engine(engine)
+                # clamp so warmup itself always clears the capacity
+                # check (a real prompt near max_len compiles on first
+                # use instead); dedupe AFTER clamping
+                for pl in sorted(set(
+                        min(engine.pool.pages_for(p) * engine.pool.page_size,
+                            engine.scfg.max_len - 2)
+                        for p in prompt_lens)):
+                    if pl < 1:
+                        continue
+                    seq = engine.prefill_into_pages(
+                        np.zeros((pl,), np.int32), max_new_tokens=2)
+                    twin = None
+                    if engine.pool.prefix_sharing:
+                        try:
+                            twin = engine.prefill_into_pages(
+                                np.zeros((pl,), np.int32), max_new_tokens=2)
+                        except OutOfPages:
+                            pass    # pool too small for a warmup pair:
+                            #         the tail path compiles on first use
                     try:
-                        twin = engine.prefill_into_pages(
-                            np.zeros((pl,), np.int32), max_new_tokens=2)
+                        # with a twin sharing the boundary page this
+                        # decode step also copy-on-writes, compiling
+                        # _copy_page
+                        engine.decode_step_batch([seq])
                     except OutOfPages:
-                        pass    # pool too small for a warmup pair:
-                        #         the tail path compiles on first use
-                try:
-                    # with a twin sharing the boundary page this decode
-                    # step also copy-on-writes, compiling _copy_page
-                    engine.decode_step_batch([seq])
-                except OutOfPages:
-                    pass        # warmup COW found no free page: ditto
-                finally:
-                    engine.pool.release(seq)      # never leak warmup pages
-                    if twin is not None:
-                        engine.pool.release(twin)
+                        pass        # warmup COW found no free page: ditto
+                    finally:
+                        engine.pool.release(seq)    # never leak warmup pages
+                        if twin is not None:
+                            engine.pool.release(twin)
+            finally:
+                engine._logit_cache_cap = cache_cap
+                engine._logit_cache.clear()
+                engine.logit_cache_hits = 0
+                engine.logit_cache_misses = 0
+
+    def _warmup_engine(self, engine) -> None:
+        """Compile the fixed chunk-shape prefill jit (chunked mode):
+        a two-chunk zeros prompt forces the q_offset tail path at the
+        chunk shape, which a whole-prompt warmup never exercises."""
+        ct = self._chunk_tokens(engine)
+        if ct is None:
+            return
+        pl = min(2 * ct, engine.scfg.max_len - 2)
+        if pl <= ct:
+            return                  # one chunk covers it: whole path only
+        try:
+            seq = engine.begin_prefill(np.zeros((pl,), np.int32),
+                                       max_new_tokens=2)
+            try:
+                while not engine.prefill_chunk(seq, chunk_tokens=ct):
+                    pass
+            finally:
+                engine.pool.release(seq)
+        except OutOfPages:
+            pass                    # pool too small: compile on first use
 
     # ---- submission ---------------------------------------------------
     def _select(self, x) -> int:
@@ -453,28 +602,42 @@ class PagedLLMScheduler(SchedulerLifecycle):
             if self._dead[m]:
                 raise RuntimeError(f"engine {m} is dead (decode failed)")
             return m
-        # least-loaded: fewest requests queued + running
-        loads = [len(self.queues[m]) + len(self.slots[m]) for m in live]
+        # least-loaded: fewest requests queued + prefilling + running
+        loads = [len(self.queues[m]) + len(self._prefilling[m])
+                 + len(self.slots[m]) for m in live]
         return live[int(np.argmin(loads))]
 
-    def submit_nowait(self, prompt, *, max_new_tokens: Optional[int] = None,
-                      slo_ms: Optional[float] = None,
-                      seed: Optional[int] = None) -> asyncio.Future:
-        """Admit one generation request; the future resolves to the
-        full token array (prompt + generated).  ``seed`` keys the
-        request's sampling chain when temperature > 0 (None = engine
-        default, i.e. identical prompts sample identically)."""
+    def submit(self, prompt, params: Optional[SamplingParams] = None, *,
+               max_new_tokens: Optional[int] = None,
+               slo_ms: Optional[float] = None,
+               seed: Optional[int] = None,
+               temperature: Optional[float] = None,
+               stop_tokens: Optional[Sequence[int]] = None,
+               priority: Optional[int] = None,
+               stream: Optional[bool] = None) -> GenerationHandle:
+        """Admit one generation request; the handle's ``result()``
+        resolves to the full token array (prompt + generated), its
+        event stream yields per-token progress when ``stream=True``.
+        ``seed`` keys the request's sampling chain when temperature > 0
+        (None = engine default, i.e. identical prompts sample
+        identically)."""
         self._check_accepting()
+        if params is None and max_new_tokens is None:
+            max_new_tokens = self.cfg.max_new_tokens   # scheduler default
+        params = _resolve_params(
+            params, max_new_tokens=max_new_tokens, slo_ms=slo_ms, seed=seed,
+            temperature=temperature,
+            stop_tokens=tuple(stop_tokens) if stop_tokens is not None
+            else None,
+            priority=priority, stream=stream)
         now = self.clock()
-        slo = slo_ms if slo_ms is not None else self.cfg.default_slo_ms
+        slo = (params.slo_ms if params.slo_ms is not None
+               else self.cfg.default_slo_ms)
         loop = asyncio.get_running_loop()
         req = Request(rid=self._next_request_id(),
                       x=np.asarray(prompt, np.int32),
                       arrival_t=now, deadline_t=now + slo / 1e3,
-                      future=loop.create_future(), seed=seed,
-                      max_new_tokens=(max_new_tokens if max_new_tokens
-                                      is not None
-                                      else self.cfg.max_new_tokens))
+                      params=params, future=loop.create_future())
         self.metrics.on_arrival(req)
         m = self._select(req.x)
         req.model_id = m
@@ -482,23 +645,27 @@ class PagedLLMScheduler(SchedulerLifecycle):
         self.metrics.on_admit(req)
         self._register_inflight(req)
         self._events[m].set()
-        return req.future
+        return GenerationHandle(req, self)
 
-    async def submit(self, prompt, *, max_new_tokens: Optional[int] = None,
-                     slo_ms: Optional[float] = None,
-                     seed: Optional[int] = None):
-        return await self.submit_nowait(prompt, max_new_tokens=max_new_tokens,
-                                        slo_ms=slo_ms, seed=seed)
+    def submit_nowait(self, prompt, *, max_new_tokens: Optional[int] = None,
+                      slo_ms: Optional[float] = None,
+                      seed: Optional[int] = None) -> asyncio.Future:
+        """One-shot compatibility shim: the handle's raw future."""
+        return self.submit(prompt, max_new_tokens=max_new_tokens,
+                           slo_ms=slo_ms, seed=seed).future
 
-    # ---- the continuous-decode loop -----------------------------------
-    def _admissible(self, engine, req: Request) -> bool:
+    # ---- the two-phase continuous loop --------------------------------
+    def _admissible(self, engine, req: Request,
+                    chunk_tokens: Optional[int]) -> bool:
         """Enough free pages right now?  Admission budgets *unique*
         pages — the prompt's resident shared prefix costs nothing —
         plus the pool's copy-on-write headroom (pages held back so a
         later write into a shared page can always get its private
-        copy; decode must never OOM mid-flight)."""
-        need, cow_extra = engine.admission_page_cost(req.x,
-                                                     req.max_new_tokens)
+        copy; decode must never OOM mid-flight).  With chunked prefill
+        only the FIRST chunk is budgeted: later chunks allocate as they
+        run, backpressured against decode frees."""
+        need, cow_extra = engine.admission_page_cost(
+            req.x, req.max_new_tokens, chunk_tokens=chunk_tokens)
         reserve = engine.pool.cow_headroom + cow_extra
         return need + reserve <= engine.pool.num_free
 
@@ -509,75 +676,73 @@ class PagedLLMScheduler(SchedulerLifecycle):
     async def _worker(self, m: int) -> None:
         engine = self.engines[m]
         queue, slots, event = self.queues[m], self.slots[m], self._events[m]
+        prefilling = self._prefilling[m]
         loop = asyncio.get_running_loop()
-        step_idx = 0
+        chunk_tokens = self._chunk_tokens(engine)
         while True:
-            # ---- admit: prefill into free pages, join the batch -----
-            while len(queue) and slots.free_count > 0:
+            progressed = False
+
+            # ---- admit: begin prefill (host-side page mapping) ------
+            while (len(queue)
+                   and len(slots) + len(prefilling) < slots.capacity):
                 nxt = queue.peek()
+                if nxt.is_terminal:             # cancelled while queued:
+                    queue.pop()                 # future already resolved
+                    progressed = True
+                    continue
                 if not self._fits_ever(engine, nxt):
                     req = queue.pop()
-                    req.fail(OutOfPages(
-                        f"request needs more pages than the whole pool "
-                        f"({len(req.x)} + {req.max_new_tokens} tokens > "
-                        f"{(engine.pool.num_pages - 1) * engine.pool.page_size} "
-                        f"poolable)"), self.clock())
-                    self.metrics.on_fail(req)
+                    if req.fail(OutOfPages(
+                            f"request needs more pages than the whole pool "
+                            f"({len(req.x)} + {req.max_new_tokens} tokens > "
+                            f"{(engine.pool.num_pages - 1) * engine.pool.page_size} "
+                            f"poolable)"), self.clock()):
+                        self.metrics.on_fail(req)
+                    progressed = True
                     continue
-                if not self._admissible(engine, nxt):
+                if not self._admissible(engine, nxt, chunk_tokens):
                     break                       # backpressure: wait for frees
                 req = queue.pop()
-                req.state = RequestState.RUNNING
+                req.state = RequestState.PREFILLING
                 req.started_t = self.clock()    # per request, not per sweep
-                prefill_fut = loop.run_in_executor(
-                    self._pool,
-                    functools.partial(engine.prefill_into_pages, req.x,
-                                      max_new_tokens=req.max_new_tokens,
-                                      seed=req.seed))
                 try:
-                    seq = await asyncio.shield(prefill_fut)
-                except asyncio.CancelledError:
-                    # no-drain stop cancelled us mid-prefill; the
-                    # executor call cannot be interrupted and will
-                    # allocate pages for a sequence that never joins a
-                    # slot — wait it out and hand the pages straight
-                    # back before dying
-                    try:
-                        seq = await prefill_fut
-                        engine.pool.release(seq)
-                    except Exception:
-                        pass            # prefill itself failed: nothing held
-                    req.fail(RuntimeError("scheduler stopped before "
-                                          "completion"), self.clock())
-                    self.metrics.on_fail(req)
-                    raise
-                except OutOfPages as exc:
-                    if engine.caches_poisoned:
-                        req.fail(exc, self.clock())
-                        self.metrics.on_fail(req)
-                        self._kill_engine(m, exc)
-                        return
-                    # the unique-page admission estimate went stale
-                    # between check and prefill (a shared resident
-                    # retired).  Backpressure, not failure: requeue and
-                    # wait for running requests to free pages.
-                    queue.push(req, self.clock())
-                    break
+                    # host-side validation only: the shared-prefix
+                    # mapping and logit-cache fast path run lazily in
+                    # the first prefill_chunk (see _run_chunk)
+                    seq = engine.begin_prefill(
+                        req.x, max_new_tokens=req.max_new_tokens,
+                        seed=req.seed, temperature=req.params.temperature,
+                        stop_tokens=req.params.stop_tokens)
                 except Exception as exc:
-                    req.fail(exc, self.clock())
-                    self.metrics.on_fail(req)
-                    if engine.caches_poisoned:
-                        # the donating prefill jit failed at execution:
-                        # the engine's caches are gone, same terminal
-                        # state as a decode failure
-                        self._kill_engine(m, exc)
+                    if req.fail(exc, self.clock()):
+                        self.metrics.on_fail(req)
+                    continue                    # request-local: keep serving
+                progressed = True
+                req.on_prefill_progress(seq.prefill_pos, self.clock())
+                prefilling.append(_Prefilling(req, seq))
+
+            # ---- chunk: one prefill chunk, earliest deadline first --
+            if prefilling:
+                ent = min(prefilling,
+                          key=lambda e: (e.req.deadline_t, e.req.rid))
+                if ent.req.is_terminal:         # cancelled mid-prefill
+                    prefilling.remove(ent)
+                    engine.pool.release(ent.seq)
+                    progressed = True
+                else:
+                    ran = await self._run_chunk(m, ent, chunk_tokens)
+                    if ran is None:             # engine died
                         return
-                    continue            # request-local: keep serving
-                entry = slots.join(req, seq, admit_step=step_idx)
-                if seq.done:                # max_new_tokens == 1 edge
-                    self._retire(m, entry, self.clock())
+                    progressed = progressed or ran
 
             # ---- step: one token for every running request ----------
+            # reap cancelled entries first so their pages free before
+            # the batch forms (and admission sees them this sweep)
+            for e in slots.active():
+                if e.req.is_terminal:
+                    engine.pool.release(e.seq)
+                    slots.retire(e)
+                    progressed = True
             active = slots.active()
             if active:
                 t0 = self.clock()
@@ -597,8 +762,8 @@ class PagedLLMScheduler(SchedulerLifecycle):
                             if e.seq is cow_seq:
                                 engine.pool.release(e.seq)
                                 slots.retire(e)
-                                e.req.fail(exc, self.clock())
-                                self.metrics.on_fail(e.req)
+                                if e.req.fail(exc, self.clock()):
+                                    self.metrics.on_fail(e.req)
                                 break
                         continue
                     # decode donates the engine's caches; an execution
@@ -617,13 +782,20 @@ class PagedLLMScheduler(SchedulerLifecycle):
                 self.metrics.on_batch(m, len(active), slots.capacity)
                 self.metrics.on_model_busy(m, t1 - t0)
                 self.tokens_generated += len(active)
-                step_idx += 1
                 for e in active:
+                    if not e.req.is_terminal:
+                        e.req.on_token(int(e.seq.tokens[-1]),
+                                       e.seq.pos, t1)
+                    if e.last_token_t:
+                        self.metrics.on_decode_gap(t1 - e.last_token_t)
+                    e.last_token_t = t1
                     if e.seq.done:
                         self._retire(m, e, t1)
                 continue
 
-            if self._stopping and not len(queue):
+            if progressed:
+                continue
+            if self._stopping and not len(queue) and not prefilling:
                 return
             try:
                 await asyncio.wait_for(event.wait(), self.cfg.idle_poll_s)
@@ -631,23 +803,133 @@ class PagedLLMScheduler(SchedulerLifecycle):
                 pass
             event.clear()
 
+    async def _run_chunk(self, m: int, ent: _Prefilling,
+                         chunk_tokens: Optional[int]) -> Optional[bool]:
+        """One executor round of ``Engine.prefill_chunk`` for ``ent``.
+        Returns True on progress, False on backpressure, None when the
+        engine died (the worker must exit)."""
+        engine, loop = self.engines[m], asyncio.get_running_loop()
+        prefilling, slots = self._prefilling[m], self.slots[m]
+        chunk_fut = loop.run_in_executor(
+            self._pool, functools.partial(engine.prefill_chunk, ent.seq,
+                                          chunk_tokens=chunk_tokens))
+        try:
+            done = await asyncio.shield(chunk_fut)
+        except asyncio.CancelledError:
+            # no-drain stop cancelled us mid-chunk; the executor call
+            # cannot be interrupted — wait it out and hand the pages
+            # straight back before dying
+            try:
+                await chunk_fut
+            except Exception:
+                pass
+            prefilling.remove(ent)
+            engine.pool.release(ent.seq)
+            if ent.req.fail(RuntimeError("scheduler stopped before "
+                                         "completion"), self.clock()):
+                self.metrics.on_fail(ent.req)
+            raise
+        except OutOfPages as exc:
+            if engine.caches_poisoned:
+                prefilling.remove(ent)
+                engine.pool.release(ent.seq)
+                if ent.req.fail(exc, self.clock()):
+                    self.metrics.on_fail(ent.req)
+                self._kill_engine(m, exc)
+                return None
+            if ent.seq.prefill_pos == ent.seq.shared_prefix_len:
+                # nothing computed yet: plain requeue (the admission
+                # estimate raced a retire), exactly the serial path.
+                # A request cancelled during the chunk await must NOT
+                # be re-pushed — ModelQueue.push would overwrite its
+                # CANCELLED state and resurrect it.
+                prefilling.remove(ent)
+                engine.pool.release(ent.seq)
+                if not ent.req.is_terminal:
+                    self.queues[m].push(ent.req, self.clock())
+                return False
+            if not slots.active():
+                # mid-prefill starvation with nothing decoding: evict
+                # the latest-deadline prefilling request (release its
+                # pages, requeue it) so the earliest can proceed —
+                # otherwise partially-prefilled holders could deadlock
+                # the pool among themselves
+                victim = max((e for e in prefilling if e is not ent),
+                             key=lambda e: (e.req.deadline_t, e.req.rid),
+                             default=ent)
+                prefilling.remove(victim)
+                engine.pool.release(victim.seq)
+                if not victim.req.is_terminal:   # see requeue note above
+                    self.queues[m].push(victim.req, self.clock())
+                    self.prefill_evictions += 1
+                return True
+            return False        # decode frees are coming: retry next sweep
+        except Exception as exc:
+            prefilling.remove(ent)
+            engine.pool.release(ent.seq)
+            if ent.req.fail(exc, self.clock()):
+                self.metrics.on_fail(ent.req)
+            if engine.caches_poisoned:
+                # the donating prefill jit failed at execution: the
+                # engine's caches are gone, same terminal state as a
+                # decode failure
+                self._kill_engine(m, exc)
+                return None
+            return True         # request-local: keep serving
+        self.prefill_chunks += 1
+        if slots.active():
+            self.interleaved_chunks += 1
+        t = self.clock()
+        ent.req.on_prefill_progress(ent.seq.prefill_pos, t)
+        if done:
+            prefilling.remove(ent)
+            self._join(m, ent.req, ent.seq, self._step_of(m))
+        return True
+
+    def _step_of(self, m: int) -> int:
+        # admit_step only feeds the mixed-batch evidence counter; the
+        # decode-batch count is a faithful monotone stand-in
+        return self.decode_batches
+
+    def _join(self, m: int, req: Request, seq, step_idx: int) -> None:
+        """Prefill finished: FIRST_TOKEN lands (TTFT stops) and the
+        request joins the running decode batch."""
+        t = self.clock()
+        if req.is_terminal:
+            # cancelled while its final chunk was on the executor: the
+            # future is already resolved; joining would resurrect it
+            # (state write below) and decode a dead request to the end
+            self.engines[m].pool.release(seq)
+            return
+        req.state = RequestState.RUNNING
+        req.on_first_token(int(seq.tokens[0]), seq.prompt_len, t)
+        entry = self.slots[m].join(req, seq, admit_step=step_idx)
+        entry.last_token_t = t
+        if seq.done:                # max_new_tokens == 1 / instant stop
+            self._retire(m, entry, t)
+
     def _kill_engine(self, m: int, exc: BaseException) -> None:
         """Terminal engine failure (donated caches deleted): free every
-        page it holds, fail its running and queued requests, and take
-        it out of the selection rotation."""
+        page it holds, fail its running, prefilling and queued
+        requests, and take it out of the selection rotation."""
         self._dead[m] = True
         engine, slots, queue = self.engines[m], self.slots[m], self.queues[m]
         t = self.clock()
+        for ent in self._prefilling[m]:
+            engine.pool.release(ent.seq)
+            if ent.req.fail(exc, t):
+                self.metrics.on_fail(ent.req)
+        self._prefilling[m].clear()
         for e in slots.active():
             engine.pool.release(e.seq)
             slots.retire(e)
-            e.req.fail(exc, t)
-            self.metrics.on_fail(e.req)
+            if e.req.fail(exc, t):
+                self.metrics.on_fail(e.req)
         while len(queue):
             req = queue.pop()
-            req.fail(RuntimeError(f"engine {m} died (caches lost): {exc}"),
-                     self.clock())
-            self.metrics.on_fail(req)
+            if req.fail(RuntimeError(f"engine {m} died (caches lost): {exc}"),
+                        self.clock()):
+                self.metrics.on_fail(req)
 
     def _retire(self, m: int, entry, t: float) -> None:
         """Finished: decref the pages *now* (exclusive pages are
@@ -664,8 +946,8 @@ class PagedLLMScheduler(SchedulerLifecycle):
         req.flops = self.metrics.costs[m]
         out = np.concatenate([np.asarray(req.x, np.int32),
                               np.asarray(entry.seq.tokens, np.int32)])
-        req.complete(out, t)
-        self.metrics.on_complete(req)
+        if req.complete(out, t, reason=entry.seq.finish_reason):
+            self.metrics.on_complete(req)
 
     # ---- report -------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
@@ -674,11 +956,18 @@ class PagedLLMScheduler(SchedulerLifecycle):
             "decode_batches": self.decode_batches,
             "mixed_admission_batches": self.mixed_admission_batches,
             "tokens_generated": self.tokens_generated,
+            "prefill_chunks": self.prefill_chunks,
+            "interleaved_chunks": self.interleaved_chunks,
+            "prefill_evictions": self.prefill_evictions,
             "prefill_tokens_computed": sum(e.prefill_tokens_computed
                                            for e in self.engines),
             "prefill_tokens_shared": sum(e.prefill_tokens_shared
                                          for e in self.engines),
             "cow_copies": sum(e.cow_count for e in self.engines),
+            "logit_cache_hits": sum(e.logit_cache_hits
+                                    for e in self.engines),
+            "logit_cache_misses": sum(e.logit_cache_misses
+                                      for e in self.engines),
             "pools": [e.pool.stats() for e in self.engines],
         })
         return snap

@@ -63,14 +63,16 @@ def arrival_times(cfg: TrafficConfig) -> np.ndarray:
     return np.asarray(times)
 
 
-async def replay(submit: Callable[[Any], "asyncio.Future"],
+async def replay(submit: Callable[[Any], Any],
                  samples: Sequence[Any], times: np.ndarray,
                  *, speed: float = 1.0) -> List["asyncio.Future"]:
     """Open-loop replay: submit samples at their scheduled offsets.
 
-    ``submit`` must be non-blocking (MuxScheduler.submit_nowait);
-    ``speed`` > 1 compresses the schedule (2.0 = twice as fast).
-    Returns the per-request futures in submission order.
+    ``submit`` must be non-blocking — either the new handle surface
+    (``MuxScheduler.submit``, returning a GenerationHandle) or the
+    future-returning compat shim (``submit_nowait``); ``speed`` > 1
+    compresses the schedule (2.0 = twice as fast).  Returns the
+    per-request futures in submission order.
     """
     t0 = time.monotonic()
     futures: List[asyncio.Future] = []
@@ -78,5 +80,6 @@ async def replay(submit: Callable[[Any], "asyncio.Future"],
         delay = float(t_arr) / speed - (time.monotonic() - t0)
         if delay > 0:
             await asyncio.sleep(delay)
-        futures.append(submit(x))
+        res = submit(x)
+        futures.append(res.future if hasattr(res, "future") else res)
     return futures

@@ -306,15 +306,15 @@ def test_scheduler_continuous_decode_trace():
         sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=10))
         sched.warmup(lens)
         async with sched:
-            futs = [sched.submit_nowait(prompts[0]),
-                    sched.submit_nowait(prompts[1])]
+            handles = [sched.submit(prompts[0]),
+                       sched.submit(prompts[1])]
             # let the first two get ahead so the later admissions join a
             # *running* decode batch
             while sched.decode_batches < 2:
                 await asyncio.sleep(0.005)
-            futs += [sched.submit_nowait(prompts[2]),
-                     sched.submit_nowait(prompts[3])]
-            outs = await asyncio.gather(*futs)
+            handles += [sched.submit(prompts[2]),
+                        sched.submit(prompts[3])]
+            outs = await asyncio.gather(*handles)
         return sched, outs
 
     sched, outs = asyncio.run(main())
@@ -340,11 +340,11 @@ def test_stop_without_drain_reclaims_pages():
     async def main():
         sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=40))
         await sched.start()
-        fut = sched.submit_nowait(np.zeros((8,), np.int32))
+        handle = sched.submit(np.zeros((8,), np.int32))
         while sched.decode_batches < 1:     # request is mid-generation
             await asyncio.sleep(0.005)
         await sched.stop(drain=False)
-        assert fut.done()
+        assert handle.done()
         return sched
 
     asyncio.run(main())
@@ -394,10 +394,10 @@ def test_paged_lifecycle_drain_then_cancel_mid_decode():
     async def main():
         sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=30))
         await sched.start()
-        fut1 = sched.submit_nowait(np.zeros(4, np.int32), max_new_tokens=2)
+        fut1 = sched.submit(np.zeros(4, np.int32), max_new_tokens=2).future
         await sched.drain()
         assert fut1.done() and not fut1.cancelled()
-        fut2 = sched.submit_nowait(np.zeros(8, np.int32))
+        fut2 = sched.submit(np.zeros(8, np.int32)).future
         while sched.decode_batches < 2:      # provably mid-generation
             await asyncio.sleep(0.005)
         await sched.stop(drain=False)
@@ -429,11 +429,12 @@ def test_scheduler_backpressure_oversized_request():
         sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=6))
         async with sched:
             # 3 x 12 tokens = 3 pages each; pool holds 5 -> the third
-            # waits for reclaimed pages
-            futs = [sched.submit_nowait(p) for p in small]
+            # waits for reclaimed pages.  (submit_nowait here doubles
+            # as the paged compat-shim pin.)
+            handles = [sched.submit(p) for p in small]
             too_big = sched.submit_nowait(
                 np.zeros((26,), np.int32), max_new_tokens=6)
-            outs = await asyncio.gather(*futs)
+            outs = await asyncio.gather(*handles)
             with pytest.raises(OutOfPages):
                 await too_big
         return sched, outs

@@ -1,6 +1,13 @@
 """Hypothesis property tests for the refcounted PagePool under random
-interleaved alloc / share / copy-on-write / decref op sequences, and
-for the prefix index under random prompt traffic.
+interleaved alloc / share / grow / copy-on-write / decref / cancel op
+sequences, and for the prefix index under random prompt traffic.
+
+The op set mirrors the serving stack's whole page lifecycle: ``alloc``
+is a serial admission, ``grow`` is a chunked-prefill step allocating
+the next chunk's pages onto a live sequence, ``share`` is a
+prefix-sharing join, ``cow`` a copy-on-write, ``release`` a normal
+retire, and ``cancel`` a mid-flight abort (streaming API) that must
+restore the pool to the sequence's pre-admission unique-page count.
 
 Invariants (the ownership contract the prefix-sharing serving stack
 leans on):
@@ -10,6 +17,8 @@ leans on):
   * the scratch page is never handed out;
   * allocation is lowest-id deterministic: replaying an op trace on a
     fresh pool yields identical page assignments;
+  * a cancel of a partially-grown sequence frees exactly the unique
+    pages that sequence held;
   * after every sequence retires the pool drains to zero pages held,
     zero prefix entries, zero COW headroom — nothing leaks.
 """
@@ -40,6 +49,10 @@ def apply_op(pool: PagePool, live, op):
     kind = op[0]
     if kind == "alloc":
         live.append(SimSeq(pool.alloc(op[1])))
+    elif kind == "grow":
+        # a chunked-prefill step: a live (mid-prefill) sequence
+        # allocates the next chunk's pages onto what it already holds
+        live[op[1]].pages.extend(pool.alloc(op[2]))
     elif kind == "share":
         # a prefix-sharing join: the new sequence maps the same pages;
         # its (now shared) boundary page may later need copy-on-write
@@ -55,6 +68,16 @@ def apply_op(pool: PagePool, live, op):
         seq.pages[op[2]] = new
     elif kind == "release":
         pool.release(live.pop(op[1]))
+    elif kind == "cancel":
+        # a mid-flight abort (handle.cancel()): release must return
+        # the pool to this sequence's pre-admission unique-page count
+        # — exactly the pages only it holds come back
+        seq = live.pop(op[1])
+        before = pool.pages_in_use
+        exclusive = sum(1 for pg in set(seq.pages)
+                        if pool.refcount(pg) == 1)
+        pool.release(seq)
+        assert pool.pages_in_use == before - exclusive
     else:
         raise AssertionError(op)
 
@@ -92,6 +115,9 @@ def test_pool_random_alloc_share_cow_decref(data):
         if live:
             ops.append("share")
             ops.append("release")
+            ops.append("cancel")
+        if live and pool.num_free:
+            ops.append("grow")
         if live and pool.num_free and any(
                 pool.refcount(pg) > 1 for s in live for pg in s.pages):
             ops.append("cow")
@@ -99,6 +125,10 @@ def test_pool_random_alloc_share_cow_decref(data):
         if kind == "alloc":
             n = data.draw(st.integers(1, pool.num_free), label="n")
             op = ("alloc", n)
+        elif kind == "grow":
+            op = ("grow", data.draw(st.integers(0, len(live) - 1),
+                                    label="seq"),
+                  data.draw(st.integers(1, pool.num_free), label="n"))
         elif kind == "share":
             op = ("share", data.draw(st.integers(0, len(live) - 1),
                                      label="seq"))
@@ -107,6 +137,9 @@ def test_pool_random_alloc_share_cow_decref(data):
                      for j, pg in enumerate(s.pages)
                      if pool.refcount(pg) > 1]
             op = ("cow",) + data.draw(st.sampled_from(cands), label="page")
+        elif kind == "cancel":
+            op = ("cancel", data.draw(st.integers(0, len(live) - 1),
+                                      label="seq"))
         else:
             op = ("release", data.draw(st.integers(0, len(live) - 1),
                                        label="seq"))

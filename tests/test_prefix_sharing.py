@@ -262,8 +262,8 @@ def test_scheduler_admission_budgets_unique_pages():
     async def main():
         sched = PagedLLMScheduler([eng], PagedLLMConfig(max_new_tokens=4))
         async with sched:
-            futs = [sched.submit_nowait(pa), sched.submit_nowait(pb)]
-            outs = await asyncio.gather(*futs)
+            handles = [sched.submit(pa), sched.submit(pb)]
+            outs = await asyncio.gather(*handles)
         return sched, outs
 
     sched, outs = asyncio.run(main())

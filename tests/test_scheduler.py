@@ -222,8 +222,8 @@ def test_scheduler_end_to_end_outputs_and_metrics():
         sched = MuxScheduler(server, SchedulerConfig(max_batch_size=4,
                                                      max_wait_ms=2.0))
         async with sched:
-            futures = [sched.submit_nowait(x) for x in xs]
-            return sched, await asyncio.gather(*futures)
+            handles = [sched.submit(x) for x in xs]   # awaitable handles
+            return sched, await asyncio.gather(*handles)
 
     sched, outs = asyncio.run(main())
     for i, (x, out) in enumerate(zip(xs, outs)):
@@ -335,10 +335,10 @@ def test_signature_mismatch_rejected_at_admission_not_batch():
                                                      max_wait_ms=1.0))
         async with sched:
             # the first successful admission sets the serving signature
-            good_a = sched.submit_nowait(np.zeros(4, np.float32))
+            good_a = sched.submit(np.zeros(4, np.float32))
             # a mismatched request fails ITS OWN future at admission —
             # it must not reach the queue and poison good_a's bucket
-            bad = sched.submit_nowait(np.zeros(7, np.float32))
+            bad = sched.submit(np.zeros(7, np.float32))
             with pytest.raises(ValueError, match="serving signature"):
                 await bad
             np.testing.assert_array_equal(await good_a, np.zeros(4))
@@ -364,7 +364,7 @@ def test_admission_failure_resolves_futures_and_keeps_books_closed():
         sched = MuxScheduler(server, SchedulerConfig(max_batch_size=2,
                                                      max_wait_ms=1.0))
         async with sched:
-            bad = sched.submit_nowait(np.zeros(9, np.float32))
+            bad = sched.submit(np.zeros(9, np.float32))
             with pytest.raises(ValueError, match="bad feature width"):
                 await bad
             out = await sched.submit(np.zeros(4, np.float32))
@@ -387,9 +387,9 @@ def test_scheduler_worker_failure_propagates():
                              SchedulerConfig(max_batch_size=2,
                                              max_wait_ms=1.0))
         async with sched:
-            fut = sched.submit_nowait(np.zeros(4))
+            handle = sched.submit(np.zeros(4))
             with pytest.raises(RuntimeError, match="bucket exploded"):
-                await fut
+                await handle
         assert sched.metrics.failed == 1
 
     asyncio.run(main())
@@ -399,7 +399,9 @@ def test_scheduler_stop_drains_partial_batches():
     server = FakeServer()
 
     async def main():
-        # max_wait so long the only way out is the stop()-flush
+        # max_wait so long the only way out is the stop()-flush.
+        # submit_nowait is the one-shot compat shim (handle.future) —
+        # this test doubles as its pin.
         sched = MuxScheduler(server, SchedulerConfig(max_batch_size=64,
                                                      max_wait_ms=60_000.0))
         await sched.start()
@@ -444,10 +446,10 @@ def test_lifecycle_drain_waits_for_all_inflight():
         sched = MuxScheduler(server, SchedulerConfig(max_batch_size=4,
                                                      max_wait_ms=1.0))
         async with sched:
-            futs = [sched.submit_nowait(np.zeros(4, np.float32))
-                    for _ in range(6)]
+            handles = [sched.submit(np.zeros(4, np.float32))
+                       for _ in range(6)]
             await sched.drain()
-            assert all(f.done() for f in futs)
+            assert all(h.done() for h in handles)
         assert sched.metrics.completed == 6
 
     asyncio.run(main())
@@ -467,10 +469,10 @@ def test_lifecycle_cancel_without_drain_fails_pending_futures():
                              SchedulerConfig(max_batch_size=64,
                                              max_wait_ms=60_000.0))
         await sched.start()
-        futs = [sched.submit_nowait(np.zeros(4, np.float32))
-                for _ in range(3)]
+        handles = [sched.submit(np.zeros(4, np.float32))
+                   for _ in range(3)]
         await sched.stop(drain=False)
-        assert all(f.done() for f in futs)       # resolved or cancelled
+        assert all(h.done() for h in handles)    # resolved or cancelled
 
     asyncio.run(main())
 
@@ -485,7 +487,7 @@ def test_open_loop_replay_respects_schedule():
         async with sched:
             times = arrival_times(TrafficConfig(rate=500.0, num_requests=10,
                                                 seed=0))
-            futures = await replay(sched.submit_nowait, xs, times)
+            futures = await replay(sched.submit, xs, times)
             await asyncio.gather(*futures)
         return sched.metrics.snapshot()
 
