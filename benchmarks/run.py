@@ -13,6 +13,7 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   paged      — ring vs paged KV decode, mixed lens  (serving memory/runtime)
   prefix     — prefix-sharing COW pages vs private  (serving memory/prefill)
   chunked    — chunked vs serial prefill TTFT       (serving streaming/TTFT)
+  disagg     — disaggregated vs interleaved prefill (serving backends/ITL)
   roofline   — dry-run roofline table               (EXPERIMENTS §Roofline)
 
 State (trained zoo + muxes) is cached under results/bench_state; set
@@ -53,7 +54,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,fig6,mux_kernel,"
-                         "scheduler,paged,prefix,chunked,roofline")
+                         "scheduler,paged,prefix,chunked,disagg,roofline")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -92,6 +93,9 @@ def main() -> None:
     if want("chunked"):
         from benchmarks import bench_chunked_prefill
         bench_chunked_prefill.run()
+    if want("disagg"):
+        from benchmarks import bench_disagg
+        bench_disagg.run()
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()

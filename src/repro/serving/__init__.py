@@ -1,10 +1,17 @@
 """repro.serving — batch engines (ring + paged KV), the multiplexed
-server, the paged KV-cache pool (repro.serving.kv_cache), and the
+server, the paged KV-cache pool (repro.serving.kv_cache), the
+scheduler⇄execution backends (repro.serving.backend), and the
 continuous-batching request scheduler (repro.serving.scheduler)."""
+from repro.serving.backend import (BackendCapacity, DisaggregatedBackend,
+                                   InProcessBackend, InProcessMuxBackend,
+                                   ModelBackend, RemoteStubBackend)
 from repro.serving.engine import Engine, ServeConfig
 from repro.serving.kv_cache import (OutOfPages, PagePool, PagedCacheConfig,
                                     PagedSequence)
 from repro.serving.mux_server import MuxServer, MuxServerConfig
 
 __all__ = ["Engine", "ServeConfig", "MuxServer", "MuxServerConfig",
-           "OutOfPages", "PagePool", "PagedCacheConfig", "PagedSequence"]
+           "OutOfPages", "PagePool", "PagedCacheConfig", "PagedSequence",
+           "ModelBackend", "BackendCapacity", "InProcessBackend",
+           "InProcessMuxBackend", "DisaggregatedBackend",
+           "RemoteStubBackend"]

@@ -1,0 +1,984 @@
+"""ModelBackend — the scheduler ⇄ execution seam.
+
+The schedulers in ``repro.serving.scheduler.runtime`` used to call
+``Engine`` / ``MuxServer`` methods directly from their worker loops,
+which blocked the ROADMAP's next steps (disaggregated prefill/decode
+workers, multi-host per-model dispatch) on an API boundary that did
+not exist.  This module is that boundary: a backend owns *where and
+how* one model's device work runs — its executors, queues and pools —
+while the scheduler keeps owning *what* runs when (admission, EDF
+chunk ordering, the continuous decode sweep, cancellation).
+
+The executor surface (all device work is ``await``-ed):
+
+    begin(prompt, ...)        host-side admission -> a sequence handle
+    await prefill_chunk(seq)  one prefill chunk; True once sealed
+    await decode_batch(seqs)  one token for every running sequence
+    await probe(prompt)       score/prewarm the model on one prompt
+    await step(bucket)        one request-level model step (mux path)
+    release(seq)              hand back everything the sequence holds
+    admissible()/fits_ever()/capacity()/healthy   admission introspection
+
+A sequence handle must expose the fields the token-level scheduler
+reads: ``prompt_len``, ``prefill_pos``, ``shared_prefix_len``,
+``prefill_done``, ``tokens``, ``pos``, ``done``, ``finish_reason``.
+``PagedSequence`` satisfies this natively; ``RemoteStubBackend`` keeps
+a client-side mirror in sync over its wire protocol.
+
+Three implementations ship:
+
+  * ``InProcessBackend`` — wraps one paged ``Engine`` on a single-
+    thread executor.  Token-identical to the pre-backend code paths.
+  * ``DisaggregatedBackend`` — separate prefill and decode engines
+    (same params, private pools) on separate single-thread executors.
+    Prefill chunks and decode sweeps run *concurrently*; a sealed
+    prefill's KV pages move to the decode pool through a two-stage
+    transfer (gather on the prefill executor, alloc+scatter on the
+    decode executor — the in-process stand-in for a NIC/ICI copy), so
+    a long prefill never stalls the running decode batch.
+  * ``RemoteStubBackend`` — serialized request/response over an
+    in-process duplex channel with a JSON wire schema.  The seam where
+    real RPC/mesh dispatch plugs in: the scheduler side only ever sees
+    the wire types, and the server side drives any inner backend.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import json
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.kv_cache import OutOfPages
+
+
+@dataclasses.dataclass
+class BackendCapacity:
+    """One backend's serving capacity, as admission sees it.
+
+    ``decode_batch`` is sequences per decode call (bucket rows on the
+    mux path).  Page fields are zero for non-paged backends.
+    ``inflight`` counts device calls queued or running on the
+    backend's executors — the queue-depth signal the admission
+    controller folds into its service-time estimates."""
+    decode_batch: int
+    page_size: int = 0
+    num_pages: int = 0          # allocatable pages (scratch excluded)
+    free_pages: int = 0
+    cow_headroom: int = 0
+    max_len: int = 0
+    inflight: int = 0
+
+
+class ModelBackend:
+    """Abstract executor surface for one model.  See module docstring
+    for the contract; every method below raises until an
+    implementation provides it, so a scheduler driving a backend that
+    lacks a surface fails loudly, not silently."""
+
+    name: str = "backend"
+    #: True when prefill and decode run on independent executors, so
+    #: the scheduler may leave a prefill chunk in flight while it
+    #: keeps sweeping the decode batch.
+    concurrent_prefill: bool = False
+
+    # ---- lifecycle ----------------------------------------------------
+    async def start(self) -> None:
+        """Bring up executors/channels.  Must be restartable."""
+
+    async def stop(self) -> None:
+        """Drain and shut down executors/channels (wait for in-flight
+        device work; the scheduler reclaims pool state only after)."""
+
+    def bind_metrics(self, metrics, model_id: int) -> None:
+        """Attach the scheduler's metrics registry; backends feed
+        per-backend queue-wait and transfer timings through it."""
+        self._metrics = metrics
+        self._model_id = model_id
+
+    # ---- token-level surface ------------------------------------------
+    def begin(self, prompt, *, max_new_tokens: int,
+              seed: Optional[int] = None,
+              temperature: Optional[float] = None,
+              stop_tokens: Sequence[int] = ()) -> Any:
+        raise NotImplementedError(f"{self.name} has no token-level surface")
+
+    async def prefill_chunk(self, seq, *,
+                            chunk_tokens: Optional[int] = None) -> bool:
+        raise NotImplementedError(f"{self.name} has no token-level surface")
+
+    async def decode_batch(self, seqs: Sequence) -> np.ndarray:
+        raise NotImplementedError(f"{self.name} has no token-level surface")
+
+    def release(self, seq) -> None:
+        raise NotImplementedError(f"{self.name} has no token-level surface")
+
+    async def probe(self, prompt):
+        """Score one prompt on this backend's model (and, where the
+        implementation supports it, prewarm caches so a follow-up
+        admission of the same prompt is cheap)."""
+        raise NotImplementedError(f"{self.name} has no probe surface")
+
+    # ---- request-level surface (mux path) -----------------------------
+    async def step(self, bucket) -> np.ndarray:
+        raise NotImplementedError(f"{self.name} has no request-level surface")
+
+    # ---- admission introspection --------------------------------------
+    def capacity(self) -> BackendCapacity:
+        raise NotImplementedError
+
+    def admission_cost(self, prompt, max_new_tokens: int, *,
+                       chunk_tokens: Optional[int] = None
+                       ) -> Tuple[int, int]:
+        """(pages a fresh admission allocates now, copy-on-write
+        headroom to hold back).  Conservative default: the full page
+        span with no sharing discount."""
+        cap = self.capacity()
+        p = int(np.asarray(prompt).reshape((-1,)).shape[0])
+        span = p + max_new_tokens
+        if chunk_tokens is not None and chunk_tokens < p:
+            span = chunk_tokens
+        return -(-span // cap.page_size), 0
+
+    def admissible(self, prompt, max_new_tokens: int, *,
+                   chunk_tokens: Optional[int] = None) -> bool:
+        need, extra = self.admission_cost(prompt, max_new_tokens,
+                                          chunk_tokens=chunk_tokens)
+        cap = self.capacity()
+        return need + cap.cow_headroom + extra <= cap.free_pages
+
+    def fits_ever(self, prompt_len: int, max_new_tokens: int) -> bool:
+        cap = self.capacity()
+        return (-(-(prompt_len + max_new_tokens) // cap.page_size)
+                <= cap.num_pages)
+
+    @property
+    def healthy(self) -> bool:
+        return True
+
+    # ---- warmup / reporting -------------------------------------------
+    def warmup(self, prompt_lens: Sequence[int],
+               chunk_tokens: Optional[int] = None) -> None:
+        """Compile serving shapes before traffic (control-plane; runs
+        before ``start``)."""
+
+    def stats(self) -> Dict[str, Any]:
+        return {"name": self.name, "healthy": self.healthy}
+
+    # ---- shared helpers ----------------------------------------------
+    def _note_queue_wait(self, seconds: float) -> None:
+        m = getattr(self, "_metrics", None)
+        if m is not None:
+            m.on_backend_queue_wait(self._model_id, seconds)
+
+    def _note_transfer(self, seconds: float) -> None:
+        m = getattr(self, "_metrics", None)
+        if m is not None:
+            m.on_transfer(self._model_id, seconds)
+
+
+class _ExecutorMixin:
+    """One named single-thread executor + the await/queue-wait plumbing
+    shared by the in-process backends.  Device calls to one executor
+    serialize (jit-donated caches must never race), while calls on
+    *different* executors — and different backends — overlap."""
+
+    def _init_executors(self, names: Sequence[str]) -> None:
+        self._executor_names = list(names)
+        self._pools: Dict[str, Optional[ThreadPoolExecutor]] = {
+            n: None for n in names}
+        self._inflight = 0
+
+    async def start(self) -> None:
+        for n in self._executor_names:
+            if self._pools[n] is None:
+                self._pools[n] = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix=f"{self.name}-{n}")
+
+    async def stop(self) -> None:
+        for n in self._executor_names:
+            pool, self._pools[n] = self._pools[n], None
+            if pool is not None:
+                pool.shutdown(wait=True)
+
+    async def _run(self, executor: str, fn, *args):
+        pool = self._pools[executor]
+        if pool is None:
+            raise RuntimeError(
+                f"backend {self.name!r} is not started: no {executor} "
+                f"executor (await backend.start(), or run it under a "
+                f"scheduler)")
+        loop = asyncio.get_running_loop()
+        t_submit = time.monotonic()
+
+        def wrapped():
+            self._note_queue_wait(time.monotonic() - t_submit)
+            return fn(*args)
+
+        self._inflight += 1
+        try:
+            return await loop.run_in_executor(pool, wrapped)
+        finally:
+            self._inflight -= 1
+
+
+def _engine_warmup(engine, prompt_lens: Sequence[int],
+                   chunk_tokens: Optional[int]) -> None:
+    """Compile one paged engine's serving shapes: prefill at each
+    padded prompt length (plus an identical twin so the traced-offset
+    tail path and the copy-on-write page copy compile when sharing is
+    on), the decode step, and — chunked mode — the fixed chunk shape.
+    Warmup pages always hand back; the logit cache is bypassed and
+    cleared so synthetic prompts neither skip the compiles nor leave
+    entries behind."""
+    cache_cap = engine._logit_cache_cap
+    engine._logit_cache_cap = 0
+    try:
+        if chunk_tokens is not None:
+            pl = min(2 * chunk_tokens, engine.scfg.max_len - 2)
+            if pl > chunk_tokens:
+                try:
+                    seq = engine.begin_prefill(np.zeros((pl,), np.int32),
+                                               max_new_tokens=2)
+                    try:
+                        while not engine.prefill_chunk(
+                                seq, chunk_tokens=chunk_tokens):
+                            pass
+                    finally:
+                        engine.pool.release(seq)
+                except OutOfPages:
+                    pass            # pool too small: compile on first use
+        for pl in sorted(set(
+                min(engine.pool.pages_for(p) * engine.pool.page_size,
+                    engine.scfg.max_len - 2)
+                for p in prompt_lens)):
+            if pl < 1:
+                continue
+            seq = engine.prefill_into_pages(np.zeros((pl,), np.int32),
+                                            max_new_tokens=2)
+            twin = None
+            if engine.pool.prefix_sharing:
+                try:
+                    twin = engine.prefill_into_pages(
+                        np.zeros((pl,), np.int32), max_new_tokens=2)
+                except OutOfPages:
+                    pass
+            try:
+                engine.decode_step_batch([seq])
+            except OutOfPages:
+                pass                # warmup COW found no free page
+            finally:
+                engine.pool.release(seq)
+                if twin is not None:
+                    engine.pool.release(twin)
+    finally:
+        engine._logit_cache_cap = cache_cap
+        engine._logit_cache.clear()
+        engine.logit_cache_hits = 0
+        engine.logit_cache_misses = 0
+
+
+class InProcessBackend(_ExecutorMixin, ModelBackend):
+    """One paged ``Engine`` behind the backend protocol.
+
+    Token-identical to the scheduler calling the engine directly: the
+    same jitted entry points run, serialized on one executor thread
+    exactly as the pre-backend worker serialized them."""
+
+    def __init__(self, engine, name: Optional[str] = None):
+        if engine.pool is None:   # not an assert: must survive python -O
+            raise ValueError(
+                "InProcessBackend needs a paged engine: call "
+                "Engine.init_paged(num_pages=..., page_size=...) first")
+        self.engine = engine
+        self.name = name or f"inproc:{engine.cfg.name}"
+        self._init_executors(["device"])
+
+    # ---- token-level ---------------------------------------------------
+    def begin(self, prompt, *, max_new_tokens, seed=None, temperature=None,
+              stop_tokens=()):
+        return self.engine.begin_prefill(
+            prompt, max_new_tokens=max_new_tokens, seed=seed,
+            temperature=temperature, stop_tokens=stop_tokens)
+
+    async def prefill_chunk(self, seq, *, chunk_tokens=None) -> bool:
+        return await self._run(
+            "device", lambda: self.engine.prefill_chunk(
+                seq, chunk_tokens=chunk_tokens))
+
+    async def decode_batch(self, seqs):
+        return await self._run("device", self.engine.decode_step_batch, seqs)
+
+    def release(self, seq) -> None:
+        if seq.pages:
+            self.engine.pool.release(seq)
+        seq.pages = []
+
+    async def probe(self, prompt):
+        return await self._run("device", self.engine.prewarm_logits, prompt)
+
+    # ---- admission -----------------------------------------------------
+    def capacity(self) -> BackendCapacity:
+        pool = self.engine.pool
+        return BackendCapacity(
+            decode_batch=self.engine.decode_batch, page_size=pool.page_size,
+            num_pages=pool.num_pages - 1, free_pages=pool.num_free,
+            cow_headroom=pool.cow_headroom, max_len=self.engine.scfg.max_len,
+            inflight=self._inflight)
+
+    def admission_cost(self, prompt, max_new_tokens, *, chunk_tokens=None):
+        return self.engine.admission_page_cost(prompt, max_new_tokens,
+                                               chunk_tokens=chunk_tokens)
+
+    def admissible(self, prompt, max_new_tokens, *, chunk_tokens=None):
+        ok = super().admissible(prompt, max_new_tokens,
+                                chunk_tokens=chunk_tokens)
+        if not ok and self.engine.shed_prewarmed():
+            # probe-prewarmed residents are a cache, not a commitment:
+            # under page pressure they yield to real admissions
+            ok = super().admissible(prompt, max_new_tokens,
+                                    chunk_tokens=chunk_tokens)
+        return ok
+
+    @property
+    def healthy(self) -> bool:
+        return not self.engine.caches_poisoned
+
+    # ---- warmup / reporting -------------------------------------------
+    def warmup(self, prompt_lens, chunk_tokens=None):
+        _engine_warmup(self.engine, prompt_lens, chunk_tokens)
+
+    def stats(self) -> Dict[str, Any]:
+        e = self.engine
+        return {
+            "name": self.name, "healthy": self.healthy,
+            "pool": e.pool.stats(),
+            "prefill_tokens_computed": e.prefill_tokens_computed,
+            "prefill_tokens_shared": e.prefill_tokens_shared,
+            "cow_copies": e.cow_count,
+            "reclaimed_pages": e.reclaimed_pages,
+            "logit_cache_hits": e.logit_cache_hits,
+            "logit_cache_misses": e.logit_cache_misses,
+        }
+
+
+class InProcessMuxBackend(_ExecutorMixin, ModelBackend):
+    """One mux-zoo model (``server.model_step(m, ...)``) behind the
+    backend protocol — the request-level counterpart of
+    ``InProcessBackend``.  ``capacity().decode_batch`` reports the
+    bucket capacity and ``inflight`` the queued device calls, which is
+    what makes the admission controller's service estimates
+    queue-depth-aware."""
+
+    def __init__(self, server, model_id: int, *, bucket_capacity: int,
+                 name: Optional[str] = None):
+        self.server = server
+        self.model_id = model_id
+        self.bucket_capacity = bucket_capacity
+        self.name = name or f"mux:{model_id}"
+        self._init_executors(["device"])
+
+    async def step(self, bucket) -> np.ndarray:
+        return await self._run(
+            "device",
+            lambda: np.asarray(self.server.model_step(self.model_id, bucket)))
+
+    async def probe(self, bucket):
+        return await self._run(
+            "device", lambda: np.asarray(self.server.probe_weights(bucket)))
+
+    def capacity(self) -> BackendCapacity:
+        return BackendCapacity(decode_batch=self.bucket_capacity,
+                               inflight=self._inflight)
+
+
+# ===========================================================================
+# Disaggregated prefill/decode
+# ===========================================================================
+
+class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
+    """Separate prefill and decode executors over separate engines.
+
+    The prefill engine owns a (typically smaller) staging pool; the
+    decode engine owns the serving pool.  ``prefill_chunk`` runs on the
+    prefill executor, ``decode_batch`` on the decode executor, and
+    because ``concurrent_prefill`` is True the scheduler leaves chunks
+    in flight while it keeps sweeping the decode batch — a long prompt
+    inflates nobody else's inter-token latency.
+
+    When a prefill seals, its KV pages move pools in two serialized
+    stages (the in-process stand-in for a NIC/ICI transfer):
+
+      gather   (prefill executor)  the sequence's pages are gathered
+               out of the prefill cache into a standalone package and
+               the prefill pages release immediately
+      scatter  (decode executor)   pages allocate in the decode pool
+               (OutOfPages here is plain backpressure — nothing is
+               held, the package retries after decode frees) and the
+               package scatters into the decode cache
+
+    A cancel that lands mid-transfer leaks nothing: before the gather
+    the sequence holds prefill pages (released by ``release``), after
+    it only the host-side package (dropped by ``release``), after the
+    scatter decode pages (released by ``release``).  Outputs are
+    token-identical to ``InProcessBackend``: the same jits run on the
+    same params, and the transfer copies raw stored KV (quantized
+    representation included) bit-for-bit."""
+
+    concurrent_prefill = True
+
+    def __init__(self, prefill_engine, decode_engine,
+                 name: Optional[str] = None):
+        import jax
+
+        for label, e in (("prefill", prefill_engine),
+                         ("decode", decode_engine)):
+            if e.pool is None:
+                raise ValueError(f"the {label} engine needs a paged pool: "
+                                 f"call Engine.init_paged first")
+        if (prefill_engine.pool.page_size != decode_engine.pool.page_size
+                or prefill_engine.scfg.max_len != decode_engine.scfg.max_len):
+            raise ValueError(
+                "prefill and decode engines must agree on page_size and "
+                "max_len (block tables move between them verbatim)")
+        self.prefill_engine = prefill_engine
+        self.decode_engine = decode_engine
+        self.name = name or f"disagg:{decode_engine.cfg.name}"
+        self._max_pages = decode_engine._max_pages
+        self.transfers = 0
+        self.transfer_pages = 0
+        self._init_executors(["prefill", "decode"])
+
+        from repro.models.attention import SCRATCH_PAGE
+        self._scratch = SCRATCH_PAGE
+        # fixed-width page rows keep both jits at ONE compiled shape;
+        # padding rows address the scratch page on both sides, so the
+        # only garbage ever copied lands where garbage already lives
+        self._gather = jax.jit(
+            lambda caches, pages: jax.tree.map(lambda x: x[:, pages], caches))
+        self._scatter = jax.jit(
+            lambda caches, pkg, dst: jax.tree.map(
+                lambda c, p: c.at[:, dst].set(p), caches, pkg),
+            donate_argnums=(0,))
+
+    @classmethod
+    def build(cls, cfg, params, scfg, *, num_pages: int, page_size: int = 64,
+              decode_batch: int = 8, prefill_pages: Optional[int] = None,
+              dtype=None, prefix_sharing: bool = True, logit_cache: int = 0,
+              name: Optional[str] = None) -> "DisaggregatedBackend":
+        """Construct both engines over shared params.  ``num_pages``
+        sizes the decode (serving) pool; ``prefill_pages`` the staging
+        pool (defaults to the same).  Prefix sharing and the logit
+        cache live on the prefill side — that is where prompts run;
+        the decode pool needs neither (the transfer copy already gives
+        every sequence private pages)."""
+        from repro.serving.engine import Engine
+        pre = Engine(cfg, params, scfg)
+        pre.init_paged(num_pages=prefill_pages or num_pages,
+                       page_size=page_size, decode_batch=decode_batch,
+                       dtype=dtype, prefix_sharing=prefix_sharing,
+                       logit_cache=logit_cache)
+        dec = Engine(cfg, params, scfg)
+        dec.init_paged(num_pages=num_pages, page_size=page_size,
+                       decode_batch=decode_batch, dtype=dtype,
+                       prefix_sharing=False)
+        return cls(pre, dec, name=name)
+
+    # ---- token-level ---------------------------------------------------
+    def begin(self, prompt, *, max_new_tokens, seed=None, temperature=None,
+              stop_tokens=()):
+        seq = self.prefill_engine.begin_prefill(
+            prompt, max_new_tokens=max_new_tokens, seed=seed,
+            temperature=temperature, stop_tokens=stop_tokens)
+        seq.owner_pool = self.prefill_engine.pool
+        return seq
+
+    async def prefill_chunk(self, seq, *, chunk_tokens=None) -> bool:
+        if not seq.prefill_done:
+            done = await self._run(
+                "prefill", lambda: self.prefill_engine.prefill_chunk(
+                    seq, chunk_tokens=chunk_tokens))
+            if not done:
+                return False
+        if getattr(seq, "owner_pool", None) is self.decode_engine.pool:
+            return True                  # already transferred (retry path)
+        t0 = time.monotonic()
+        if getattr(seq, "transfer_package", None) is None:
+            pkg, n = await self._run("prefill", self._gather_stage, seq)
+            self.prefill_engine.pool.release(seq)
+            seq.pages = []
+            seq.owner_pool = None
+            seq.transfer_package = (pkg, n)
+        # OutOfPages below is backpressure: the package stays on the
+        # sequence and the scheduler retries after decode frees
+        dst = await self._run("decode", self._scatter_stage,
+                              seq.transfer_package)
+        seq.pages = list(dst)
+        seq.block_table[:] = self.decode_engine.pool.block_table(
+            dst, self._max_pages)
+        seq.owner_pool = self.decode_engine.pool
+        seq.reclaimed_upto = 0          # fresh page list in the new pool
+        seq.transfer_package = None
+        self.transfers += 1
+        self.transfer_pages += len(dst)
+        self._note_transfer(time.monotonic() - t0)
+        return True
+
+    def _gather_stage(self, seq):
+        import jax
+        import jax.numpy as jnp
+        live = [p for p in seq.pages if p is not None]
+        row = np.full((self._max_pages,), self._scratch, np.int32)
+        row[:len(live)] = live
+        pkg = self._gather(self.prefill_engine._paged_caches,
+                           jnp.asarray(row))
+        jax.block_until_ready(jax.tree.leaves(pkg)[0])
+        return pkg, len(live)
+
+    def _scatter_stage(self, package):
+        import jax
+        import jax.numpy as jnp
+        pkg, n = package
+        dst = self.decode_engine.pool.alloc(n)       # OutOfPages: no-op
+        row = np.full((self._max_pages,), self._scratch, np.int32)
+        row[:n] = dst
+        try:
+            self.decode_engine._paged_caches = self._scatter(
+                self.decode_engine._paged_caches, pkg, jnp.asarray(row))
+            jax.block_until_ready(
+                jax.tree.leaves(self.decode_engine._paged_caches)[0])
+        except Exception:
+            self.decode_engine._caches_poisoned = True
+            self.decode_engine.pool.decref(dst)      # unowned: must not leak
+            raise
+        return dst
+
+    async def decode_batch(self, seqs):
+        return await self._run("decode",
+                               self.decode_engine.decode_step_batch, seqs)
+
+    def release(self, seq) -> None:
+        seq.transfer_package = None
+        pool = getattr(seq, "owner_pool", None)
+        if pool is not None and seq.pages:
+            pool.release(seq)
+        seq.pages = []
+        seq.owner_pool = None
+
+    async def probe(self, prompt):
+        return await self._run("prefill",
+                               self.prefill_engine.prewarm_logits, prompt)
+
+    # ---- admission -----------------------------------------------------
+    def capacity(self) -> BackendCapacity:
+        pool = self.decode_engine.pool
+        return BackendCapacity(
+            decode_batch=self.decode_engine.decode_batch,
+            page_size=pool.page_size, num_pages=pool.num_pages - 1,
+            free_pages=pool.num_free, cow_headroom=pool.cow_headroom,
+            max_len=self.decode_engine.scfg.max_len, inflight=self._inflight)
+
+    def admission_cost(self, prompt, max_new_tokens, *, chunk_tokens=None):
+        # admission gates on the *prefill* (staging) pool: the decode
+        # pool is reached only through the transfer, whose OutOfPages
+        # is ordinary backpressure against decode frees
+        return self.prefill_engine.admission_page_cost(
+            prompt, max_new_tokens, chunk_tokens=chunk_tokens)
+
+    def admissible(self, prompt, max_new_tokens, *, chunk_tokens=None):
+        need, extra = self.admission_cost(prompt, max_new_tokens,
+                                          chunk_tokens=chunk_tokens)
+        pool = self.prefill_engine.pool
+        ok = need + pool.cow_headroom + extra <= pool.num_free
+        if not ok and self.prefill_engine.shed_prewarmed():
+            ok = need + pool.cow_headroom + extra <= pool.num_free
+        return ok
+
+    def fits_ever(self, prompt_len, max_new_tokens):
+        need = self.decode_engine.pool.pages_for(prompt_len + max_new_tokens)
+        return (need <= self.decode_engine.pool.num_pages - 1
+                and need <= self.prefill_engine.pool.num_pages - 1)
+
+    @property
+    def healthy(self) -> bool:
+        return not (self.prefill_engine.caches_poisoned
+                    or self.decode_engine.caches_poisoned)
+
+    # ---- warmup / reporting -------------------------------------------
+    def warmup(self, prompt_lens, chunk_tokens=None):
+        """Compile prefill shapes on the prefill engine, then run one
+        tiny sequence through the full begin -> chunk -> transfer ->
+        decode pipeline synchronously so the gather/scatter jits and
+        the decode step compile before traffic."""
+        _engine_warmup(self.prefill_engine, prompt_lens, chunk_tokens)
+        try:
+            seq = self.begin(np.zeros((1,), np.int32), max_new_tokens=2)
+            try:
+                while not self.prefill_engine.prefill_chunk(
+                        seq, chunk_tokens=chunk_tokens):
+                    pass
+                seq.transfer_package = self._gather_stage(seq)
+                self.prefill_engine.pool.release(seq)
+                seq.pages, seq.owner_pool = [], None
+                dst = self._scatter_stage(seq.transfer_package)
+                seq.pages = list(dst)
+                seq.block_table[:] = self.decode_engine.pool.block_table(
+                    dst, self._max_pages)
+                seq.owner_pool = self.decode_engine.pool
+                seq.transfer_package = None
+                self.decode_engine.decode_step_batch([seq])
+            finally:
+                self.release(seq)
+        except OutOfPages:
+            pass                        # pool too small: first use compiles
+
+    def stats(self) -> Dict[str, Any]:
+        pre, dec = self.prefill_engine, self.decode_engine
+        return {
+            "name": self.name, "healthy": self.healthy,
+            "pool": dec.pool.stats(),
+            "prefill_pool": pre.pool.stats(),
+            "prefill_tokens_computed": pre.prefill_tokens_computed,
+            "prefill_tokens_shared": pre.prefill_tokens_shared,
+            "cow_copies": pre.cow_count + dec.cow_count,
+            "reclaimed_pages": pre.reclaimed_pages + dec.reclaimed_pages,
+            "logit_cache_hits": pre.logit_cache_hits,
+            "logit_cache_misses": pre.logit_cache_misses,
+            "transfers": self.transfers,
+            "transfer_pages": self.transfer_pages,
+        }
+
+
+# ===========================================================================
+# Remote stub: wire schema over an in-process duplex channel
+# ===========================================================================
+
+WIRE_VERSION = 1
+
+#: wire error type -> exception class raised client-side
+_WIRE_ERRORS = {
+    "OutOfPages": OutOfPages,
+    "ValueError": ValueError,
+    "RuntimeError": RuntimeError,
+}
+
+
+def wire_encode(msg: Dict[str, Any]) -> str:
+    """Serialize one message.  Everything on the wire is JSON — the
+    assertion that no live object crosses the seam."""
+    def default(o):
+        if isinstance(o, np.integer):
+            return int(o)
+        if isinstance(o, np.floating):
+            return float(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        raise TypeError(f"not wire-serializable: {type(o)!r}")
+    return json.dumps(msg, default=default)
+
+
+def wire_decode(raw: str) -> Dict[str, Any]:
+    return json.loads(raw)
+
+
+class DuplexChannel:
+    """In-process stand-in for a bidirectional RPC transport: two
+    queues of wire-encoded strings.  A real deployment replaces this
+    with a socket/mesh transport; nothing else changes."""
+
+    def __init__(self):
+        self.to_server: asyncio.Queue = asyncio.Queue()
+        self.to_client: asyncio.Queue = asyncio.Queue()
+
+
+@dataclasses.dataclass
+class RemoteSequence:
+    """Client-side mirror of one remote sequence — exactly the fields
+    the token-level scheduler reads, kept in sync from responses."""
+    sid: int
+    prompt: np.ndarray
+    prompt_len: int
+    max_new_tokens: int
+    seed: Optional[int]
+    temperature: Optional[float]
+    stop_tokens: Tuple[int, ...]
+    prefill_pos: int = 0
+    shared_prefix_len: int = 0
+    prefill_done: bool = False
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0
+    done: bool = False
+    finish_reason: str = "length"
+    begun: bool = False                  # server-side twin exists
+    pages: List[int] = dataclasses.field(default_factory=list)  # unused
+
+    def apply(self, state: Dict[str, Any]) -> None:
+        for k in ("prefill_pos", "shared_prefix_len", "prefill_done",
+                  "pos", "done", "finish_reason"):
+            if k in state:
+                setattr(self, k, state[k])
+        if "tokens" in state:
+            self.tokens = [int(t) for t in state["tokens"]]
+        if "new_token" in state:
+            self.tokens.append(int(state["new_token"]))
+
+
+class BackendServer:
+    """Server half of the stub: drives any inner ``ModelBackend`` from
+    wire messages.  One request at a time, in arrival order — the
+    stub trades concurrency for a dead-simple protocol; the disagg
+    backend is where concurrency lives."""
+
+    def __init__(self, inner: ModelBackend, channel: DuplexChannel):
+        self.inner = inner
+        self.channel = channel
+        self._seqs: Dict[int, Any] = {}
+
+    def _state_of(self, seq, *, tokens: bool = False) -> Dict[str, Any]:
+        st = {"prefill_pos": int(seq.prefill_pos),
+              "shared_prefix_len": int(seq.shared_prefix_len),
+              "prefill_done": bool(seq.prefill_done),
+              "pos": int(seq.pos), "done": bool(seq.done),
+              "finish_reason": str(seq.finish_reason)}
+        if tokens:
+            st["tokens"] = [int(t) for t in seq.tokens]
+        return st
+
+    async def serve(self) -> None:
+        while True:
+            msg = wire_decode(await self.channel.to_server.get())
+            if msg["op"] == "shutdown":
+                for seq in self._seqs.values():
+                    self.inner.release(seq)     # disconnect reclaims
+                self._seqs.clear()
+                self._reply(msg, {})
+                return
+            try:
+                self._reply(msg, await self._dispatch(msg))
+            except Exception as exc:            # noqa: BLE001 — wire it
+                err = {"type": type(exc).__name__, "msg": str(exc)}
+                cow = getattr(exc, "cow_seq", None)
+                if cow is not None:
+                    err["cow_sid"] = next(
+                        (sid for sid, s in self._seqs.items() if s is cow),
+                        None)
+                self._reply(msg, None, err=err)
+
+    def _reply(self, msg, ok, err=None) -> None:
+        reply = {"v": WIRE_VERSION, "id": msg["id"],
+                 "healthy": self.inner.healthy,
+                 "cap": dataclasses.asdict(self.inner.capacity())}
+        if err is None:
+            reply["ok"] = ok
+        else:
+            reply["err"] = err
+        self.channel.to_client.put_nowait(wire_encode(reply))
+
+    async def _dispatch(self, msg) -> Dict[str, Any]:
+        op, body = msg["op"], msg.get("body", {})
+        if op == "hello":
+            cap = self.inner.capacity()
+            return {"v": WIRE_VERSION, "page_size": cap.page_size,
+                    "num_pages": cap.num_pages,
+                    "decode_batch": cap.decode_batch,
+                    "max_len": cap.max_len}
+        if op == "prefill_chunk":
+            sid = body["sid"]
+            seq = self._seqs.get(sid)
+            if seq is None:
+                b = body.get("begin")
+                if b is None:
+                    raise ValueError(f"unknown sequence {sid} and no begin "
+                                     f"payload (released, or begin failed)")
+                seq = self.inner.begin(
+                    np.asarray(b["prompt"], np.int32),
+                    max_new_tokens=b["max_new_tokens"], seed=b["seed"],
+                    temperature=b["temperature"],
+                    stop_tokens=tuple(b["stop_tokens"]))
+                self._seqs[sid] = seq
+            done = await self.inner.prefill_chunk(
+                seq, chunk_tokens=body["chunk_tokens"])
+            return {"done": bool(done),
+                    "state": self._state_of(seq, tokens=done)}
+        if op == "decode":
+            seqs = [self._seqs[sid] for sid in body["sids"]]
+            await self.inner.decode_batch(seqs)
+            return {"rows": [dict(self._state_of(s),
+                                  new_token=int(s.tokens[-1]))
+                             for s in seqs]}
+        if op == "release":
+            seq = self._seqs.pop(body["sid"], None)
+            if seq is not None:
+                self.inner.release(seq)
+            return {}
+        raise ValueError(f"unknown wire op {op!r}")
+
+
+class RemoteStubBackend(ModelBackend):
+    """Client half of the stub: the scheduler-facing backend whose
+    every data-plane call crosses ``DuplexChannel`` as JSON.
+
+    The mirror sequences it hands the scheduler are updated purely
+    from wire responses — nothing on this side touches the pool — so
+    swapping the channel for a real transport (and the server for a
+    per-slice process) is a transport change, not a scheduler change.
+    Admission is conservative: the client budgets the full page span
+    from the handshake geometry (no sharing discount); a stale free
+    count simply surfaces as OutOfPages backpressure, which the
+    scheduler already retries.  ``warmup`` and ``stats`` are
+    control-plane and proxy the inner backend directly."""
+
+    def __init__(self, inner: ModelBackend, name: Optional[str] = None):
+        self.inner = inner
+        self.name = name or f"remote:{inner.name}"
+        self.channel = DuplexChannel()
+        self._server = BackendServer(inner, self.channel)
+        self._server_task: Optional[asyncio.Task] = None
+        self._reader_task: Optional[asyncio.Task] = None
+        self._pending: Dict[int, asyncio.Future] = {}
+        self._ids = itertools.count()
+        self._sids = itertools.count()
+        self._mirrors: Dict[int, RemoteSequence] = {}
+        self._cap = inner.capacity()        # refreshed from every reply
+        self._healthy = True
+        self._geom: Dict[str, int] = {}
+        self.messages_sent = 0
+
+    # ---- lifecycle -----------------------------------------------------
+    async def start(self) -> None:
+        await self.inner.start()
+        self._server_task = asyncio.ensure_future(self._server.serve())
+        self._reader_task = asyncio.ensure_future(self._read_loop())
+        self._geom = await self._call("hello")
+        if self._geom["v"] != WIRE_VERSION:
+            raise RuntimeError(f"wire version mismatch: {self._geom['v']}")
+
+    async def stop(self) -> None:
+        if self._server_task is not None:
+            try:
+                await self._call("shutdown")
+            finally:
+                await self._server_task
+                self._server_task = None
+                if self._reader_task is not None:
+                    self._reader_task.cancel()
+                    try:
+                        await self._reader_task
+                    except asyncio.CancelledError:
+                        pass
+                    self._reader_task = None
+        await self.inner.stop()
+
+    async def _read_loop(self) -> None:
+        while True:
+            msg = wire_decode(await self.channel.to_client.get())
+            self._healthy = bool(msg.get("healthy", True))
+            if "cap" in msg:
+                self._cap = BackendCapacity(**msg["cap"])
+            fut = self._pending.pop(msg["id"], None)
+            if fut is not None and not fut.done():
+                fut.set_result(msg)     # fire-and-forget replies drop here
+
+    async def _call(self, op: str, body: Optional[Dict] = None
+                    ) -> Dict[str, Any]:
+        if self._server_task is None:
+            raise RuntimeError(
+                f"backend {self.name!r} is not started: no channel")
+        mid = next(self._ids)
+        fut = asyncio.get_running_loop().create_future()
+        self._pending[mid] = fut
+        self.messages_sent += 1
+        self.channel.to_server.put_nowait(
+            wire_encode({"v": WIRE_VERSION, "id": mid, "op": op,
+                         "body": body or {}}))
+        msg = await fut
+        if "err" in msg:
+            err = msg["err"]
+            exc = _WIRE_ERRORS.get(err["type"], RuntimeError)(err["msg"])
+            cow_sid = err.get("cow_sid")
+            if cow_sid is not None:
+                exc.cow_seq = self._mirrors.get(cow_sid)
+            raise exc
+        return msg["ok"]
+
+    # ---- token-level ---------------------------------------------------
+    def begin(self, prompt, *, max_new_tokens, seed=None, temperature=None,
+              stop_tokens=()):
+        prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
+        p = len(prompt_np)
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1 (prefill always samples the "
+                f"first token), got {max_new_tokens}")
+        if p < 1:
+            raise ValueError("prompt must hold at least one token")
+        max_len = self._geom.get("max_len") or self._cap.max_len
+        if max_len and p + max_new_tokens > max_len:
+            raise ValueError(
+                f"prompt length {p} + max_new_tokens {max_new_tokens} "
+                f"exceeds the remote engine's cache capacity "
+                f"max_len={max_len}")
+        seq = RemoteSequence(
+            sid=next(self._sids), prompt=prompt_np, prompt_len=p,
+            max_new_tokens=max_new_tokens, seed=seed, temperature=temperature,
+            stop_tokens=tuple(int(t) for t in stop_tokens))
+        self._mirrors[seq.sid] = seq
+        return seq
+
+    async def prefill_chunk(self, seq, *, chunk_tokens=None) -> bool:
+        body: Dict[str, Any] = {"sid": seq.sid, "chunk_tokens": chunk_tokens}
+        if not seq.begun:
+            body["begin"] = {"prompt": seq.prompt.tolist(),
+                             "max_new_tokens": seq.max_new_tokens,
+                             "seed": seq.seed,
+                             "temperature": seq.temperature,
+                             "stop_tokens": list(seq.stop_tokens)}
+            # mark begun BEFORE awaiting: an error reply (e.g.
+            # OutOfPages backpressure) may leave the server-side twin
+            # registered and holding shared-prefix increfs, so the
+            # later release() must send the release op regardless —
+            # the server drops unknown sids leniently
+            seq.begun = True
+        ok = await self._call("prefill_chunk", body)
+        seq.apply(ok["state"])
+        return ok["done"]
+
+    async def decode_batch(self, seqs):
+        ok = await self._call("decode", {"sids": [s.sid for s in seqs]})
+        out = []
+        for seq, row in zip(seqs, ok["rows"]):
+            seq.apply(row)
+            out.append(seq.tokens[-1])
+        return np.asarray(out, np.int32)
+
+    def release(self, seq) -> None:
+        self._mirrors.pop(seq.sid, None)
+        if self._server_task is None or not seq.begun:
+            return              # never reached the server / it reclaimed
+        seq.begun = False
+        mid = next(self._ids)   # fire-and-forget: reply is dropped
+        self.messages_sent += 1
+        self.channel.to_server.put_nowait(
+            wire_encode({"v": WIRE_VERSION, "id": mid, "op": "release",
+                         "body": {"sid": seq.sid}}))
+
+    # ---- admission (conservative, from the cached wire snapshot) -------
+    def capacity(self) -> BackendCapacity:
+        return self._cap
+
+    @property
+    def healthy(self) -> bool:
+        return self._healthy
+
+    # ---- control plane -------------------------------------------------
+    def warmup(self, prompt_lens, chunk_tokens=None):
+        self.inner.warmup(prompt_lens, chunk_tokens)
+
+    def stats(self) -> Dict[str, Any]:
+        s = dict(self.inner.stats())
+        s.update({"name": self.name, "wire_messages": self.messages_sent})
+        return s

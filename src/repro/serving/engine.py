@@ -22,6 +22,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -31,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
+from repro.models.attention import SCRATCH_PAGE
 from repro.serving.kv_cache import OutOfPages, PagePool, PagedSequence
 from repro.sharding.partition import axis_rules
 
@@ -68,6 +70,13 @@ class Engine:
             self._prefill = jax.jit(prefill_fn)
             self._decode = jax.jit(decode_fn, donate_argnums=(2,))
 
+        # serializes the donating paged entry points (prefill_chunk /
+        # decode_step_batch): both reassign self._paged_caches through
+        # donating jits, so two threads — e.g. a backend executor and
+        # a MuxServer.probe prewarm on the caller thread — must never
+        # overlap on one engine.  RLock: prefill_into_pages loops
+        # prefill_chunk under one acquisition per chunk.
+        self._device_lock = threading.RLock()
         # paged state (populated by init_paged)
         self.pool: Optional[PagePool] = None
         self._paged_caches = None
@@ -94,6 +103,16 @@ class Engine:
         self._logit_cache_cap = 0
         self.logit_cache_hits = 0
         self.logit_cache_misses = 0
+        # probe-path prewarm residents (prompt key -> held sequence):
+        # the mux probe keeps a scored prompt's pages mapped so the
+        # follow-up admission is a zero-FLOP logit-cache hit
+        self._prewarmed: "collections.OrderedDict[bytes, PagedSequence]" = \
+            collections.OrderedDict()
+        self._prewarm_cap = 0
+        # window/chunked span reclaim (None = a full-span layer exists)
+        self._layer_spans: Optional[List[Tuple[str, int]]] = None
+        self._span_reclaim = True
+        self.reclaimed_pages = 0
 
     @property
     def caches_poisoned(self) -> bool:
@@ -173,7 +192,8 @@ class Engine:
     def init_paged(self, *, num_pages: int, page_size: int = 64,
                    decode_batch: int = 8, dtype=None,
                    prefix_sharing: bool = True,
-                   logit_cache: int = 0) -> PagePool:
+                   logit_cache: int = 0,
+                   span_reclaim: bool = True) -> PagePool:
         """Allocate the paged KV pool and compile the paged entry
         points.  ``dtype=None`` honors ``cfg.kv_cache_dtype`` (int8
         pools store quantized pages, dequantized in-kernel).  The pool
@@ -183,7 +203,11 @@ class Engine:
         private pages — the pre-sharing baseline).  ``logit_cache`` is
         the LRU capacity of the cross-request logit cache (0 = off): a
         repeat prompt whose pages are all still resident skips even the
-        final-token tail prefill and samples from the cached logits."""
+        final-token tail prefill and samples from the cached logits.
+        ``span_reclaim=False`` disables decode-time freeing of pages
+        that have fallen wholly below every layer's attention span (the
+        window/chunked memory reclaim; a no-op anyway when any layer
+        attends the full context)."""
         if self.cfg.num_codebooks:
             raise NotImplementedError(
                 "paged decode supports single-stream token LMs")
@@ -199,6 +223,11 @@ class Engine:
         self._logit_cache_cap = int(logit_cache)
         self.logit_cache_hits = 0
         self.logit_cache_misses = 0
+        self._prewarmed = collections.OrderedDict()
+        self._prewarm_cap = max(1, min(4, int(logit_cache)))
+        self._span_reclaim = span_reclaim
+        self._layer_spans = self._banded_spans()
+        self.reclaimed_pages = 0
         cfg = self.cfg
         self._paged_caches = tf.init_caches(cfg, 0, 0, dtype,
                                             num_pages=num_pages,
@@ -244,6 +273,103 @@ class Engine:
         """Decode-batch capacity of the paged path (0 before
         init_paged) — part of the engine's paged-serving contract."""
         return self._decode_batch
+
+    # ---- window/chunked span reclaim ----------------------------------
+    def _banded_spans(self) -> Optional[List[Tuple[str, int]]]:
+        """(kind, span) per pattern layer when EVERY layer is banded
+        (swa/chunked); None when any layer attends the full context —
+        the block tables are shared across layers, so a page is only
+        freeable once no layer can ever look at it again."""
+        spans: List[Tuple[str, int]] = []
+        for spec in self.cfg.pattern:
+            if (spec.mixer == "attn" and spec.attn_kind == "swa"
+                    and self.cfg.window):
+                spans.append(("swa", int(self.cfg.window)))
+            elif (spec.mixer == "attn" and spec.attn_kind == "chunked"
+                    and self.cfg.chunk):
+                spans.append(("chunked", int(self.cfg.chunk)))
+            else:
+                return None
+        return spans
+
+    def _reclaim_out_of_span(self, seq: PagedSequence) -> None:
+        """Decref pages wholly below every layer's attention span.
+
+        At decode position ``pos`` an swa layer attends kv positions
+        > pos - window and a chunked layer attends >= its chunk floor;
+        both lower bounds are non-decreasing in pos, so once a page's
+        last token falls below the minimum bound across layers no
+        future query can see it.  The freed slot's block-table entry
+        points at the scratch page (gathers read garbage there, the
+        mask hides it) and the page returns to the pool — the paged
+        path regains the ring path's sub-linear window memory."""
+        if self._layer_spans is None or not self._span_reclaim:
+            return
+        pos = seq.pos                  # next insert/query position
+        lo = None
+        for kind, span in self._layer_spans:
+            l = pos - span + 1 if kind == "swa" else (pos // span) * span
+            lo = l if lo is None else min(lo, l)
+        if lo is None or lo <= 0:
+            return
+        freeable = min(lo // self.pool.page_size, len(seq.pages))
+        if freeable <= seq.reclaimed_upto:
+            return                     # nothing new fell out of span
+        freed: List[int] = []
+        # resume at the watermark: slots below it are already None, so
+        # the per-token scan stays O(newly freeable), not O(pages so
+        # far) — a long banded generation must not go quadratic here
+        for idx in range(seq.reclaimed_upto, freeable):
+            pg = seq.pages[idx]
+            if pg is None:
+                continue               # already reclaimed
+            seq.prefix_keys = self.pool.disown_prefix(seq.prefix_keys, pg)
+            seq.pages[idx] = None
+            seq.block_table[idx] = SCRATCH_PAGE
+            freed.append(pg)
+        seq.reclaimed_upto = freeable
+        if freed:
+            self.pool.decref(freed)
+            self.reclaimed_pages += len(freed)
+
+    # ---- probe-path prewarm -------------------------------------------
+    def prewarm_logits(self, prompt) -> Optional[np.ndarray]:
+        """Probe-path prewarm (the paper's probe-many-models pattern
+        hits the same prompt N times): run — or reuse — the prompt's
+        prefill, keep its pages resident in a small LRU of held
+        sequences, and cache the final-token logits row.  A follow-up
+        admission of the same prompt then takes the zero-FLOP
+        logit-cache fast path.  Returns the logits row; best-effort —
+        a full pool or an unpaged/uncached engine returns None."""
+        if self.pool is None or self._logit_cache_cap <= 0:
+            return None
+        prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
+        if len(prompt_np) < 1:
+            return None
+        key = self._prompt_key(prompt_np)
+        if key in self._prewarmed:
+            self._prewarmed.move_to_end(key)
+            return self._logit_cache_get(key)
+        try:
+            seq = self.prefill_into_pages(prompt_np, max_new_tokens=1)
+        except (OutOfPages, ValueError):
+            return None                # probe must never fail admission
+        self._prewarmed[key] = seq
+        while len(self._prewarmed) > self._prewarm_cap:
+            _, old = self._prewarmed.popitem(last=False)
+            self.pool.release(old)
+        return self._logit_cache_get(key)
+
+    def shed_prewarmed(self) -> int:
+        """Release every probe-prewarmed resident (admission calls
+        this under page pressure — prewarmed pages are a cache, real
+        requests outrank them).  Returns the number shed."""
+        shed = 0
+        while self._prewarmed:
+            _, old = self._prewarmed.popitem(last=False)
+            self.pool.release(old)
+            shed += 1
+        return shed
 
     def _shared_prefix(self, prompt_np: np.ndarray,
                        p: int) -> Tuple[List[int], int, int]:
@@ -421,6 +547,11 @@ class Engine:
         *before* any device work with the sequence unchanged — callers
         treat it as backpressure and retry after frees.
         """
+        with self._device_lock:
+            return self._prefill_chunk_locked(seq, chunk_tokens=chunk_tokens)
+
+    def _prefill_chunk_locked(self, seq: PagedSequence, *,
+                              chunk_tokens: Optional[int] = None) -> bool:
         if seq.prefill_done:
             return True
         pool = self.pool
@@ -529,6 +660,11 @@ class Engine:
         Rows beyond len(seqs) are inactive: they write to the scratch
         page and their samples are discarded.  Advances each sequence
         in place; returns the sampled tokens (len(seqs),)."""
+        with self._device_lock:
+            return self._decode_step_batch_locked(seqs)
+
+    def _decode_step_batch_locked(self, seqs: Sequence[PagedSequence]
+                                  ) -> np.ndarray:
         if self.pool is None:
             raise RuntimeError("no paged KV pool: call init_paged() first")
         cap = self._decode_batch
@@ -572,6 +708,7 @@ class Engine:
             seq.pos += 1
             seq.last_token = int(nxt[i])
             seq.tokens.append(int(nxt[i]))
+            self._reclaim_out_of_span(seq)
         return nxt[:len(seqs)]
 
     def _cow_page(self, seq: PagedSequence, idx: int) -> None:

@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import heapq
+import threading
 from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -222,6 +223,11 @@ class PagePool:
                  prefix_sharing: bool = True):
         self.cfg = PagedCacheConfig(num_pages=num_pages, page_size=page_size)
         self.prefix_sharing = prefix_sharing
+        # mutating ops take this lock: a disaggregated backend allocates
+        # from its decode executor thread (KV transfer) while the event
+        # loop releases retiring sequences — heap/refcount updates must
+        # not interleave.  RLock: release() nests into decref().
+        self._lock = threading.RLock()
         # min-heap: lowest-id-first hand-out stays deterministic across
         # churn at O(log F) per page instead of a sort per free()
         self._free: List[int] = list(range(SCRATCH_PAGE + 1, num_pages))
@@ -278,18 +284,20 @@ class PagePool:
 
     # ---- alloc / refcounts --------------------------------------------
     def alloc(self, n: int) -> List[int]:
-        if n > len(self._free):
-            raise OutOfPages(
-                f"KV page pool exhausted: request needs {n} pages but only "
-                f"{len(self._free)} of {self.num_pages - 1} allocatable "
-                f"pages are free ({self.pages_in_use} held by in-flight "
-                f"requests); raise num_pages, shrink max_new_tokens, or "
-                f"wait for running requests to finish")
-        pages = [heapq.heappop(self._free) for _ in range(n)]
-        for pg in pages:
-            self._ref[pg] = 1
-        self.peak_in_use = max(self.peak_in_use, len(self._ref))
-        return pages
+        with self._lock:
+            if n > len(self._free):
+                raise OutOfPages(
+                    f"KV page pool exhausted: request needs {n} pages but "
+                    f"only {len(self._free)} of {self.num_pages - 1} "
+                    f"allocatable pages are free ({self.pages_in_use} held "
+                    f"by in-flight requests); raise num_pages, shrink "
+                    f"max_new_tokens, or wait for running requests to "
+                    f"finish")
+            pages = [heapq.heappop(self._free) for _ in range(n)]
+            for pg in pages:
+                self._ref[pg] = 1
+            self.peak_in_use = max(self.peak_in_use, len(self._ref))
+            return pages
 
     def refcount(self, page: int) -> int:
         """Current reference count (0 for a free page)."""
@@ -298,11 +306,13 @@ class PagePool:
     def incref(self, pages: Sequence[int]) -> None:
         """Add one reference per listed page (prefix sharing: a new
         request maps a resident's pages).  All pages must be held."""
-        bad = [pg for pg in pages if int(pg) not in self._ref]
-        if bad:
-            raise ValueError(f"incref of free/foreign pages {sorted(bad)}")
-        for pg in pages:
-            self._ref[int(pg)] += 1
+        with self._lock:
+            bad = [pg for pg in pages if int(pg) not in self._ref]
+            if bad:
+                raise ValueError(
+                    f"incref of free/foreign pages {sorted(bad)}")
+            for pg in pages:
+                self._ref[int(pg)] += 1
 
     def decref(self, pages: Sequence[int]) -> None:
         """Drop one reference per listed page; a page reaching zero
@@ -311,22 +321,24 @@ class PagePool:
         page).  ``decref([])`` is a no-op by contract — retiring an
         empty sequence must succeed.  Duplicates in one call and
         free/foreign pages are rejected before anything mutates."""
-        uniq = {int(pg) for pg in pages}
-        bad = uniq - set(self._ref)
-        if bad or len(uniq) != len(pages):
-            raise ValueError(
-                f"double free / foreign pages {sorted(bad) or list(pages)}")
-        for pg in pages:
-            pg = int(pg)
-            self._ref[pg] -= 1
-            if self._ref[pg] == 0:
-                del self._ref[pg]
-                self._index.drop_page(pg)
-                self._cow_risk.discard(pg)
-                heapq.heappush(self._free, pg)
-            elif self._ref[pg] == 1:
-                # exclusive again: no copy-on-write can be pending
-                self._cow_risk.discard(pg)
+        with self._lock:
+            uniq = {int(pg) for pg in pages}
+            bad = uniq - set(self._ref)
+            if bad or len(uniq) != len(pages):
+                raise ValueError(
+                    f"double free / foreign pages "
+                    f"{sorted(bad) or list(pages)}")
+            for pg in pages:
+                pg = int(pg)
+                self._ref[pg] -= 1
+                if self._ref[pg] == 0:
+                    del self._ref[pg]
+                    self._index.drop_page(pg)
+                    self._cow_risk.discard(pg)
+                    heapq.heappush(self._free, pg)
+                elif self._ref[pg] == 1:
+                    # exclusive again: no copy-on-write can be pending
+                    self._cow_risk.discard(pg)
 
     def free(self, pages: Sequence[int]) -> None:
         """Decref-to-zero compatibility alias: with refcounts, "free"
@@ -337,8 +349,9 @@ class PagePool:
     def mark_cow_risk(self, page: int) -> None:
         """Flag a shared page some holder may still write (admission
         reserves ``cow_headroom`` free pages against these)."""
-        if self.refcount(page) > 1:
-            self._cow_risk.add(int(page))
+        with self._lock:
+            if self.refcount(page) > 1:
+                self._cow_risk.add(int(page))
 
     # ---- prefix sharing -----------------------------------------------
     def lookup_prefix(self, tokens) -> Tuple[List[int], int]:
@@ -346,7 +359,8 @@ class PagePool:
         (pages, matched_len).  Pure — call ``incref`` to map them."""
         if not self.prefix_sharing:
             return [], 0
-        return self._index.lookup(tokens)
+        with self._lock:
+            return self._index.lookup(tokens)
 
     def register_prefix(self, tokens, pages: Sequence[int]) -> List[bytes]:
         """Index a now-resident sequence's prompt chunks so later
@@ -354,23 +368,30 @@ class PagePool:
         the sequence; ``release`` hands them back)."""
         if not self.prefix_sharing:
             return []
-        return self._index.register(tokens, pages)
+        with self._lock:
+            return self._index.register(tokens, pages)
 
     def unregister_prefix(self, keys: Sequence[bytes]) -> None:
-        self._index.unregister(keys)
+        with self._lock:
+            self._index.unregister(keys)
 
     def disown_prefix(self, keys: Sequence[bytes], page: int) -> List[bytes]:
-        return self._index.disown(keys, page)
+        with self._lock:
+            return self._index.disown(keys, page)
 
     def release(self, seq: "PagedSequence") -> None:
         """Retire one sequence: unregister its prefix-index claims,
         then decref its pages.  Pages still shared by other residents
-        survive; exclusive ones return to the free list."""
-        keys = getattr(seq, "prefix_keys", None)
-        if keys:
-            self._index.unregister(keys)
-            seq.prefix_keys = []
-        self.decref(seq.pages)
+        survive; exclusive ones return to the free list.  ``None``
+        entries (pages already reclaimed out of a banded layer's
+        attention span) are skipped — the sequence no longer holds
+        them."""
+        with self._lock:
+            keys = getattr(seq, "prefix_keys", None)
+            if keys:
+                self._index.unregister(keys)
+                seq.prefix_keys = []
+            self.decref([pg for pg in seq.pages if pg is not None])
 
     # ---- rendering / stats --------------------------------------------
     def block_table(self, pages: Sequence[int], max_pages: int) -> np.ndarray:
@@ -418,7 +439,7 @@ class PagedSequence:
     ``stop_tokens`` ends generation early; ``temperature`` overrides
     the engine's sampling temperature for this request only.
     """
-    pages: List[int]
+    pages: List[Optional[int]]       # None = reclaimed out-of-span slot
     block_table: np.ndarray          # (max_pages,) int32, scratch-padded
     prompt_len: int
     pos: int
@@ -439,6 +460,9 @@ class PagedSequence:
     insert_from: int = 0                  # writes below this go to scratch
     stop_tokens: FrozenSet[int] = frozenset()
     temperature: Optional[float] = None   # None = engine default
+    reclaimed_upto: int = 0               # page slots below this index were
+    #   span-reclaimed (None in ``pages``); the decode-time reclaim scan
+    #   resumes here instead of rescanning freed slots every token
 
     @property
     def done(self) -> bool:

@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import routing
 from repro.core.multiplexer import mux_forward
@@ -53,11 +54,16 @@ class MuxServer:
     """N model fns + a trained mux; one jit'd multiplexed batch step."""
 
     def __init__(self, mux_params: Any, model_fns: Sequence[Callable],
-                 model_costs: Sequence[float], cfg: MuxServerConfig = None):
+                 model_costs: Sequence[float], cfg: MuxServerConfig = None,
+                 engines: Optional[Sequence] = None):
         self.mux_params = mux_params
         self.model_fns = list(model_fns)
         self.costs = jnp.asarray(model_costs, jnp.float32)
         self.cfg = cfg or MuxServerConfig()
+        # optional paged Engines aligned with model_fns (LLM zoos):
+        # probe() prewarms the selected engine's logit cache so a
+        # probe-then-admit flow pays the prompt's prefill exactly once
+        self.engines = list(engines) if engines is not None else None
         self._step = jax.jit(self._batch_step)
         # lambdas so both jitted paths look up self._weights /
         # select_model at trace time — serve() and probe_weights()/
@@ -123,3 +129,24 @@ class MuxServer:
     def model_step(self, m: int, bucket: jnp.ndarray) -> jnp.ndarray:
         """Run model m on one static-shape bucket (C, ...) -> (C, out...)."""
         return self._model_steps[m](bucket)
+
+    def probe(self, x) -> Dict[str, Any]:
+        """Probe a batch and prewarm the selections (the paper's
+        probe-many-models pattern hits the same prompt N times, so
+        probe work should never be thrown away).
+
+        Scores ``x`` (B, ...) exactly like admission does, and — when
+        ``engines`` were attached — runs each row's prompt through the
+        *selected* engine's ``prewarm_logits``: the prefill lands in
+        that engine's paged pool and cross-request logit LRU, so the
+        follow-up admission of the same prompt is a zero-FLOP
+        logit-cache hit.  Returns {"weights" (B, N), "assign" (B,)}.
+        """
+        w = self.probe_weights(x)
+        assign = np.asarray(self.select(w))
+        if self.engines is not None:
+            for i, m in enumerate(assign):
+                engine = self.engines[int(m)]
+                if engine is not None:
+                    engine.prewarm_logits(np.asarray(x)[i])
+        return {"weights": np.asarray(w), "assign": assign}

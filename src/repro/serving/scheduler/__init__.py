@@ -24,13 +24,15 @@ finished requests free their pages immediately.  Its handles stream:
         ...                                    # TOKEN..., FINISHED
     handle.cancel()                            # abort at any phase
 """
-from repro.serving.scheduler.request import (EventType, GenerationEvent,
+from repro.serving.scheduler.request import (BUDGET_EXCEEDED, EventType,
+                                             GenerationEvent,
                                              GenerationHandle, Request,
                                              RequestState, SamplingParams)
 from repro.serving.scheduler.batcher import (ActiveSequence, BatchingPolicy,
                                              DecodeSlots, MicroBatcher,
                                              ModelQueue)
-from repro.serving.scheduler.admission import AdmissionController
+from repro.serving.scheduler.admission import (AdmissionController,
+                                               BudgetExceeded)
 from repro.serving.scheduler.metrics import LatencyReservoir, SchedulerMetrics
 from repro.serving.scheduler.traffic import TrafficConfig, arrival_times, replay
 from repro.serving.scheduler.runtime import (MuxScheduler, PagedLLMConfig,
@@ -40,9 +42,10 @@ from repro.serving.scheduler.runtime import (MuxScheduler, PagedLLMConfig,
 
 __all__ = [
     "Request", "RequestState", "SamplingParams", "GenerationEvent",
-    "GenerationHandle", "EventType", "ActiveSequence", "BatchingPolicy",
-    "DecodeSlots", "MicroBatcher", "ModelQueue", "AdmissionController",
-    "LatencyReservoir", "SchedulerMetrics", "TrafficConfig", "arrival_times",
-    "replay", "MuxScheduler", "PagedLLMConfig", "PagedLLMScheduler",
+    "GenerationHandle", "EventType", "BUDGET_EXCEEDED", "ActiveSequence",
+    "BatchingPolicy", "DecodeSlots", "MicroBatcher", "ModelQueue",
+    "AdmissionController", "BudgetExceeded", "LatencyReservoir",
+    "SchedulerMetrics", "TrafficConfig", "arrival_times", "replay",
+    "MuxScheduler", "PagedLLMConfig", "PagedLLMScheduler",
     "SchedulerConfig", "SchedulerLifecycle",
 ]

@@ -15,24 +15,43 @@ the padded weights before slicing, so neither the jit'd probe nor the
 eager selection ever recompiles for a novel burst size — a fresh XLA
 compile on the event loop would stall every in-flight request.
 
-With ``deadline_degrade=True`` (off by default), admission additionally
-checks the selected model's estimated service time (the metrics
-registry's per-model EMA) against the request's remaining SLO budget
+Capacity comes from the backends: the per-model service-time estimate
+is the metrics registry's EMA scaled by the work already ahead of the
+request — queued requests (in whole buckets, from
+``backend.capacity().decode_batch``) plus device calls in flight on
+the backend's executors — so a deep queue degrades sooner than an
+idle one with the same EMA.
+
+With ``deadline_degrade=True`` (off by default), admission checks the
+selected model's estimate against the request's remaining SLO budget
 and, when the selection cannot meet the deadline, re-routes to the
 cheapest model whose estimate still fits — or the cheapest model
 outright when none fits.  This is the MDInference policy: degrade to a
 cheaper model rather than enqueue a request that will certainly miss.
+``shed_on_overload=True`` adds hard load shedding on top: when even
+the degraded choice cannot meet the budget, the request fails fast
+with :class:`BudgetExceeded` (status ``BUDGET_EXCEEDED``) instead of
+queueing a certain SLO miss behind everyone else.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import routing
 from repro.serving.scheduler.batcher import ModelQueue
 from repro.serving.scheduler.metrics import SchedulerMetrics
-from repro.serving.scheduler.request import Request
+from repro.serving.scheduler.request import BUDGET_EXCEEDED, Request
+
+
+class BudgetExceeded(RuntimeError):
+    """Hard load shed: no model — selected or degraded — can meet the
+    request's remaining SLO budget, so admission fails it fast rather
+    than queueing a certain miss.  ``status`` rides on the exception
+    and ``finish_reason`` on the request/FINISHED event."""
+
+    status = BUDGET_EXCEEDED.upper()
 
 
 class AdmissionController:
@@ -41,13 +60,17 @@ class AdmissionController:
     def __init__(self, server, queues: Sequence[ModelQueue],
                  metrics: SchedulerMetrics,
                  clock: Callable[[], float], probe_batch: int = 1,
-                 deadline_degrade: bool = False):
+                 deadline_degrade: bool = False,
+                 backends: Optional[Sequence] = None,
+                 shed_on_overload: bool = False):
         self.server = server
         self.queues = list(queues)
         self.metrics = metrics
         self.clock = clock
         self.probe_batch = probe_batch
         self.deadline_degrade = deadline_degrade
+        self.backends = list(backends) if backends is not None else None
+        self.shed_on_overload = shed_on_overload
         # hoisted once: a per-request device->host transfer on the
         # event loop is exactly what this module exists to avoid
         self._costs_host = np.asarray(server.costs)
@@ -85,29 +108,70 @@ class AdmissionController:
             self._signature = sigs[0]
         return np.concatenate(ws), np.concatenate(assigns)
 
+    def service_estimate(self, model_id: int) -> Optional[float]:
+        """Queue-depth-aware service-time estimate for one model:
+        the per-model EMA scaled by (1 + batches of work ahead), where
+        the work ahead is the model's live queue in whole buckets plus
+        device calls in flight on its backend.  None until the model
+        has completed at least one request — the policy only degrades
+        on evidence, never speculatively."""
+        ema = self.metrics.service_estimate(model_id)
+        if ema is None:
+            return None
+        ahead = 0.0
+        if self.backends is not None:
+            cap = self.backends[model_id].capacity()
+            rows = max(1, cap.decode_batch)
+            ahead = (-(-self.queues[model_id].live_depth() // rows)
+                     + cap.inflight)
+        return ema * (1.0 + ahead)
+
     def degrade_for_deadline(self, req: Request, model_id: int,
                              now: float) -> int:
         """MDInference-style deadline degrade: if the selected model's
         estimated service time exceeds the request's remaining SLO
         budget, re-route to the cheapest model whose estimate fits the
-        budget (the cheapest model outright when none does).  A model
-        with no estimate yet is treated as fitting — the policy only
-        degrades on evidence, never speculatively."""
-        est = self.metrics.service_estimate(model_id)
+        budget (the cheapest model outright when none does)."""
+        est = self.service_estimate(model_id)
         budget = req.deadline_t - now
         if est is None or est <= budget:
             return model_id
         fits = [m for m in range(len(self._costs_host))
-                if (self.metrics.service_estimate(m) or 0.0) <= budget]
+                if (self.service_estimate(m) or 0.0) <= budget]
         pool = fits if fits else list(range(len(self._costs_host)))
         new_m = min(pool, key=lambda m: self._costs_host[m])
         if new_m != model_id:
             self.metrics.on_degrade(req, model_id, new_m)
         return new_m
 
+    def _shed(self, req: Request, model_id: int, now: float) -> bool:
+        """Hard load shedding: fail the request fast when even the
+        (possibly degraded) selection cannot meet its budget.  Returns
+        True when the request was shed — it never reaches a queue; its
+        future already carries BudgetExceeded."""
+        if not self.shed_on_overload:
+            return False
+        est = self.service_estimate(model_id)
+        budget = req.deadline_t - now
+        if est is None or est <= budget:
+            return False
+        exc = BudgetExceeded(
+            f"request {req.rid} cannot meet its SLO: remaining budget "
+            f"{budget * 1e3:.1f}ms < estimated service "
+            f"{est * 1e3:.1f}ms on model {model_id} (the cheapest "
+            f"admissible choice); shedding instead of queueing a "
+            f"certain miss")
+        if req.fail(exc, now, reason=BUDGET_EXCEEDED):
+            self.metrics.on_shed(req)
+            self.metrics.on_fail(req)
+        return True
+
     def admit(self, requests: List[Request]) -> None:
         """Score + enqueue.  Synchronous: the probe is the paper's
-        "very light-weight" CNN/transformer — cheap by design."""
+        "very light-weight" CNN/transformer — cheap by design.  A
+        request shed by the overload policy is failed here (its future
+        resolves with BudgetExceeded) and never enqueued; the rest of
+        its batch admits normally."""
         if not requests:
             return
         w, assign = self.score([r.x for r in requests])
@@ -118,6 +182,8 @@ class AdmissionController:
             m = int(assign[i])
             if self.deadline_degrade:
                 m = self.degrade_for_deadline(req, m, now)
+                if self._shed(req, m, now):
+                    continue
             req.model_id = m
             req.flops = float(costs[req.model_id])
             self.queues[req.model_id].push(req, now)

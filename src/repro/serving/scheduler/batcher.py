@@ -32,6 +32,11 @@ class ModelQueue:
         # at the left once drained entries are skipped — O(1) amortized
         # vs re-scanning the heap on every worker poll
         self._fifo: Deque[Request] = collections.deque()
+        # count of entries still actually QUEUED, maintained
+        # incrementally (push / pop-of-live / discount_live on cancel)
+        # so the admission controller's queue-depth-aware estimates
+        # stay O(1) per lookup even with thousands queued
+        self._live = 0
 
     def push(self, req: Request, now: float) -> None:
         req.state = RequestState.QUEUED
@@ -41,9 +46,15 @@ class ModelQueue:
         heapq.heappush(self._heap,
                        (-req.priority, req.deadline_t, req.rid, req))
         self._fifo.append(req)
+        self._live += 1
 
     def pop(self) -> Request:
-        return heapq.heappop(self._heap)[3]
+        req = heapq.heappop(self._heap)[3]
+        if req.state is RequestState.QUEUED:
+            # cancelled/failed leftovers were already discounted when
+            # their terminal transition landed (discount_live)
+            self._live -= 1
+        return req
 
     def peek(self) -> Request:
         """Next-up request without draining it — the continuous-decode
@@ -62,6 +73,22 @@ class ModelQueue:
         while fifo and fifo[0].state is not RequestState.QUEUED:
             fifo.popleft()
         return fifo[0].admitted_t if fifo else None
+
+    def live_depth(self) -> int:
+        """Requests still actually QUEUED (cancelled leftovers in the
+        heap excluded) — the work-ahead signal the admission
+        controller's queue-depth-aware service estimates consume.
+        ``len(queue)`` deliberately keeps counting leftovers (it gates
+        drain sweeps that must pop them); this must not.  O(1): the
+        count is maintained by push/pop, with ``discount_live`` fed by
+        the scheduler when a queued request is cancelled in place."""
+        return self._live
+
+    def discount_live(self) -> None:
+        """A request that was QUEUED in this heap reached a terminal
+        state without being popped (user cancel): drop it from the
+        live count now rather than when a drain sweeps it out."""
+        self._live = max(0, self._live - 1)
 
 
 @dataclasses.dataclass

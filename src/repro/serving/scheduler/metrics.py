@@ -11,8 +11,12 @@ routing vs always calling the largest model.
 
 The registry also keeps a per-model EMA of observed service time;
 the admission controller's deadline-degrade hook (MDInference-style)
-consults it to re-route requests whose remaining SLO budget the
-selected model cannot meet.
+consults it — scaled by the queue depth the backends report — to
+re-route requests whose remaining SLO budget the selected model
+cannot meet, and its hard-shed path counts BUDGET_EXCEEDED drops
+here.  Backends feed per-backend executor queue waits and
+(disaggregated) prefill->decode KV transfer timings through
+``on_backend_queue_wait``/``on_transfer``.
 """
 from __future__ import annotations
 
@@ -81,6 +85,7 @@ class SchedulerMetrics:
         self.failed = 0
         self.cancelled = 0
         self.deadline_degraded = 0       # admission degrade-hook re-routes
+        self.budget_exceeded = 0         # hard load sheds (BUDGET_EXCEEDED)
         self.slo_violations = 0
         self.batches = 0
         self.batched_requests = 0        # real rows across all buckets
@@ -93,6 +98,13 @@ class SchedulerMetrics:
         self.total_lat = LatencyReservoir()
         self.ttft_lat = LatencyReservoir()       # arrival -> first token
         self.itl_lat = LatencyReservoir()        # inter-token gaps
+        # per-backend executor timings (backends feed these through the
+        # bind_metrics hook): time a device call waited on its
+        # backend's queue before running, and — disaggregated — the
+        # prefill->decode KV transfer duration
+        self.backend_queue_wait = [LatencyReservoir() for _ in range(n)]
+        self.transfer_lat = [LatencyReservoir() for _ in range(n)]
+        self.transfers = [0] * n
         self._service_ema: List[Optional[float]] = [None] * n
         self.started_t: Optional[float] = None
         self.stopped_t: Optional[float] = None
@@ -154,9 +166,25 @@ class SchedulerMetrics:
     def on_degrade(self, req: Request, from_model: int, to_model: int) -> None:
         self.deadline_degraded += 1
 
+    def on_shed(self, req: Request) -> None:
+        """One hard load shed (BUDGET_EXCEEDED); the accompanying
+        on_fail keeps the arrived == completed+failed+cancelled books
+        closed — this counter is the policy-level why."""
+        self.budget_exceeded += 1
+
     def on_decode_gap(self, seconds: float) -> None:
         """One inter-token gap from the continuous-decode loop."""
         self.itl_lat.add(seconds)
+
+    def on_backend_queue_wait(self, model_id: int, seconds: float) -> None:
+        """Time one device call spent queued on its backend's executor
+        before running (fed by ModelBackend.bind_metrics)."""
+        self.backend_queue_wait[model_id].add(seconds)
+
+    def on_transfer(self, model_id: int, seconds: float) -> None:
+        """One disaggregated prefill->decode KV transfer."""
+        self.transfer_lat[model_id].add(seconds)
+        self.transfers[model_id] += 1
 
     def service_estimate(self, model_id: int) -> Optional[float]:
         """EMA of observed service time for one model (seconds); None
@@ -181,6 +209,7 @@ class SchedulerMetrics:
             "failed": self.failed,
             "cancelled": self.cancelled,
             "deadline_degraded": self.deadline_degraded,
+            "budget_exceeded": self.budget_exceeded,
             "slo_violations": self.slo_violations,
             "elapsed_s": elapsed,
             "throughput_rps": self.completed / elapsed if elapsed else 0.0,
@@ -207,4 +236,13 @@ class SchedulerMetrics:
                                  if cost_max and self.completed else 0.0),
             "flops_saving_factor": (cost_max / mean_flops
                                     if mean_flops else 0.0),
+            "backend_queue_p50_ms": [r.percentile_ms(50)
+                                     for r in self.backend_queue_wait],
+            "backend_queue_p99_ms": [r.percentile_ms(99)
+                                     for r in self.backend_queue_wait],
+            "transfer_p50_ms": [r.percentile_ms(50)
+                                for r in self.transfer_lat],
+            "transfer_p99_ms": [r.percentile_ms(99)
+                                for r in self.transfer_lat],
+            "transfer_count": list(self.transfers),
         }

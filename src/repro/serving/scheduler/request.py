@@ -46,6 +46,11 @@ class RequestState(enum.Enum):
 TERMINAL_STATES = (RequestState.COMPLETED, RequestState.FAILED,
                    RequestState.CANCELLED)
 
+#: finish_reason for a hard load shed: admission determined the request
+#: could not meet its SLO budget on any model and failed it fast
+#: instead of queueing a certain miss (see admission.BudgetExceeded)
+BUDGET_EXCEEDED = "budget_exceeded"
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
@@ -85,7 +90,8 @@ class GenerationEvent:
     prefilled: Optional[int] = None    # PREFILLING: prompt tokens done
     prompt_len: Optional[int] = None   # PREFILLING: prompt tokens total
     output: Any = None                 # FINISHED: the full token array
-    finish_reason: Optional[str] = None  # stop|length|complete|cancelled|error
+    finish_reason: Optional[str] = None  # stop|length|complete|cancelled|
+    #                                      error|budget_exceeded
     error: Optional[BaseException] = None  # FINISHED(error)
 
 
@@ -210,15 +216,19 @@ class Request:
                                   output=output, finish_reason=reason))
         return True
 
-    def fail(self, exc: BaseException, finished_t: float) -> bool:
-        """Deliver a failure; same first-transition-wins contract."""
+    def fail(self, exc: BaseException, finished_t: float,
+             reason: str = "error") -> bool:
+        """Deliver a failure; same first-transition-wins contract.
+        ``reason`` distinguishes policy failures (e.g. the admission
+        controller's BUDGET_EXCEEDED load shed) from worker errors on
+        the request and its FINISHED event."""
         if not self._finish(RequestState.FAILED, finished_t):
             return False
-        self.finish_reason = "error"
+        self.finish_reason = reason
         if self.future is not None and not self.future.done():
             self.future.set_exception(exc)
         self.emit(GenerationEvent(EventType.FINISHED, finished_t,
-                                  finish_reason="error", error=exc))
+                                  finish_reason=reason, error=exc))
         return True
 
     def cancel(self, finished_t: float) -> bool:

@@ -19,14 +19,17 @@ Both runtimes share ONE submission surface:
 ``submit_nowait`` survives as a thin compatibility shim returning the
 raw future (``submit(...).future``).
 
-One event loop, N+0 tasks: each model gets a worker task that sleeps
-until its queue is worth draining, forms a static-shape bucket (mux)
-or sweeps its two-phase chunk-prefill + decode step (paged), and runs
-device work in a thread-pool executor so model execution overlaps
-across models and with the event loop.  Admission (mux probe + model
-selection) runs inline in ``submit`` — the probe is the paper's
-lightweight CNN/probe, so scoring on the submission path keeps the
-design simple and the arrival timestamps honest.
+Execution is delegated to ``repro.serving.backend.ModelBackend``s —
+one per model.  A worker never touches an ``Engine`` or ``MuxServer``
+directly: it awaits ``backend.step`` / ``backend.prefill_chunk`` /
+``backend.decode_batch`` and asks the backend about admission
+capacity, so swapping an ``InProcessBackend`` for a
+``DisaggregatedBackend`` (separate prefill/decode executors) or a
+``RemoteStubBackend`` (wire-serialized dispatch) changes nothing in
+this module's logic.  When a backend advertises
+``concurrent_prefill``, the worker leaves prefill chunks in flight as
+background tasks and keeps sweeping the decode batch — long prefills
+stop inflating running streams' inter-token latency.
 
 Determinism contract: every mux bucket has the same static shape
 (max_batch_size), so each model runs exactly one compiled program and
@@ -37,15 +40,16 @@ benchmarks/bench_scheduler.py asserts this per request.
 from __future__ import annotations
 
 import asyncio
+import contextlib
 import dataclasses
-import functools
 import time
-from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import routing
+from repro.serving.backend import (InProcessBackend, InProcessMuxBackend,
+                                   ModelBackend)
 from repro.serving.kv_cache import OutOfPages
 from repro.serving.scheduler.admission import AdmissionController
 from repro.serving.scheduler.batcher import (BatchingPolicy, DecodeSlots,
@@ -71,24 +75,24 @@ class SchedulerLifecycle:
     runtimes.
 
     A subclass calls ``_init_lifecycle`` from its constructor (after
-    setting ``self.metrics``), implements ``_worker(m)`` as its serving
-    loop, and may override ``_reclaim_stranded`` to hand back resources
-    a no-drain stop leaves behind.  Everything else — worker task
-    management, executor lifetime, graceful vs cancelled shutdown,
-    request cancellation, and the inflight-future set that ``drain``
-    waits on — lives here once.
+    setting ``self.metrics`` and ``self.backends``), implements
+    ``_worker(m)`` as its serving loop, and may override
+    ``_reclaim_stranded`` to hand back resources a no-drain stop
+    leaves behind.  Everything else — worker task management, backend
+    executor lifetime, graceful vs cancelled shutdown, request
+    cancellation, and the inflight-future set that ``drain`` waits on
+    — lives here once.
     """
 
-    _thread_prefix = "serving-worker"
-
-    def _init_lifecycle(self, n_workers: int, max_workers: Optional[int],
-                        clock) -> None:
+    def _init_lifecycle(self, n_workers: int, clock,
+                        backends: Sequence[ModelBackend] = ()) -> None:
         self.clock = clock
         self._n_workers = n_workers
-        self._max_workers = max_workers
+        self._lc_backends = list(backends)
+        for m, b in enumerate(self._lc_backends):
+            b.bind_metrics(self.metrics, m)
         self._events = [asyncio.Event() for _ in range(n_workers)]
         self._workers: List[asyncio.Task] = []
-        self._pool: Optional[ThreadPoolExecutor] = None
         self._running = False
         self._stopping = False
         self._next_rid = 0
@@ -103,9 +107,8 @@ class SchedulerLifecycle:
             raise RuntimeError("scheduler already started")
         self._running = True
         self._stopping = False
-        self._pool = ThreadPoolExecutor(
-            max_workers=self._max_workers or self._n_workers,
-            thread_name_prefix=self._thread_prefix)
+        for b in self._lc_backends:
+            await b.start()
         self.metrics.on_start(self.clock())
         self._workers = [asyncio.ensure_future(self._worker(m))
                          for m in range(self._n_workers)]
@@ -142,8 +145,11 @@ class SchedulerLifecycle:
                 fut.cancel()            # resolve must still unblock
         self._workers = []
         self.metrics.on_stop(self.clock())
-        self._pool.shutdown(wait=True)
-        self._pool = None
+        # backends drain their executors before the pools are touched:
+        # a zombie device call must never race the reclamation below
+        # (workers have joined, so nothing new can be submitted)
+        for b in self._lc_backends:
+            await b.stop()
         self._reclaim_stranded(self.clock())
         self._running = False
         for res in results:
@@ -152,7 +158,7 @@ class SchedulerLifecycle:
 
     def _reclaim_stranded(self, t: float) -> None:
         """Hook: reclaim resources (pages, queued requests) a no-drain
-        stop stranded.  Runs after the executor has drained, so no
+        stop stranded.  Runs after the backends have drained, so no
         zombie model step can race the reclamation.  Default: nothing
         to reclaim."""
 
@@ -191,10 +197,16 @@ class SchedulerLifecycle:
         won is left alone); the owning worker notices the terminal
         state at its next sweep and releases any pages or slots it
         still holds for the request."""
+        was_queued = req.state is RequestState.QUEUED
         if not req.cancel(self.clock()):
             return False
         self.metrics.on_cancel(req)
         if 0 <= req.model_id < len(self._events):
+            if was_queued:
+                # keep the O(1) live-depth counter honest: this entry
+                # stays in the heap until a drain sweeps it, but it is
+                # no longer work ahead of anyone
+                self.queues[req.model_id].discount_live()
             self._events[req.model_id].set()   # wake the worker to reap
         return True
 
@@ -204,7 +216,9 @@ class SchedulerConfig:
     max_batch_size: int = 8        # bucket capacity per model step
     max_wait_ms: float = 5.0       # flush a partial batch after this
     default_slo_ms: float = 100.0  # deadline when submit passes none
-    max_workers: Optional[int] = None  # executor threads (None = N models)
+    max_workers: Optional[int] = None  # kept for compatibility: device
+    #   execution now lives in the per-model backends (one executor
+    #   each), so this knob no longer allocates anything
     probe_batch_size: int = 1      # admission probe shape: arrivals are
     #   padded/chunked to this so the probe compiles exactly once
     #   regardless of burst size.  1 is right for open-loop singleton
@@ -215,6 +229,10 @@ class SchedulerConfig:
     #   re-route a request to the cheapest admissible model when the
     #   selected model's estimated service time cannot meet the
     #   request's remaining SLO budget
+    shed_on_overload: bool = False  # hard load shedding: when even the
+    #   degraded selection cannot meet the request's SLO budget, fail
+    #   it fast with BUDGET_EXCEEDED instead of queueing a certain miss
+    #   (only meaningful with deadline_degrade=True)
 
     def policy(self) -> BatchingPolicy:
         return BatchingPolicy(max_batch_size=self.max_batch_size,
@@ -225,14 +243,15 @@ class MuxScheduler(SchedulerLifecycle):
     """Request-level serving runtime over a MuxServer-compatible server.
 
     The server must expose ``probe_weights(x)``, ``select(w)``,
-    ``model_step(m, bucket)``, ``costs`` and ``num_models`` —
-    MuxServer does; tests may duck-type it.
+    ``costs`` and ``num_models`` — MuxServer does; tests may duck-type
+    it.  Execution goes through one ``ModelBackend`` per zoo model
+    (default: ``InProcessMuxBackend`` over ``server.model_step``);
+    pass ``backends=`` to dispatch models elsewhere.
     """
 
-    _thread_prefix = "mux-worker"
-
     def __init__(self, server, cfg: Optional[SchedulerConfig] = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, *,
+                 backends: Optional[Sequence[ModelBackend]] = None):
         # clock parameterizes timestamps/deadlines for testability, but
         # worker waits still run on the event loop's real time — it
         # must advance with wall clock (a frozen fake clock would keep
@@ -240,6 +259,13 @@ class MuxScheduler(SchedulerLifecycle):
         self.server = server
         self.cfg = cfg or SchedulerConfig()
         n = server.num_models
+        if backends is None:
+            backends = [InProcessMuxBackend(
+                server, m, bucket_capacity=self.cfg.max_batch_size)
+                for m in range(n)]
+        if len(backends) != n:
+            raise ValueError(f"{len(backends)} backends for {n} models")
+        self.backends = list(backends)
         self.queues = [ModelQueue(m) for m in range(n)]
         self.metrics = SchedulerMetrics(np.asarray(server.costs).tolist(),
                                         clock=clock)
@@ -247,8 +273,10 @@ class MuxScheduler(SchedulerLifecycle):
         self.admission = AdmissionController(
             server, self.queues, self.metrics, clock,
             probe_batch=self.cfg.probe_batch_size,
-            deadline_degrade=self.cfg.deadline_degrade)
-        self._init_lifecycle(n, self.cfg.max_workers, clock)
+            deadline_degrade=self.cfg.deadline_degrade,
+            backends=self.backends,
+            shed_on_overload=self.cfg.shed_on_overload)
+        self._init_lifecycle(n, clock, self.backends)
 
     def warmup(self, sample_x) -> None:
         """Compile the probe and every model step at their serving
@@ -306,7 +334,8 @@ class MuxScheduler(SchedulerLifecycle):
             return [GenerationHandle(req, self) for req in reqs]
         for req in reqs:
             self._register_inflight(req)
-            self._events[req.model_id].set()
+            if not req.is_terminal:     # load-shed requests never queued
+                self._events[req.model_id].set()
         return [GenerationHandle(req, self) for req in reqs]
 
     def submit_nowait(self, x, *, slo_ms: Optional[float] = None
@@ -315,13 +344,9 @@ class MuxScheduler(SchedulerLifecycle):
         return self.submit(x, slo_ms=slo_ms).future
 
     # ---- workers ------------------------------------------------------
-    def _run_bucket(self, m: int, bucket) -> np.ndarray:
-        # thread-pool side: run the jitted step and materialize on host
-        return np.asarray(self.server.model_step(m, bucket))
-
     async def _worker(self, m: int) -> None:
         queue, event = self.queues[m], self._events[m]
-        loop = asyncio.get_running_loop()
+        backend = self.backends[m]
         capacity = self.cfg.max_batch_size
         while True:
             now = self.clock()
@@ -340,8 +365,7 @@ class MuxScheduler(SchedulerLifecycle):
                     # (e.g. mismatched shape) must fail its batch, not
                     # kill this worker and strand the model's queue
                     bucket, _valid = self.batcher.form_bucket(batch)
-                    out = await loop.run_in_executor(
-                        self._pool, self._run_bucket, m, bucket)
+                    out = await backend.step(bucket)
                 except Exception as exc:   # deliver, don't kill the loop
                     t1 = self.clock()
                     for req in batch:
@@ -391,7 +415,8 @@ class MuxScheduler(SchedulerLifecycle):
 class PagedLLMConfig:
     max_new_tokens: int = 32        # generation budget when submit passes none
     default_slo_ms: float = 5000.0  # deadline when submit passes none
-    max_workers: Optional[int] = None   # executor threads (None = N engines)
+    max_workers: Optional[int] = None   # compatibility only (see
+    #   SchedulerConfig.max_workers): backends own their executors
     idle_poll_s: float = 0.05       # fallback wake-up while queues are empty
     prefill_chunk_pages: int = 0    # >0: chunked prefill — the prompt runs
     #   in chunks of this many pages, one chunk interleaved per decode
@@ -403,33 +428,37 @@ class PagedLLMConfig:
 @dataclasses.dataclass
 class _Prefilling:
     """One request mid-chunked-prefill: not yet in a decode slot, but
-    holding pages (everything ``seq.pages`` lists)."""
+    holding pages (everything its backend sequence lists)."""
     req: Request
-    seq: Any            # repro.serving.kv_cache.PagedSequence
+    seq: Any            # backend sequence handle (PagedSequence or mirror)
 
 
 class PagedLLMScheduler(SchedulerLifecycle):
-    """Token-level continuous-batching runtime over paged Engines.
+    """Token-level continuous-batching runtime over per-model backends.
 
-    Each engine must already be paged (``Engine.init_paged``).  One
-    worker per engine runs the two-phase continuous loop:
+    Construct it from paged ``Engine``s (each is wrapped in an
+    ``InProcessBackend``) or pass ``backends=`` directly — e.g.
+    ``DisaggregatedBackend`` for split prefill/decode executors or
+    ``RemoteStubBackend`` for wire-dispatched models.  One worker per
+    backend runs the two-phase continuous loop:
 
-      admit   pop queue-ordered requests while a decode slot AND the
-              first prefill chunk's *unique* pages exist — with prefix
-              sharing, pages mapped from a resident sequence cost
-              nothing, and one free page per writable shared page is
-              held back for copy-on-write; ``Engine.begin_prefill``
-              (host-side) maps the shared prefix and the request
-              enters the prefilling roster
+      admit   pop queue-ordered requests while a decode slot exists
+              AND the backend reports the first prefill chunk
+              admissible (unique pages + copy-on-write headroom);
+              ``backend.begin`` (host-side) starts the sequence and
+              the request enters the prefilling roster
       chunk   run ONE page-sized prefill chunk for the earliest-
-              deadline prefilling request on the executor; when the
+              deadline prefilling request on the backend; when the
               chunk is final the first token samples (FIRST_TOKEN,
               TTFT stops) and the request joins the *running* decode
-              batch at its own position, mid-generation of the others
-      step    one ``decode_step_batch`` over every running request
+              batch at its own position, mid-generation of the others.
+              A backend with ``concurrent_prefill`` (disaggregated)
+              runs the chunk as a background task instead — decode
+              sweeps keep running while the chunk is in flight
+      step    one ``backend.decode_batch`` over every running request
               (rows at different lengths; that is the paged contract),
               emitting one TOKEN event per row
-      retire  a finished request decrefs its pages immediately (pages
+      retire  a finished request releases its pages immediately (pages
               still shared with other residents survive; exclusive
               ones are reusable by the very next admission) and
               resolves its future with prompt + generated tokens
@@ -447,28 +476,29 @@ class PagedLLMScheduler(SchedulerLifecycle):
 
     Cancellation (``handle.cancel()``) resolves the future instantly;
     this worker releases the request's pages at its next sweep —
-    queued, mid-prefill, or mid-decode alike, the pool returns to its
-    pre-admission unique-page count.
+    queued, mid-prefill, mid-transfer, or mid-decode alike, the pool
+    returns to its pre-admission unique-page count.
     """
 
-    _thread_prefix = "paged-llm-worker"
-
-    def __init__(self, engines: Sequence, cfg: Optional[PagedLLMConfig] = None,
-                 *, select_fn: Optional[Callable[[Any], int]] = None,
+    def __init__(self, engines: Optional[Sequence] = None,
+                 cfg: Optional[PagedLLMConfig] = None,
+                 *, backends: Optional[Sequence[ModelBackend]] = None,
+                 select_fn: Optional[Callable[[Any], int]] = None,
                  costs: Optional[Sequence[float]] = None,
                  clock=time.monotonic):
-        for e in engines:
-            if e.pool is None:     # not an assert: must survive python -O
-                raise ValueError(
-                    "every engine must have a paged KV pool before it can "
-                    "serve token-level continuous decode: call "
-                    "Engine.init_paged(num_pages=..., page_size=...) first")
-        self.engines = list(engines)
+        if backends is None:
+            if not engines:
+                raise ValueError("pass paged engines or backends")
+            backends = [InProcessBackend(e) for e in engines]
+        self.backends = list(backends)
+        self.engines = (list(engines) if engines is not None
+                        else [getattr(b, "engine", None) for b in backends])
         self.cfg = cfg or PagedLLMConfig()
         self.select_fn = select_fn
-        n = len(self.engines)
+        n = len(self.backends)
         self.queues = [ModelQueue(m) for m in range(n)]
-        self.slots = [DecodeSlots(e.decode_batch) for e in self.engines]
+        self.slots = [DecodeSlots(b.capacity().decode_batch)
+                      for b in self.backends]
         self.metrics = SchedulerMetrics(
             list(costs) if costs is not None else [1.0] * n, clock=clock)
         # token-level counters (the benchmark's acceptance evidence)
@@ -479,29 +509,30 @@ class PagedLLMScheduler(SchedulerLifecycle):
         self.interleaved_chunks = 0        # chunks run while decoding
         self.prefill_evictions = 0         # chunk-starvation evictions
         self._prefilling: List[List[_Prefilling]] = [[] for _ in range(n)]
-        self._dead = [False] * n    # engine lost its caches (see _worker)
-        self._init_lifecycle(n, self.cfg.max_workers, clock)
+        self._dead = [False] * n    # backend died (see _worker)
+        self._init_lifecycle(n, clock, self.backends)
 
-    def _chunk_tokens(self, engine) -> Optional[int]:
+    def _chunk_tokens(self, backend: ModelBackend) -> Optional[int]:
         if self.cfg.prefill_chunk_pages <= 0:
             return None
-        return self.cfg.prefill_chunk_pages * engine.pool.page_size
+        return self.cfg.prefill_chunk_pages * backend.capacity().page_size
 
     def _reclaim_stranded(self, t: float) -> None:
         # cancel-path cleanup: sequences stranded in slots or the
         # prefilling roster by a no-drain stop must hand their pages
-        # back (safe only now — the executor is drained, so no zombie
+        # back (safe only now — the backends are drained, so no zombie
         # device call can write into reclaimed pages).  A drained stop
         # leaves both empty.
         stopped = RuntimeError("scheduler stopped before completion")
         for m, slots in enumerate(self.slots):
+            backend = self.backends[m]
             for ent in self._prefilling[m]:
-                self.engines[m].pool.release(ent.seq)
+                backend.release(ent.seq)
                 if ent.req.fail(stopped, t):
                     self.metrics.on_fail(ent.req)
             self._prefilling[m].clear()
             for e in slots.active():
-                self.engines[m].pool.release(e.seq)
+                backend.release(e.seq)
                 slots.retire(e)
                 if e.req.fail(stopped, t):
                     self.metrics.on_fail(e.req)
@@ -514,93 +545,24 @@ class PagedLLMScheduler(SchedulerLifecycle):
                     self.metrics.on_fail(req)
 
     def warmup(self, prompt_lens: Sequence[int]) -> None:
-        """Compile prefill at each padded prompt length and the decode
-        step at the batch shape before traffic arrives (the pages a
-        warmup request touches are freed again; garbage it leaves in
-        the pool is never visible through the mask).
-
-        With prefix sharing, each length also admits an identical twin
-        prompt so the tail-prefill jit (at the one-page tail shape that
-        covers any sub-page divergence — its offsets are traced) and
-        the copy-on-write page copy compile up front instead of
-        stalling the first sharing request mid-traffic; multi-page
-        tails still compile on first use.  With chunked prefill, a
-        two-chunk prompt additionally compiles the fixed chunk shape.
-        The logit cache is bypassed and cleared: warmup prompts must
-        neither skip the compiles they exist to trigger nor leave
-        synthetic entries behind."""
-        for m, engine in enumerate(self.engines):
-            cache_cap = engine._logit_cache_cap
-            engine._logit_cache_cap = 0
-            try:
-                self._warmup_engine(engine)
-                # clamp so warmup itself always clears the capacity
-                # check (a real prompt near max_len compiles on first
-                # use instead); dedupe AFTER clamping
-                for pl in sorted(set(
-                        min(engine.pool.pages_for(p) * engine.pool.page_size,
-                            engine.scfg.max_len - 2)
-                        for p in prompt_lens)):
-                    if pl < 1:
-                        continue
-                    seq = engine.prefill_into_pages(
-                        np.zeros((pl,), np.int32), max_new_tokens=2)
-                    twin = None
-                    if engine.pool.prefix_sharing:
-                        try:
-                            twin = engine.prefill_into_pages(
-                                np.zeros((pl,), np.int32), max_new_tokens=2)
-                        except OutOfPages:
-                            pass    # pool too small for a warmup pair:
-                            #         the tail path compiles on first use
-                    try:
-                        # with a twin sharing the boundary page this
-                        # decode step also copy-on-writes, compiling
-                        # _copy_page
-                        engine.decode_step_batch([seq])
-                    except OutOfPages:
-                        pass        # warmup COW found no free page: ditto
-                    finally:
-                        engine.pool.release(seq)    # never leak warmup pages
-                        if twin is not None:
-                            engine.pool.release(twin)
-            finally:
-                engine._logit_cache_cap = cache_cap
-                engine._logit_cache.clear()
-                engine.logit_cache_hits = 0
-                engine.logit_cache_misses = 0
-
-    def _warmup_engine(self, engine) -> None:
-        """Compile the fixed chunk-shape prefill jit (chunked mode):
-        a two-chunk zeros prompt forces the q_offset tail path at the
-        chunk shape, which a whole-prompt warmup never exercises."""
-        ct = self._chunk_tokens(engine)
-        if ct is None:
-            return
-        pl = min(2 * ct, engine.scfg.max_len - 2)
-        if pl <= ct:
-            return                  # one chunk covers it: whole path only
-        try:
-            seq = engine.begin_prefill(np.zeros((pl,), np.int32),
-                                       max_new_tokens=2)
-            try:
-                while not engine.prefill_chunk(seq, chunk_tokens=ct):
-                    pass
-            finally:
-                engine.pool.release(seq)
-        except OutOfPages:
-            pass                    # pool too small: compile on first use
+        """Compile every backend's serving shapes (prefill at each
+        padded prompt length, the decode step, chunk shapes, sharing /
+        copy-on-write paths — and, disaggregated, the KV transfer)
+        before traffic arrives.  Control-plane: runs before start()."""
+        for backend in self.backends:
+            backend.warmup(prompt_lens,
+                           chunk_tokens=self._chunk_tokens(backend))
 
     # ---- submission ---------------------------------------------------
     def _select(self, x) -> int:
-        live = [m for m in range(len(self.engines)) if not self._dead[m]]
+        live = [m for m in range(len(self.backends)) if not self._dead[m]]
         if not live:
-            raise RuntimeError("all engines are dead (decode failed with "
-                               "donated caches); rebuild the scheduler")
+            raise RuntimeError("all backends are dead (device execution "
+                               "failed); rebuild the scheduler")
         if self.select_fn is not None:
             m = int(self.select_fn(x))
             if self._dead[m]:
-                raise RuntimeError(f"engine {m} is dead (decode failed)")
+                raise RuntimeError(f"backend {m} is dead (decode failed)")
             return m
         # least-loaded: fewest requests queued + prefilling + running
         loads = [len(self.queues[m]) + len(self._prefilling[m])
@@ -655,164 +617,185 @@ class PagedLLMScheduler(SchedulerLifecycle):
                            slo_ms=slo_ms, seed=seed).future
 
     # ---- the two-phase continuous loop --------------------------------
-    def _admissible(self, engine, req: Request,
-                    chunk_tokens: Optional[int]) -> bool:
-        """Enough free pages right now?  Admission budgets *unique*
-        pages — the prompt's resident shared prefix costs nothing —
-        plus the pool's copy-on-write headroom (pages held back so a
-        later write into a shared page can always get its private
-        copy; decode must never OOM mid-flight).  With chunked prefill
-        only the FIRST chunk is budgeted: later chunks allocate as they
-        run, backpressured against decode frees."""
-        need, cow_extra = engine.admission_page_cost(
-            req.x, req.max_new_tokens, chunk_tokens=chunk_tokens)
-        reserve = engine.pool.cow_headroom + cow_extra
-        return need + reserve <= engine.pool.num_free
-
-    def _fits_ever(self, engine, req: Request) -> bool:
-        need = engine.pool.pages_for(len(req.x) + req.max_new_tokens)
-        return need <= engine.pool.num_pages - 1
+    def _fits_ever(self, backend: ModelBackend, req: Request) -> bool:
+        return backend.fits_ever(len(req.x), req.max_new_tokens)
 
     async def _worker(self, m: int) -> None:
-        engine = self.engines[m]
+        backend = self.backends[m]
         queue, slots, event = self.queues[m], self.slots[m], self._events[m]
         prefilling = self._prefilling[m]
-        loop = asyncio.get_running_loop()
-        chunk_tokens = self._chunk_tokens(engine)
-        while True:
-            progressed = False
+        chunk_tokens = self._chunk_tokens(backend)
+        concurrent = bool(backend.concurrent_prefill)
+        chunk_task: Optional[asyncio.Task] = None
+        try:
+            while True:
+                progressed = False
 
-            # ---- admit: begin prefill (host-side page mapping) ------
-            while (len(queue)
-                   and len(slots) + len(prefilling) < slots.capacity):
-                nxt = queue.peek()
-                if nxt.is_terminal:             # cancelled while queued:
-                    queue.pop()                 # future already resolved
-                    progressed = True
-                    continue
-                if not self._fits_ever(engine, nxt):
-                    req = queue.pop()
-                    if req.fail(OutOfPages(
-                            f"request needs more pages than the whole pool "
-                            f"({len(req.x)} + {req.max_new_tokens} tokens > "
-                            f"{(engine.pool.num_pages - 1) * engine.pool.page_size} "
-                            f"poolable)"), self.clock()):
-                        self.metrics.on_fail(req)
-                    progressed = True
-                    continue
-                if not self._admissible(engine, nxt, chunk_tokens):
-                    break                       # backpressure: wait for frees
-                req = queue.pop()
-                req.state = RequestState.PREFILLING
-                req.started_t = self.clock()    # per request, not per sweep
-                try:
-                    # host-side validation only: the shared-prefix
-                    # mapping and logit-cache fast path run lazily in
-                    # the first prefill_chunk (see _run_chunk)
-                    seq = engine.begin_prefill(
-                        req.x, max_new_tokens=req.max_new_tokens,
-                        seed=req.seed, temperature=req.params.temperature,
-                        stop_tokens=req.params.stop_tokens)
-                except Exception as exc:
-                    if req.fail(exc, self.clock()):
-                        self.metrics.on_fail(req)
-                    continue                    # request-local: keep serving
-                progressed = True
-                req.on_prefill_progress(seq.prefill_pos, self.clock())
-                prefilling.append(_Prefilling(req, seq))
-
-            # ---- chunk: one prefill chunk, earliest deadline first --
-            if prefilling:
-                ent = min(prefilling,
-                          key=lambda e: (e.req.deadline_t, e.req.rid))
-                if ent.req.is_terminal:         # cancelled mid-prefill
-                    prefilling.remove(ent)
-                    engine.pool.release(ent.seq)
-                    progressed = True
-                else:
-                    ran = await self._run_chunk(m, ent, chunk_tokens)
-                    if ran is None:             # engine died
+                # ---- consume a background chunk that finished -------
+                if chunk_task is not None and chunk_task.done():
+                    ran = chunk_task.result()
+                    chunk_task = None
+                    if ran is None:             # backend died
                         return
                     progressed = progressed or ran
 
-            # ---- step: one token for every running request ----------
-            # reap cancelled entries first so their pages free before
-            # the batch forms (and admission sees them this sweep)
-            for e in slots.active():
-                if e.req.is_terminal:
-                    engine.pool.release(e.seq)
-                    slots.retire(e)
-                    progressed = True
-            active = slots.active()
-            if active:
-                t0 = self.clock()
-                try:
-                    await loop.run_in_executor(
-                        self._pool, engine.decode_step_batch,
-                        [e.seq for e in active])
-                except Exception as exc:
-                    cow_seq = getattr(exc, "cow_seq", None)
-                    if (isinstance(exc, OutOfPages) and cow_seq is not None
-                            and not engine.caches_poisoned):
-                        # copy-on-write found no free page (admission
-                        # headroom raced).  The COW check runs before
-                        # the donating jit, so the engine survives:
-                        # fail only the writer and keep serving.
-                        for e in active:
-                            if e.seq is cow_seq:
-                                engine.pool.release(e.seq)
-                                slots.retire(e)
-                                if e.req.fail(exc, self.clock()):
-                                    self.metrics.on_fail(e.req)
-                                break
+                # ---- admit: begin prefill (host-side) ---------------
+                while (len(queue)
+                       and len(slots) + len(prefilling) < slots.capacity):
+                    nxt = queue.peek()
+                    if nxt.is_terminal:         # cancelled while queued:
+                        queue.pop()             # future already resolved
+                        progressed = True
                         continue
-                    # decode donates the engine's caches; an execution
-                    # failure deletes them, so the engine cannot serve
-                    # again — fail everything it holds and retire the
-                    # worker rather than failing requests one by one
-                    self._kill_engine(m, exc)
-                    return
-                t1 = self.clock()
-                # count only after the step ran: the COW-failure retry
-                # path above must not double-count a batch that never
-                # executed
-                if len({e.admit_step for e in active}) > 1:
-                    self.mixed_admission_batches += 1
-                self.decode_batches += 1
-                self.metrics.on_batch(m, len(active), slots.capacity)
-                self.metrics.on_model_busy(m, t1 - t0)
-                self.tokens_generated += len(active)
-                for e in active:
-                    if not e.req.is_terminal:
-                        e.req.on_token(int(e.seq.tokens[-1]),
-                                       e.seq.pos, t1)
-                    if e.last_token_t:
-                        self.metrics.on_decode_gap(t1 - e.last_token_t)
-                    e.last_token_t = t1
-                    if e.seq.done:
-                        self._retire(m, e, t1)
-                continue
+                    if not self._fits_ever(backend, nxt):
+                        req = queue.pop()
+                        cap = backend.capacity()
+                        if req.fail(OutOfPages(
+                                f"request needs more pages than the whole "
+                                f"pool ({len(req.x)} + {req.max_new_tokens} "
+                                f"tokens > {cap.num_pages * cap.page_size} "
+                                f"poolable)"), self.clock()):
+                            self.metrics.on_fail(req)
+                        progressed = True
+                        continue
+                    if not backend.admissible(nxt.x, nxt.max_new_tokens,
+                                              chunk_tokens=chunk_tokens):
+                        break                   # backpressure: await frees
+                    req = queue.pop()
+                    req.state = RequestState.PREFILLING
+                    req.started_t = self.clock()   # per request, not sweep
+                    try:
+                        # host-side validation only: the shared-prefix
+                        # mapping and logit-cache fast path run lazily
+                        # in the first prefill chunk (see _run_chunk)
+                        seq = backend.begin(
+                            req.x, max_new_tokens=req.max_new_tokens,
+                            seed=req.seed,
+                            temperature=req.params.temperature,
+                            stop_tokens=req.params.stop_tokens)
+                    except Exception as exc:
+                        if req.fail(exc, self.clock()):
+                            self.metrics.on_fail(req)
+                        continue                # request-local: keep going
+                    progressed = True
+                    req.on_prefill_progress(seq.prefill_pos, self.clock())
+                    prefilling.append(_Prefilling(req, seq))
 
-            if progressed:
-                continue
-            if self._stopping and not len(queue) and not prefilling:
-                return
-            try:
-                await asyncio.wait_for(event.wait(), self.cfg.idle_poll_s)
-            except asyncio.TimeoutError:
-                pass
-            event.clear()
+                # ---- chunk: one prefill chunk, earliest deadline ----
+                if chunk_task is None and prefilling:
+                    ent = min(prefilling,
+                              key=lambda e: (e.req.deadline_t, e.req.rid))
+                    if ent.req.is_terminal:     # cancelled mid-prefill
+                        prefilling.remove(ent)
+                        backend.release(ent.seq)
+                        progressed = True
+                    elif concurrent:
+                        # disaggregated: leave the chunk in flight on
+                        # the backend's prefill executor and keep
+                        # sweeping decode below — this is the whole
+                        # point of the split
+                        chunk_task = asyncio.ensure_future(
+                            self._run_chunk(m, ent, chunk_tokens))
+                        progressed = True
+                    else:
+                        ran = await self._run_chunk(m, ent, chunk_tokens)
+                        if ran is None:         # backend died
+                            return
+                        progressed = progressed or ran
+
+                # ---- step: one token for every running request ------
+                # reap cancelled entries first so their pages free
+                # before the batch forms (admission sees them this
+                # sweep)
+                for e in slots.active():
+                    if e.req.is_terminal:
+                        backend.release(e.seq)
+                        slots.retire(e)
+                        progressed = True
+                active = slots.active()
+                if active:
+                    t0 = self.clock()
+                    try:
+                        await backend.decode_batch([e.seq for e in active])
+                    except Exception as exc:
+                        cow_seq = getattr(exc, "cow_seq", None)
+                        if (isinstance(exc, OutOfPages)
+                                and cow_seq is not None and backend.healthy):
+                            # copy-on-write found no free page (the
+                            # admission headroom raced).  The COW check
+                            # runs before the donating jit, so the
+                            # engine survives: fail only the writer.
+                            for e in active:
+                                if e.seq is cow_seq:
+                                    backend.release(e.seq)
+                                    slots.retire(e)
+                                    if e.req.fail(exc, self.clock()):
+                                        self.metrics.on_fail(e.req)
+                                    break
+                            continue
+                        # decode donates the engine's caches; an
+                        # execution failure deletes them, so the
+                        # backend cannot serve again — fail everything
+                        # it holds and retire the worker
+                        self._kill_backend(m, exc)
+                        return
+                    t1 = self.clock()
+                    # count only after the step ran: the COW-failure
+                    # retry path above must not double-count a batch
+                    # that never executed
+                    if len({e.admit_step for e in active}) > 1:
+                        self.mixed_admission_batches += 1
+                    self.decode_batches += 1
+                    self.metrics.on_batch(m, len(active), slots.capacity)
+                    self.metrics.on_model_busy(m, t1 - t0)
+                    self.tokens_generated += len(active)
+                    for e in active:
+                        if not e.req.is_terminal:
+                            e.req.on_token(int(e.seq.tokens[-1]),
+                                           e.seq.pos, t1)
+                        if e.last_token_t:
+                            self.metrics.on_decode_gap(t1 - e.last_token_t)
+                        e.last_token_t = t1
+                        if e.seq.done:
+                            self._retire(m, e, t1)
+                    continue
+
+                if progressed:
+                    continue
+                if (self._stopping and not len(queue) and not prefilling
+                        and chunk_task is None):
+                    return
+                if chunk_task is not None:
+                    # nothing else to do but a chunk is in flight: wake
+                    # when it lands (or at the poll tick for cancels)
+                    await asyncio.wait([chunk_task],
+                                       timeout=self.cfg.idle_poll_s)
+                else:
+                    try:
+                        await asyncio.wait_for(event.wait(),
+                                               self.cfg.idle_poll_s)
+                    except asyncio.TimeoutError:
+                        pass
+                event.clear()
+        finally:
+            if chunk_task is not None and not chunk_task.done():
+                # a no-drain stop cancelled this worker with a chunk in
+                # flight: push the cancellation into the chunk task and
+                # wait it out — its own handler releases the pages
+                chunk_task.cancel()
+            if chunk_task is not None:
+                with contextlib.suppress(BaseException):
+                    await chunk_task
 
     async def _run_chunk(self, m: int, ent: _Prefilling,
                          chunk_tokens: Optional[int]) -> Optional[bool]:
-        """One executor round of ``Engine.prefill_chunk`` for ``ent``.
+        """One backend round of ``prefill_chunk`` for ``ent``.
         Returns True on progress, False on backpressure, None when the
-        engine died (the worker must exit)."""
-        engine, loop = self.engines[m], asyncio.get_running_loop()
+        backend died (the worker must exit)."""
+        backend = self.backends[m]
         prefilling, slots = self._prefilling[m], self.slots[m]
-        chunk_fut = loop.run_in_executor(
-            self._pool, functools.partial(engine.prefill_chunk, ent.seq,
-                                          chunk_tokens=chunk_tokens))
+        chunk_fut = asyncio.ensure_future(
+            backend.prefill_chunk(ent.seq, chunk_tokens=chunk_tokens))
         try:
             done = await asyncio.shield(chunk_fut)
         except asyncio.CancelledError:
@@ -824,18 +807,18 @@ class PagedLLMScheduler(SchedulerLifecycle):
             except Exception:
                 pass
             prefilling.remove(ent)
-            engine.pool.release(ent.seq)
+            backend.release(ent.seq)
             if ent.req.fail(RuntimeError("scheduler stopped before "
                                          "completion"), self.clock()):
                 self.metrics.on_fail(ent.req)
             raise
         except OutOfPages as exc:
-            if engine.caches_poisoned:
+            if not backend.healthy:
                 prefilling.remove(ent)
-                engine.pool.release(ent.seq)
+                backend.release(ent.seq)
                 if ent.req.fail(exc, self.clock()):
                     self.metrics.on_fail(ent.req)
-                self._kill_engine(m, exc)
+                self._kill_backend(m, exc)
                 return None
             if ent.seq.prefill_pos == ent.seq.shared_prefix_len:
                 # nothing computed yet: plain requeue (the admission
@@ -844,7 +827,7 @@ class PagedLLMScheduler(SchedulerLifecycle):
                 # be re-pushed — ModelQueue.push would overwrite its
                 # CANCELLED state and resurrect it.
                 prefilling.remove(ent)
-                engine.pool.release(ent.seq)
+                backend.release(ent.seq)
                 if not ent.req.is_terminal:
                     self.queues[m].push(ent.req, self.clock())
                 return False
@@ -858,7 +841,7 @@ class PagedLLMScheduler(SchedulerLifecycle):
                              key=lambda e: (e.req.deadline_t, e.req.rid),
                              default=ent)
                 prefilling.remove(victim)
-                engine.pool.release(victim.seq)
+                backend.release(victim.seq)
                 if not victim.req.is_terminal:   # see requeue note above
                     self.queues[m].push(victim.req, self.clock())
                     self.prefill_evictions += 1
@@ -866,14 +849,14 @@ class PagedLLMScheduler(SchedulerLifecycle):
             return False        # decode frees are coming: retry next sweep
         except Exception as exc:
             prefilling.remove(ent)
-            engine.pool.release(ent.seq)
+            backend.release(ent.seq)
             if ent.req.fail(exc, self.clock()):
                 self.metrics.on_fail(ent.req)
-            if engine.caches_poisoned:
+            if not backend.healthy:
                 # the donating prefill jit failed at execution: the
                 # engine's caches are gone, same terminal state as a
                 # decode failure
-                self._kill_engine(m, exc)
+                self._kill_backend(m, exc)
                 return None
             return True         # request-local: keep serving
         self.prefill_chunks += 1
@@ -899,7 +882,7 @@ class PagedLLMScheduler(SchedulerLifecycle):
             # cancelled while its final chunk was on the executor: the
             # future is already resolved; joining would resurrect it
             # (state write below) and decode a dead request to the end
-            self.engines[m].pool.release(seq)
+            self.backends[m].release(seq)
             return
         req.state = RequestState.RUNNING
         req.on_first_token(int(seq.tokens[0]), seq.prompt_len, t)
@@ -908,38 +891,37 @@ class PagedLLMScheduler(SchedulerLifecycle):
         if seq.done:                # max_new_tokens == 1 / instant stop
             self._retire(m, entry, t)
 
-    def _kill_engine(self, m: int, exc: BaseException) -> None:
-        """Terminal engine failure (donated caches deleted): free every
-        page it holds, fail its running, prefilling and queued
+    def _kill_backend(self, m: int, exc: BaseException) -> None:
+        """Terminal backend failure (donated caches deleted): free
+        every page it holds, fail its running, prefilling and queued
         requests, and take it out of the selection rotation."""
         self._dead[m] = True
-        engine, slots, queue = self.engines[m], self.slots[m], self.queues[m]
+        backend, slots, queue = self.backends[m], self.slots[m], self.queues[m]
         t = self.clock()
         for ent in self._prefilling[m]:
-            engine.pool.release(ent.seq)
+            backend.release(ent.seq)
             if ent.req.fail(exc, t):
                 self.metrics.on_fail(ent.req)
         self._prefilling[m].clear()
         for e in slots.active():
-            engine.pool.release(e.seq)
+            backend.release(e.seq)
             slots.retire(e)
             if e.req.fail(exc, t):
                 self.metrics.on_fail(e.req)
         while len(queue):
             req = queue.pop()
-            if req.fail(RuntimeError(f"engine {m} died (caches lost): {exc}"),
-                        self.clock()):
+            if req.fail(RuntimeError(f"backend {m} died (caches lost): "
+                                     f"{exc}"), self.clock()):
                 self.metrics.on_fail(req)
 
     def _retire(self, m: int, entry, t: float) -> None:
-        """Finished: decref the pages *now* (exclusive pages are
+        """Finished: release the pages *now* (exclusive pages are
         reusable by the next admission; shared ones live on with the
         sequences still mapping them) and resolve the future."""
-        engine = self.engines[m]
-        engine.pool.release(entry.seq)
+        self.backends[m].release(entry.seq)
         self.slots[m].retire(entry)
         req = entry.req
-        # per-token relative cost of the engine that served the request
+        # per-token relative cost of the backend that served the request
         # (same units as metrics.costs, so flops_saved_frac keeps its
         # Eq. 14 meaning vs always-largest); token counts are reported
         # separately via tokens_generated
@@ -952,6 +934,11 @@ class PagedLLMScheduler(SchedulerLifecycle):
     # ---- report -------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
         snap = self.metrics.snapshot()
+        bstats = [b.stats() for b in self.backends]
+
+        def total(key):
+            return sum(s.get(key, 0) for s in bstats)
+
         snap.update({
             "decode_batches": self.decode_batches,
             "mixed_admission_batches": self.mixed_admission_batches,
@@ -959,15 +946,14 @@ class PagedLLMScheduler(SchedulerLifecycle):
             "prefill_chunks": self.prefill_chunks,
             "interleaved_chunks": self.interleaved_chunks,
             "prefill_evictions": self.prefill_evictions,
-            "prefill_tokens_computed": sum(e.prefill_tokens_computed
-                                           for e in self.engines),
-            "prefill_tokens_shared": sum(e.prefill_tokens_shared
-                                         for e in self.engines),
-            "cow_copies": sum(e.cow_count for e in self.engines),
-            "logit_cache_hits": sum(e.logit_cache_hits
-                                    for e in self.engines),
-            "logit_cache_misses": sum(e.logit_cache_misses
-                                      for e in self.engines),
-            "pools": [e.pool.stats() for e in self.engines],
+            "prefill_tokens_computed": total("prefill_tokens_computed"),
+            "prefill_tokens_shared": total("prefill_tokens_shared"),
+            "cow_copies": total("cow_copies"),
+            "reclaimed_pages": total("reclaimed_pages"),
+            "logit_cache_hits": total("logit_cache_hits"),
+            "logit_cache_misses": total("logit_cache_misses"),
+            "transfers": total("transfers"),
+            "pools": [s.get("pool") for s in bstats],
+            "backends": bstats,
         })
         return snap
