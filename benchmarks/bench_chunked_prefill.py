@@ -24,6 +24,7 @@ modes, and the pool drains — then emits CSV rows plus
 results/BENCH_chunked_prefill.json.
 
   PYTHONPATH=src python -m benchmarks.bench_chunked_prefill
+  PYTHONPATH=src python -m benchmarks.bench_chunked_prefill --trace out.json
   PYTHONPATH=src python -m benchmarks.run --only chunked
 """
 from __future__ import annotations
@@ -39,6 +40,7 @@ from benchmarks import common
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
+from repro.serving.observability import Tracer
 from repro.serving.scheduler import PagedLLMConfig, PagedLLMScheduler
 
 MAX_LEN = 320
@@ -74,13 +76,14 @@ def _prompts(cfg: ModelConfig):
 
 
 def serve_trace(cfg: ModelConfig, params, long_p, shorts, *,
-                chunk_pages: int) -> Dict:
+                chunk_pages: int, tracer: Tracer = None) -> Dict:
     engine = Engine(cfg, params, ServeConfig(max_len=MAX_LEN))
     pool = engine.init_paged(num_pages=NUM_PAGES, page_size=PAGE_SIZE,
                              decode_batch=DECODE_BATCH)
     sched = PagedLLMScheduler(
         [engine], PagedLLMConfig(max_new_tokens=MAX_NEW,
-                                 prefill_chunk_pages=chunk_pages))
+                                 prefill_chunk_pages=chunk_pages),
+        tracer=tracer)
     sched.warmup(sorted({LONG_LEN, *SHORT_LENS}))
     pool.peak_in_use = 0                   # don't count warmup
     handles: List = []
@@ -129,9 +132,15 @@ def run() -> None:
     cfg = bench_config()
     params = tf.init_params(cfg, jax.random.key(0))
     long_p, shorts = _prompts(cfg)
-    serial = serve_trace(cfg, params, long_p, shorts, chunk_pages=0)
+    trace = common.trace_dest("chunked_prefill")
+    tr_serial = Tracer() if trace else None
+    tr_chunked = Tracer() if trace else None
+    serial = serve_trace(cfg, params, long_p, shorts, chunk_pages=0,
+                         tracer=tr_serial)
     chunked = serve_trace(cfg, params, long_p, shorts,
-                          chunk_pages=CHUNK_PAGES)
+                          chunk_pages=CHUNK_PAGES, tracer=tr_chunked)
+    common.export_trace(tr_serial, common.tag_trace(trace, "serial"))
+    common.export_trace(tr_chunked, common.tag_trace(trace, "chunked"))
 
     # ---- the chunked-prefill contract, asserted ------------------------
     for out_s, out_c in zip(serial["outputs"], chunked["outputs"]):

@@ -26,6 +26,7 @@ token-identical outputs across modes and both pools drained — then
 emits CSV rows plus results/BENCH_disagg.json.
 
   PYTHONPATH=src python -m benchmarks.bench_disagg
+  PYTHONPATH=src python -m benchmarks.bench_disagg --trace out.json
   PYTHONPATH=src python -m benchmarks.run --only disagg
 """
 from __future__ import annotations
@@ -42,6 +43,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import transformer as tf
 from repro.serving.backend import DisaggregatedBackend, InProcessBackend
 from repro.serving.engine import Engine, ServeConfig
+from repro.serving.observability import Tracer
 from repro.serving.scheduler import (EventType, PagedLLMConfig,
                                      PagedLLMScheduler, SamplingParams)
 
@@ -90,11 +92,13 @@ def make_backend(cfg, params, mode: str):
         decode_batch=DECODE_BATCH, prefill_pages=PREFILL_PAGES)
 
 
-def serve_trace(cfg, params, longs, shorts, *, mode: str) -> Dict:
+def serve_trace(cfg, params, longs, shorts, *, mode: str,
+                tracer: Tracer = None) -> Dict:
     backend = make_backend(cfg, params, mode)
     sched = PagedLLMScheduler(
         backends=[backend],
-        cfg=PagedLLMConfig(prefill_chunk_pages=CHUNK_PAGES))
+        cfg=PagedLLMConfig(prefill_chunk_pages=CHUNK_PAGES),
+        tracer=tracer)
     sched.warmup(sorted({*LONG_LENS, *SHORT_LENS}))
     short_handles: List = []
     long_handles: List = []
@@ -167,8 +171,15 @@ def run() -> None:
     cfg = bench_config()
     params = tf.init_params(cfg, jax.random.key(0))
     longs, shorts = _prompts(cfg)
-    inter = serve_trace(cfg, params, longs, shorts, mode="interleaved")
-    disagg = serve_trace(cfg, params, longs, shorts, mode="disagg")
+    trace = common.trace_dest("disagg")
+    tr_inter = Tracer() if trace else None
+    tr_disagg = Tracer() if trace else None
+    inter = serve_trace(cfg, params, longs, shorts, mode="interleaved",
+                        tracer=tr_inter)
+    disagg = serve_trace(cfg, params, longs, shorts, mode="disagg",
+                         tracer=tr_disagg)
+    common.export_trace(tr_inter, common.tag_trace(trace, "interleaved"))
+    common.export_trace(tr_disagg, common.tag_trace(trace, "disagg"))
 
     # ---- the disaggregation contract, asserted -------------------------
     for out_i, out_d in zip(inter["outputs"], disagg["outputs"]):

@@ -1,0 +1,83 @@
+"""Tracing overhead: traced vs untraced throughput on the scheduler bench.
+
+The observability contract is "low overhead or it stays off in prod":
+the tracer ring is append-only tuples behind an ``if tracer.enabled``
+guard, so a fully traced run (request span chains, executor spans,
+scheduler instants, gauge sampling) must stay within 5% of untraced
+throughput on the same trace.  This bench enforces that on
+bench_scheduler's serving path — same server, same seeded Poisson
+schedule — alternating untraced/traced runs after a shared warmup and
+comparing best-of-N throughput (best-of filters scheduler-noise
+outliers on a busy host; the tracer's cost is deterministic).
+
+  PYTHONPATH=src python -m benchmarks.bench_obs_overhead
+  PYTHONPATH=src python -m benchmarks.run --only obs_overhead
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Dict, List
+
+from benchmarks import common
+from benchmarks.bench_scheduler import NUM_REQUESTS, _drive, build_server
+from repro.serving.observability import Tracer
+from repro.serving.scheduler import SchedulerConfig, TrafficConfig
+
+REPEATS = 3
+MAX_OVERHEAD_FRAC = 0.05
+
+
+def run() -> None:
+    server = build_server()
+    scfg = SchedulerConfig(max_batch_size=8, max_wait_ms=4.0,
+                           default_slo_ms=250.0)
+    tc = TrafficConfig(rate=400.0, num_requests=NUM_REQUESTS, seed=0)
+
+    # shared warmup: compile every bucket shape before either arm times
+    asyncio.run(_drive(server, tc, scfg))
+
+    untraced: List[float] = []
+    traced: List[float] = []
+    traced_snap: Dict = {}
+    for _ in range(REPEATS):        # alternate arms so drift hits both
+        snap = asyncio.run(_drive(server, tc, scfg))
+        untraced.append(snap["throughput_rps"])
+        tracer = Tracer()
+        snap = asyncio.run(_drive(server, tc, scfg, tracer=tracer))
+        traced.append(snap["throughput_rps"])
+        traced_snap = snap
+    common.export_trace(tracer, common.trace_dest("obs_overhead"))
+
+    best_untraced = max(untraced)
+    best_traced = max(traced)
+    overhead = 1.0 - best_traced / best_untraced
+    assert best_traced >= (1.0 - MAX_OVERHEAD_FRAC) * best_untraced, (
+        f"tracing overhead {overhead * 100:.1f}% exceeds "
+        f"{MAX_OVERHEAD_FRAC * 100:.0f}%: traced {best_traced:.1f} rps "
+        f"vs untraced {best_untraced:.1f} rps")
+
+    stats = traced_snap["trace"]
+    common.emit(
+        "obs_overhead",
+        1e6 / best_traced,
+        f"untraced_rps={best_untraced:.1f} traced_rps={best_traced:.1f} "
+        f"overhead_frac={overhead:.4f} "
+        f"events_recorded={stats['recorded']} "
+        f"events_dropped={stats['dropped']} within_5pct=yes")
+    common.emit_json("obs_overhead", {
+        "config": {"rate": tc.rate, "num_requests": tc.num_requests,
+                   "repeats": REPEATS,
+                   "max_overhead_frac": MAX_OVERHEAD_FRAC},
+        "untraced_rps": untraced,
+        "traced_rps": traced,
+        "best_untraced_rps": best_untraced,
+        "best_traced_rps": best_traced,
+        "overhead_frac": overhead,
+        "events_recorded": stats["recorded"],
+        "events_dropped": stats["dropped"],
+    })
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

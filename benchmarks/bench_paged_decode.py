@@ -19,6 +19,7 @@ to zero pages held — then emits the CSV row plus
 results/BENCH_paged_decode.json.
 
   PYTHONPATH=src python -m benchmarks.bench_paged_decode
+  PYTHONPATH=src python -m benchmarks.bench_paged_decode --trace out.json
   PYTHONPATH=src python -m benchmarks.run --only paged
 """
 from __future__ import annotations
@@ -36,6 +37,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
 from repro.serving.kv_cache import pool_bytes_per_page, ring_cache_bytes
+from repro.serving.observability import Tracer
 from repro.serving.scheduler import PagedLLMConfig, PagedLLMScheduler
 
 # both engines are provisioned to serve requests up to MAX_LEN tokens;
@@ -99,12 +101,14 @@ async def _drive_paged(sched: PagedLLMScheduler, prompts) -> None:
         await asyncio.gather(*handles)
 
 
-def bench_paged(cfg: ModelConfig, params, prompts) -> Dict:
+def bench_paged(cfg: ModelConfig, params, prompts,
+                tracer: Tracer = None) -> Dict:
     engine = Engine(cfg, params, ServeConfig(max_len=MAX_LEN))
     # pool sized in pages for the trace's actual tokens, not B x max_len
     pool = engine.init_paged(num_pages=1 + 32, page_size=PAGE_SIZE,
                              decode_batch=DECODE_BATCH)
-    sched = PagedLLMScheduler([engine], PagedLLMConfig(max_new_tokens=MAX_NEW))
+    sched = PagedLLMScheduler([engine], PagedLLMConfig(max_new_tokens=MAX_NEW),
+                              tracer=tracer)
     sched.warmup(sorted(set(PROMPT_LENS)))
     pool.peak_in_use = 0                     # don't count warmup
     t0 = time.time()
@@ -148,7 +152,10 @@ def run() -> None:
     params = tf.init_params(cfg, jax.random.key(0))
     prompts = _prompts(cfg)
     ring = bench_ring(cfg, params, prompts)
-    paged = bench_paged(cfg, params, prompts)
+    trace = common.trace_dest("paged_decode")   # ring mode has no scheduler
+    tracer = Tracer() if trace else None
+    paged = bench_paged(cfg, params, prompts, tracer=tracer)
+    common.export_trace(tracer, trace)
 
     saving = ring["cache_bytes"] / max(paged["cache_bytes"], 1)
     common.emit(

@@ -22,6 +22,7 @@ below the baseline — then emits the CSV rows plus
 results/BENCH_prefix_sharing.json.
 
   PYTHONPATH=src python -m benchmarks.bench_prefix_sharing
+  PYTHONPATH=src python -m benchmarks.bench_prefix_sharing --trace out.json
   PYTHONPATH=src python -m benchmarks.run --only prefix
 """
 from __future__ import annotations
@@ -38,6 +39,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
 from repro.serving.kv_cache import pool_bytes_per_page
+from repro.serving.observability import Tracer
 from repro.serving.scheduler import PagedLLMConfig, PagedLLMScheduler
 
 MAX_LEN = 256
@@ -73,13 +75,14 @@ def _prompts(cfg: ModelConfig) -> List[np.ndarray]:
 
 
 def serve_trace(cfg: ModelConfig, params, prompts, *,
-                sharing: bool) -> Dict:
+                sharing: bool, tracer: Tracer = None) -> Dict:
     engine = Engine(cfg, params, ServeConfig(max_len=MAX_LEN))
     pool = engine.init_paged(num_pages=NUM_PAGES, page_size=PAGE_SIZE,
                              decode_batch=DECODE_BATCH,
                              prefix_sharing=sharing)
     sched = PagedLLMScheduler([engine],
-                              PagedLLMConfig(max_new_tokens=MAX_NEW))
+                              PagedLLMConfig(max_new_tokens=MAX_NEW),
+                              tracer=tracer)
     sched.warmup(sorted({len(p) for p in prompts}))
     pool.peak_in_use = 0                   # don't count warmup
     engine.prefill_tokens_computed = 0
@@ -126,8 +129,13 @@ def run() -> None:
     cfg = bench_config()
     params = tf.init_params(cfg, jax.random.key(0))
     prompts = _prompts(cfg)
-    base = serve_trace(cfg, params, prompts, sharing=False)
-    shared = serve_trace(cfg, params, prompts, sharing=True)
+    trace = common.trace_dest("prefix_sharing")
+    tr_base = Tracer() if trace else None
+    tr_shared = Tracer() if trace else None
+    base = serve_trace(cfg, params, prompts, sharing=False, tracer=tr_base)
+    shared = serve_trace(cfg, params, prompts, sharing=True, tracer=tr_shared)
+    common.export_trace(tr_base, common.tag_trace(trace, "baseline"))
+    common.export_trace(tr_shared, common.tag_trace(trace, "sharing"))
 
     # ---- the sharing contract, asserted --------------------------------
     followers = len(prompts) - 1

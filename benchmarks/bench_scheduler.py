@@ -14,6 +14,7 @@ request (at the scheduler's static bucket shape — the only shape at
 which XLA guarantees row-stable lowering).
 
   PYTHONPATH=src python -m benchmarks.bench_scheduler
+  PYTHONPATH=src python -m benchmarks.bench_scheduler --trace out.json
   PYTHONPATH=src python -m benchmarks.run --only scheduler
 """
 from __future__ import annotations
@@ -29,6 +30,7 @@ from benchmarks import common
 from repro.core.multiplexer import init_image_backbone, init_mux
 from repro.models.cnn import ZOO_SPECS, cnn_forward, init_zoo, zoo_costs
 from repro.serving.mux_server import MuxServer, MuxServerConfig
+from repro.serving.observability import Tracer
 from repro.serving.scheduler import (MuxScheduler, SchedulerConfig,
                                      TrafficConfig, arrival_times, replay)
 
@@ -57,11 +59,11 @@ def build_server(threshold=None) -> MuxServer:
 
 
 async def _drive(server: MuxServer, traffic: TrafficConfig,
-                 scfg: SchedulerConfig) -> Dict:
+                 scfg: SchedulerConfig, tracer: Tracer = None) -> Dict:
     xs = np.asarray(jax.random.normal(
         jax.random.key(3),
         (traffic.num_requests, IMAGE_SIZE, IMAGE_SIZE, 3)))
-    sched = MuxScheduler(server, scfg)
+    sched = MuxScheduler(server, scfg, tracer=tracer)
     sched.warmup(xs[0])
     async with sched:
         futures = await replay(sched.submit, list(xs),
@@ -88,8 +90,14 @@ def run() -> None:
         TrafficConfig(rate=200.0, num_requests=NUM_REQUESTS,
                       pattern="bursty", seed=0),
     ]
+    trace = common.trace_dest("scheduler")
     for tc in loads:
-        snap = asyncio.run(_drive(server, tc, scfg))
+        # one tracer per load: request ids restart per scheduler, so
+        # merging loads into one export would collide request tracks
+        tracer = Tracer() if trace else None
+        snap = asyncio.run(_drive(server, tc, scfg, tracer=tracer))
+        common.export_trace(
+            tracer, common.tag_trace(trace, f"{tc.pattern}{int(tc.rate)}"))
         name = f"scheduler_{tc.pattern}@{int(tc.rate)}rps"
         us = snap["total_p50_ms"] * 1e3
         common.emit(

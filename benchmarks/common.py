@@ -8,8 +8,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import sys
 import time
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -147,3 +148,43 @@ def emit_json(name: str, payload: Dict[str, Any], out_dir: str = "results"
         json.dump(payload, f, indent=2, sort_keys=True, default=float)
     print(f"# wrote {path}")
     return path
+
+
+def trace_dest(bench: str) -> Optional[str]:
+    """Where this benchmark writes its Chrome trace, or None (untraced).
+
+    ``--trace out.json`` on the benchmark's own command line wins;
+    otherwise ``REPRO_TRACE_DIR`` (set by ``benchmarks.run --trace-dir``)
+    maps to ``<dir>/<bench>.trace.json``.
+    """
+    argv = sys.argv[1:]
+    for i, a in enumerate(argv):
+        if a == "--trace" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--trace="):
+            return a.split("=", 1)[1]
+    d = os.environ.get("REPRO_TRACE_DIR")
+    if d:
+        os.makedirs(d, exist_ok=True)
+        return os.path.join(d, f"{bench}.trace.json")
+    return None
+
+
+def tag_trace(path: Optional[str], tag: str) -> Optional[str]:
+    """foo.json + 'disagg' -> foo.disagg.json — per-mode trace files for
+    benchmarks that serve the same trace through two configurations."""
+    if path is None:
+        return None
+    root, ext = os.path.splitext(path)
+    return f"{root}.{tag}{ext or '.json'}"
+
+
+def export_trace(tracer, path: Optional[str]) -> None:
+    """Export + schema-check a benchmark's trace (no-op when untraced)."""
+    if tracer is None or path is None:
+        return
+    from repro.serving.observability import validate_chrome_trace
+    payload = tracer.export(path)
+    problems = validate_chrome_trace(payload)
+    assert not problems, f"invalid chrome trace {path}: {problems[:3]}"
+    print(f"# wrote {path} ({len(payload['traceEvents'])} events)")

@@ -14,7 +14,11 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   prefix     — prefix-sharing COW pages vs private  (serving memory/prefill)
   chunked    — chunked vs serial prefill TTFT       (serving streaming/TTFT)
   disagg     — disaggregated vs interleaved prefill (serving backends/ITL)
+  obs_overhead — traced vs untraced throughput      (serving observability)
   roofline   — dry-run roofline table               (EXPERIMENTS §Roofline)
+
+``--trace-dir DIR`` makes every serving benchmark also export a Chrome
+trace-event JSON (load in Perfetto / chrome://tracing) to DIR.
 
 State (trained zoo + muxes) is cached under results/bench_state; set
 REPRO_BENCH_SCALE=smoke for a fast pass, =full for paper-scale steps.
@@ -22,6 +26,7 @@ REPRO_BENCH_SCALE=smoke for a fast pass, =full for paper-scale steps.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -54,9 +59,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,fig6,mux_kernel,"
-                         "scheduler,paged,prefix,chunked,disagg,roofline")
+                         "scheduler,paged,prefix,chunked,disagg,"
+                         "obs_overhead,roofline")
+    ap.add_argument("--trace-dir", default="",
+                    help="export a Chrome trace JSON per serving benchmark "
+                         "into this directory (Perfetto-loadable)")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.trace_dir:
+        # benchmarks pick the destination up via common.trace_dest()
+        os.environ["REPRO_TRACE_DIR"] = args.trace_dir
 
     def want(name):
         return only is None or name in only
@@ -96,6 +108,9 @@ def main() -> None:
     if want("disagg"):
         from benchmarks import bench_disagg
         bench_disagg.run()
+    if want("obs_overhead"):
+        from benchmarks import bench_obs_overhead
+        bench_obs_overhead.run()
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()

@@ -9,9 +9,12 @@ from repro.serving.engine import Engine, ServeConfig
 from repro.serving.kv_cache import (OutOfPages, PagePool, PagedCacheConfig,
                                     PagedSequence)
 from repro.serving.mux_server import MuxServer, MuxServerConfig
+from repro.serving.observability import (NULL_TRACER, Tracer,
+                                         validate_chrome_trace)
 
 __all__ = ["Engine", "ServeConfig", "MuxServer", "MuxServerConfig",
            "OutOfPages", "PagePool", "PagedCacheConfig", "PagedSequence",
            "ModelBackend", "BackendCapacity", "InProcessBackend",
            "InProcessMuxBackend", "DisaggregatedBackend",
-           "RemoteStubBackend"]
+           "RemoteStubBackend", "Tracer", "NULL_TRACER",
+           "validate_chrome_trace"]

@@ -54,6 +54,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.kv_cache import OutOfPages
+from repro.serving.observability.tracer import NULL_TRACER, backend_track
 
 
 @dataclasses.dataclass
@@ -81,6 +82,9 @@ class ModelBackend:
     lacks a surface fails loudly, not silently."""
 
     name: str = "backend"
+    #: tracing default: the shared no-op singleton, so an unbound
+    #: backend traces nothing at zero cost
+    _tracer = NULL_TRACER
     #: True when prefill and decode run on independent executors, so
     #: the scheduler may leave a prefill chunk in flight while it
     #: keeps sweeping the decode batch.
@@ -99,6 +103,13 @@ class ModelBackend:
         per-backend queue-wait and transfer timings through it."""
         self._metrics = metrics
         self._model_id = model_id
+
+    def bind_tracer(self, tracer) -> None:
+        """Attach the scheduler's tracer.  Backends emit one span per
+        device call on their executor tracks (and KV-transfer spans,
+        disaggregated); implementations that own engines/pools also
+        hand the tracer down so COW/reclaim/alloc instants record."""
+        self._tracer = tracer
 
     # ---- token-level surface ------------------------------------------
     def begin(self, prompt, *, max_new_tokens: int,
@@ -205,7 +216,7 @@ class _ExecutorMixin:
             if pool is not None:
                 pool.shutdown(wait=True)
 
-    async def _run(self, executor: str, fn, *args):
+    async def _run(self, executor: str, fn, *args, op: Optional[str] = None):
         pool = self._pools[executor]
         if pool is None:
             raise RuntimeError(
@@ -216,8 +227,19 @@ class _ExecutorMixin:
         t_submit = time.monotonic()
 
         def wrapped():
-            self._note_queue_wait(time.monotonic() - t_submit)
-            return fn(*args)
+            t_start = time.monotonic()
+            self._note_queue_wait(t_start - t_submit)
+            try:
+                return fn(*args)
+            finally:
+                tracer = self._tracer
+                if tracer.enabled:
+                    # executor-occupancy span: runs on the executor
+                    # thread itself, which the lock-free ring allows
+                    tracer.span(op or getattr(fn, "__name__", "call"),
+                                backend_track(self.name, executor),
+                                t_start, time.monotonic(),
+                                {"queued_ms": (t_start - t_submit) * 1e3})
 
         self._inflight += 1
         try:
@@ -298,6 +320,13 @@ class InProcessBackend(_ExecutorMixin, ModelBackend):
         self.name = name or f"inproc:{engine.cfg.name}"
         self._init_executors(["device"])
 
+    def bind_tracer(self, tracer) -> None:
+        super().bind_tracer(tracer)
+        self.engine.tracer = tracer
+        self.engine.trace_track = backend_track(self.name, "engine")
+        self.engine.pool.tracer = tracer
+        self.engine.pool.trace_track = backend_track(self.name, "pool")
+
     # ---- token-level ---------------------------------------------------
     def begin(self, prompt, *, max_new_tokens, seed=None, temperature=None,
               stop_tokens=()):
@@ -308,10 +337,11 @@ class InProcessBackend(_ExecutorMixin, ModelBackend):
     async def prefill_chunk(self, seq, *, chunk_tokens=None) -> bool:
         return await self._run(
             "device", lambda: self.engine.prefill_chunk(
-                seq, chunk_tokens=chunk_tokens))
+                seq, chunk_tokens=chunk_tokens), op="prefill_chunk")
 
     async def decode_batch(self, seqs):
-        return await self._run("device", self.engine.decode_step_batch, seqs)
+        return await self._run("device", self.engine.decode_step_batch, seqs,
+                               op="decode_step")
 
     def release(self, seq) -> None:
         if seq.pages:
@@ -319,7 +349,8 @@ class InProcessBackend(_ExecutorMixin, ModelBackend):
         seq.pages = []
 
     async def probe(self, prompt):
-        return await self._run("device", self.engine.prewarm_logits, prompt)
+        return await self._run("device", self.engine.prewarm_logits, prompt,
+                               op="probe")
 
     # ---- admission -----------------------------------------------------
     def capacity(self) -> BackendCapacity:
@@ -385,11 +416,13 @@ class InProcessMuxBackend(_ExecutorMixin, ModelBackend):
     async def step(self, bucket) -> np.ndarray:
         return await self._run(
             "device",
-            lambda: np.asarray(self.server.model_step(self.model_id, bucket)))
+            lambda: np.asarray(self.server.model_step(self.model_id, bucket)),
+            op="step")
 
     async def probe(self, bucket):
         return await self._run(
-            "device", lambda: np.asarray(self.server.probe_weights(bucket)))
+            "device", lambda: np.asarray(self.server.probe_weights(bucket)),
+            op="probe")
 
     def capacity(self) -> BackendCapacity:
         return BackendCapacity(decode_batch=self.bucket_capacity,
@@ -488,6 +521,16 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
                        prefix_sharing=False)
         return cls(pre, dec, name=name)
 
+    def bind_tracer(self, tracer) -> None:
+        super().bind_tracer(tracer)
+        for label, engine in (("prefill", self.prefill_engine),
+                              ("decode", self.decode_engine)):
+            engine.tracer = tracer
+            engine.trace_track = backend_track(self.name, f"{label}_engine")
+            engine.pool.tracer = tracer
+            engine.pool.trace_track = backend_track(self.name,
+                                                    f"{label}_pool")
+
     # ---- token-level ---------------------------------------------------
     def begin(self, prompt, *, max_new_tokens, seed=None, temperature=None,
               stop_tokens=()):
@@ -501,14 +544,15 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
         if not seq.prefill_done:
             done = await self._run(
                 "prefill", lambda: self.prefill_engine.prefill_chunk(
-                    seq, chunk_tokens=chunk_tokens))
+                    seq, chunk_tokens=chunk_tokens), op="prefill_chunk")
             if not done:
                 return False
         if getattr(seq, "owner_pool", None) is self.decode_engine.pool:
             return True                  # already transferred (retry path)
         t0 = time.monotonic()
         if getattr(seq, "transfer_package", None) is None:
-            pkg, n = await self._run("prefill", self._gather_stage, seq)
+            pkg, n = await self._run("prefill", self._gather_stage, seq,
+                                     op="kv_gather")
             self.prefill_engine.pool.release(seq)
             seq.pages = []
             seq.owner_pool = None
@@ -516,7 +560,7 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
         # OutOfPages below is backpressure: the package stays on the
         # sequence and the scheduler retries after decode frees
         dst = await self._run("decode", self._scatter_stage,
-                              seq.transfer_package)
+                              seq.transfer_package, op="kv_scatter")
         seq.pages = list(dst)
         seq.block_table[:] = self.decode_engine.pool.block_table(
             dst, self._max_pages)
@@ -525,7 +569,16 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
         seq.transfer_package = None
         self.transfers += 1
         self.transfer_pages += len(dst)
-        self._note_transfer(time.monotonic() - t0)
+        t1 = time.monotonic()
+        # transfer wait accumulates on the sequence so the scheduler
+        # can attribute it to the request (carved out of prefill)
+        seq.transfer_s = getattr(seq, "transfer_s", 0.0) + (t1 - t0)
+        tracer = self._tracer
+        if tracer.enabled:
+            tracer.span("KV_TRANSFER", backend_track(self.name, "transfer"),
+                        t0, t1, {"pages": len(dst),
+                                 "rid": getattr(seq, "trace_rid", None)})
+        self._note_transfer(t1 - t0)
         return True
 
     def _gather_stage(self, seq):
@@ -559,7 +612,8 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
 
     async def decode_batch(self, seqs):
         return await self._run("decode",
-                               self.decode_engine.decode_step_batch, seqs)
+                               self.decode_engine.decode_step_batch, seqs,
+                               op="decode_step")
 
     def release(self, seq) -> None:
         seq.transfer_package = None
@@ -571,7 +625,8 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
 
     async def probe(self, prompt):
         return await self._run("prefill",
-                               self.prefill_engine.prewarm_logits, prompt)
+                               self.prefill_engine.prewarm_logits, prompt,
+                               op="probe")
 
     # ---- admission -----------------------------------------------------
     def capacity(self) -> BackendCapacity:
@@ -883,6 +938,13 @@ class RemoteStubBackend(ModelBackend):
             if fut is not None and not fut.done():
                 fut.set_result(msg)     # fire-and-forget replies drop here
 
+    def bind_tracer(self, tracer) -> None:
+        # control-plane: the inner backend serves the device work, so
+        # its executor/engine/pool instrumentation must see the tracer
+        # too; this side traces the wire round-trips
+        super().bind_tracer(tracer)
+        self.inner.bind_tracer(tracer)
+
     async def _call(self, op: str, body: Optional[Dict] = None
                     ) -> Dict[str, Any]:
         if self._server_task is None:
@@ -892,10 +954,15 @@ class RemoteStubBackend(ModelBackend):
         fut = asyncio.get_running_loop().create_future()
         self._pending[mid] = fut
         self.messages_sent += 1
+        tracer = self._tracer
+        t0 = time.monotonic() if tracer.enabled else 0.0
         self.channel.to_server.put_nowait(
             wire_encode({"v": WIRE_VERSION, "id": mid, "op": op,
                          "body": body or {}}))
         msg = await fut
+        if tracer.enabled:
+            tracer.span(op, backend_track(self.name, "wire"), t0,
+                        time.monotonic(), {"mid": mid})
         if "err" in msg:
             err = msg["err"]
             exc = _WIRE_ERRORS.get(err["type"], RuntimeError)(err["msg"])

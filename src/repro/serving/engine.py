@@ -34,6 +34,7 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
 from repro.models.attention import SCRATCH_PAGE
 from repro.serving.kv_cache import OutOfPages, PagePool, PagedSequence
+from repro.serving.observability.tracer import NULL_TRACER
 from repro.sharding.partition import axis_rules
 
 
@@ -113,6 +114,11 @@ class Engine:
         self._layer_spans: Optional[List[Tuple[str, int]]] = None
         self._span_reclaim = True
         self.reclaimed_pages = 0
+        # tracing: COW / span-reclaim / logit-cache-hit / prewarm
+        # instants record here when a backend binds a live tracer
+        # (bind_tracer sets both attrs); the null default costs nothing
+        self.tracer = NULL_TRACER
+        self.trace_track = f"engine:{cfg.name}/events"
 
     @property
     def caches_poisoned(self) -> bool:
@@ -331,6 +337,8 @@ class Engine:
         if freed:
             self.pool.decref(freed)
             self.reclaimed_pages += len(freed)
+            self.tracer.instant("span_reclaim", track=self.trace_track,
+                                args={"pages": len(freed), "pos": pos})
 
     # ---- probe-path prewarm -------------------------------------------
     def prewarm_logits(self, prompt) -> Optional[np.ndarray]:
@@ -358,6 +366,9 @@ class Engine:
         while len(self._prewarmed) > self._prewarm_cap:
             _, old = self._prewarmed.popitem(last=False)
             self.pool.release(old)
+        self.tracer.instant("prewarm", track=self.trace_track,
+                            args={"pages": len(seq.pages),
+                                  "residents": len(self._prewarmed)})
         return self._logit_cache_get(key)
 
     def shed_prewarmed(self) -> int:
@@ -508,6 +519,9 @@ class Engine:
                 self.logit_cache_hits += 1
                 self.prefill_tokens_shared += p
                 seq.shared_prefix_len = p
+                self.tracer.instant("logit_cache_hit",
+                                    track=self.trace_track,
+                                    args={"prompt_len": int(p)})
                 self._seal_prefill(seq, tok)
 
     def _grow_pages(self, seq: PagedSequence, upto: int) -> None:
@@ -739,6 +753,8 @@ class Engine:
         seq.pages[idx] = new
         seq.block_table[idx] = new
         self.cow_count += 1
+        self.tracer.instant("cow", track=self.trace_track,
+                            args={"old": int(old), "new": int(new)})
 
     def generate_paged(self, prompt, *, max_new_tokens: int,
                        seed: Optional[int] = None,

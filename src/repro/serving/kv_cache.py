@@ -43,6 +43,7 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.models.attention import SCRATCH_PAGE
+from repro.serving.observability.tracer import NULL_TRACER
 
 
 class OutOfPages(ValueError):
@@ -239,6 +240,10 @@ class PagePool:
         # each may yet need refcount-1 copy-on-write allocations
         self._cow_risk: Set[int] = set()
         self.peak_in_use = 0
+        # tracing: alloc/free instants record here when a backend binds
+        # a live tracer (it sets both attrs); the null default is free
+        self.tracer = NULL_TRACER
+        self.trace_track = "pool/events"
 
     # ---- geometry -----------------------------------------------------
     @property
@@ -297,6 +302,10 @@ class PagePool:
             for pg in pages:
                 self._ref[pg] = 1
             self.peak_in_use = max(self.peak_in_use, len(self._ref))
+            if self.tracer.enabled:
+                self.tracer.instant("page_alloc", track=self.trace_track,
+                                    args={"n": n,
+                                          "free": len(self._free)})
             return pages
 
     def refcount(self, page: int) -> int:
@@ -328,6 +337,7 @@ class PagePool:
                 raise ValueError(
                     f"double free / foreign pages "
                     f"{sorted(bad) or list(pages)}")
+            freed = 0
             for pg in pages:
                 pg = int(pg)
                 self._ref[pg] -= 1
@@ -336,9 +346,14 @@ class PagePool:
                     self._index.drop_page(pg)
                     self._cow_risk.discard(pg)
                     heapq.heappush(self._free, pg)
+                    freed += 1
                 elif self._ref[pg] == 1:
                     # exclusive again: no copy-on-write can be pending
                     self._cow_risk.discard(pg)
+            if freed and self.tracer.enabled:
+                self.tracer.instant("page_free", track=self.trace_track,
+                                    args={"n": freed,
+                                          "free": len(self._free)})
 
     def free(self, pages: Sequence[int]) -> None:
         """Decref-to-zero compatibility alias: with refcounts, "free"

@@ -1,0 +1,13 @@
+"""repro.serving.observability — request-level tracing, Perfetto
+export, gauge sampling, and the flight recorder for the serving stack
+(see tracer.py for the design notes)."""
+from repro.serving.observability.gauges import prewarm_residents, sample_gauges
+from repro.serving.observability.tracer import (GAUGE_TRACK, NULL_TRACER,
+                                                SCHED_TRACK, NullTracer,
+                                                Tracer, backend_track,
+                                                request_track,
+                                                validate_chrome_trace)
+
+__all__ = ["Tracer", "NullTracer", "NULL_TRACER", "SCHED_TRACK",
+           "GAUGE_TRACK", "backend_track", "request_track",
+           "validate_chrome_trace", "sample_gauges", "prewarm_residents"]

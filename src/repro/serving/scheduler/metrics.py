@@ -17,16 +17,30 @@ cannot meet, and its hard-shed path counts BUDGET_EXCEEDED drops
 here.  Backends feed per-backend executor queue waits and
 (disaggregated) prefill->decode KV transfer timings through
 ``on_backend_queue_wait``/``on_transfer``.
+
+The registry is also the tracing bridge (``bind_tracer``): every
+terminal request flows through ``on_complete``/``on_fail``/
+``on_cancel``, so this is where the per-request span timeline
+(ADMIT/QUEUED/PREFILL/DECODE/FINISH, reconstructed from the request's
+lifecycle timestamps — zero hot-path cost) and the degrade/shed
+decision instants are emitted, where the flight recorder trips on
+request failure or SLO violation, and where the tracer's instant
+stream is consumed back into snapshot-visible counts.  Latency
+attribution decomposes each completed request into queue / prefill /
+transfer-wait / decode phases and keeps per-model TTFT and ITL
+reservoirs alongside the global ones.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import random
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.observability.tracer import NULL_TRACER, request_track
 from repro.serving.scheduler.request import Request
 
 
@@ -93,22 +107,112 @@ class SchedulerMetrics:
         self.per_model_completed = [0] * n
         self.per_model_busy_s = [0.0] * n
         self.flops_total = 0.0
-        self.queue_lat = LatencyReservoir()
-        self.service_lat = LatencyReservoir()
-        self.total_lat = LatencyReservoir()
-        self.ttft_lat = LatencyReservoir()       # arrival -> first token
-        self.itl_lat = LatencyReservoir()        # inter-token gaps
+        # every reservoir gets a distinct seed: identical latency
+        # streams into same-seeded reservoirs would evict correlated
+        # slots and skew cross-reservoir percentile comparisons
+        self._seeds = itertools.count(1)
+        self.queue_lat = self._reservoir()
+        self.service_lat = self._reservoir()
+        self.total_lat = self._reservoir()
+        self.ttft_lat = self._reservoir()        # arrival -> first token
+        self.itl_lat = self._reservoir()         # inter-token gaps
+        # queue wait of requests that never completed (failed /
+        # cancelled after admission) — kept OUT of queue_lat so a
+        # shed-heavy run cannot report rosy queue percentiles, but
+        # visible in its own snapshot keys
+        self.rejected_queue_lat = self._reservoir()
+        # latency attribution: end-to-end decomposed per request
+        self.phase_lat = {name: self._reservoir()
+                          for name in ("queue", "prefill", "transfer",
+                                       "decode")}
+        self.ttft_by_model = [self._reservoir() for _ in range(n)]
+        self.itl_by_model = [self._reservoir() for _ in range(n)]
         # per-backend executor timings (backends feed these through the
         # bind_metrics hook): time a device call waited on its
         # backend's queue before running, and — disaggregated — the
         # prefill->decode KV transfer duration
-        self.backend_queue_wait = [LatencyReservoir() for _ in range(n)]
-        self.transfer_lat = [LatencyReservoir() for _ in range(n)]
+        self.backend_queue_wait = [self._reservoir() for _ in range(n)]
+        self.transfer_lat = [self._reservoir() for _ in range(n)]
         self.transfers = [0] * n
+        self.tracer = NULL_TRACER
+        self.trace_instants: Dict[str, int] = {}
         self._service_ema: List[Optional[float]] = [None] * n
         self.started_t: Optional[float] = None
         self.stopped_t: Optional[float] = None
         self._elapsed_accum = 0.0       # serving time of finished runs
+
+    def _reservoir(self) -> LatencyReservoir:
+        return LatencyReservoir(seed=next(self._seeds))
+
+    # ---- tracing bridge -----------------------------------------------
+    def bind_tracer(self, tracer) -> None:
+        """Attach the scheduler's tracer.  The registry both *feeds*
+        it (request span timelines, degrade/shed instants, flight-
+        recorder trips) and *consumes* its instant stream into
+        ``trace_instants`` for the snapshot."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.enabled:
+            self.tracer.add_consumer(self._consume_event)
+
+    def _consume_event(self, ev) -> None:
+        # runs on whatever thread recorded the event: keep it to one
+        # dict update, and never trace from here
+        if ev[1] == "i":
+            name = ev[2]
+            self.trace_instants[name] = self.trace_instants.get(name, 0) + 1
+
+    def _phase_breakdown(self, req: Request):
+        """(queue, prefill, transfer, decode) seconds for a terminal
+        request, from its lifecycle timestamps.  Transfer wait (the
+        disaggregated KV move) is carved out of the prefill phase —
+        the backend accumulates it on the sequence and the scheduler
+        copies it onto the request at retire."""
+        queue = (max(req.started_t - req.admitted_t, 0.0)
+                 if req.admitted_t > 0 and req.started_t > 0 else 0.0)
+        transfer = req.transfer_wait_s
+        prefill = decode = 0.0
+        if req.started_t > 0 and req.first_token_t > 0:
+            prefill = max(req.first_token_t - req.started_t - transfer, 0.0)
+            decode = max(req.finished_t - req.first_token_t, 0.0)
+        return queue, prefill, transfer, decode
+
+    def _trace_request(self, req: Request) -> None:
+        """Emit the request's span timeline onto its own track.  The
+        chain is reconstructed from timestamps the schedulers already
+        record, so tracing adds nothing to the hot path; a request
+        that failed before reaching a phase simply has a shorter
+        chain."""
+        tracer = self.tracer
+        if not tracer.enabled:
+            return
+        track = request_track(req.rid)
+        args = {"model": req.model_id}
+        if req.admitted_t > 0:
+            tracer.instant("ADMIT", track=track, args=args, t=req.admitted_t)
+            if req.started_t > 0:
+                tracer.span("QUEUED", track, req.admitted_t, req.started_t,
+                            args)
+        if req.started_t > 0 and req.first_token_t > 0:
+            tracer.span("PREFILL", track, req.started_t, req.first_token_t,
+                        {"model": req.model_id,
+                         "transfer_wait_ms": req.transfer_wait_s * 1e3})
+            tracer.span("DECODE", track, req.first_token_t, req.finished_t,
+                        args)
+        tracer.instant("FINISH", track=track, t=req.finished_t,
+                       args={"model": req.model_id,
+                             "reason": req.finish_reason,
+                             "state": req.state.value})
+
+    def _note_rejected(self, req: Request) -> None:
+        """Satellite bugfix: a failed/cancelled request's queue wait
+        must be measured *somewhere* — but not in queue_lat, whose
+        percentiles describe served traffic.  Shed requests
+        (admitted_t == 0) never queued, so they only count."""
+        if req.admitted_t <= 0:
+            return
+        end = req.started_t if req.started_t > 0 else req.finished_t
+        if end >= req.admitted_t:
+            self.rejected_queue_lat.add(end - req.admitted_t)
 
     # ---- lifecycle ----------------------------------------------------
     # counters are cumulative across restarts, so elapsed must be too —
@@ -148,6 +252,13 @@ class SchedulerMetrics:
         ttft = req.ttft
         if ttft is not None:
             self.ttft_lat.add(ttft)
+            if 0 <= req.model_id < len(self.ttft_by_model):
+                self.ttft_by_model[req.model_id].add(ttft)
+        queue, prefill, transfer, decode = self._phase_breakdown(req)
+        self.phase_lat["queue"].add(queue)
+        self.phase_lat["prefill"].add(prefill)
+        self.phase_lat["transfer"].add(transfer)
+        self.phase_lat["decode"].add(decode)
         prev = self._service_ema[req.model_id]
         obs = req.service_latency
         self._service_ema[req.model_id] = (
@@ -156,25 +267,38 @@ class SchedulerMetrics:
             + (1.0 - self.SERVICE_EMA_ALPHA) * prev)
         if req.missed_deadline():
             self.slo_violations += 1
+            self.tracer.trip("slo_violation")
+        self._trace_request(req)
 
     def on_fail(self, req: Request) -> None:
         self.failed += 1
+        self._note_rejected(req)
+        self._trace_request(req)
+        self.tracer.trip("request_failed")
 
     def on_cancel(self, req: Request) -> None:
         self.cancelled += 1
+        self._note_rejected(req)
+        self._trace_request(req)
 
     def on_degrade(self, req: Request, from_model: int, to_model: int) -> None:
         self.deadline_degraded += 1
+        self.tracer.instant("degrade", args={"rid": req.rid,
+                                             "from": from_model,
+                                             "to": to_model})
 
     def on_shed(self, req: Request) -> None:
         """One hard load shed (BUDGET_EXCEEDED); the accompanying
         on_fail keeps the arrived == completed+failed+cancelled books
         closed — this counter is the policy-level why."""
         self.budget_exceeded += 1
+        self.tracer.instant("shed", args={"rid": req.rid})
 
-    def on_decode_gap(self, seconds: float) -> None:
+    def on_decode_gap(self, model_id: int, seconds: float) -> None:
         """One inter-token gap from the continuous-decode loop."""
         self.itl_lat.add(seconds)
+        if 0 <= model_id < len(self.itl_by_model):
+            self.itl_by_model[model_id].add(seconds)
 
     def on_backend_queue_wait(self, model_id: int, seconds: float) -> None:
         """Time one device call spent queued on its backend's executor
@@ -245,4 +369,32 @@ class SchedulerMetrics:
             "transfer_p99_ms": [r.percentile_ms(99)
                                 for r in self.transfer_lat],
             "transfer_count": list(self.transfers),
+            # rejected traffic's queue wait (failed/cancelled after
+            # admission) — deliberately not mixed into queue_*_ms
+            "rejected_count": len(self.rejected_queue_lat),
+            "rejected_queue_p50_ms": self.rejected_queue_lat.percentile_ms(50),
+            "rejected_queue_p99_ms": self.rejected_queue_lat.percentile_ms(99),
+            # latency attribution: where a completed request's time went
+            "phase_queue_p50_ms": self.phase_lat["queue"].percentile_ms(50),
+            "phase_queue_p99_ms": self.phase_lat["queue"].percentile_ms(99),
+            "phase_prefill_p50_ms":
+                self.phase_lat["prefill"].percentile_ms(50),
+            "phase_prefill_p99_ms":
+                self.phase_lat["prefill"].percentile_ms(99),
+            "phase_transfer_p50_ms":
+                self.phase_lat["transfer"].percentile_ms(50),
+            "phase_transfer_p99_ms":
+                self.phase_lat["transfer"].percentile_ms(99),
+            "phase_decode_p50_ms": self.phase_lat["decode"].percentile_ms(50),
+            "phase_decode_p99_ms": self.phase_lat["decode"].percentile_ms(99),
+            "ttft_p50_ms_by_model": [r.percentile_ms(50)
+                                     for r in self.ttft_by_model],
+            "ttft_p99_ms_by_model": [r.percentile_ms(99)
+                                     for r in self.ttft_by_model],
+            "itl_p50_ms_by_model": [r.percentile_ms(50)
+                                    for r in self.itl_by_model],
+            "itl_p99_ms_by_model": [r.percentile_ms(99)
+                                    for r in self.itl_by_model],
+            "trace_instants": dict(self.trace_instants),
+            "trace": (self.tracer.stats() if self.tracer.enabled else None),
         }

@@ -115,6 +115,10 @@ class Request:
     started_t: float = 0.0
     first_token_t: float = 0.0       # TTFT = first_token_t - arrival_t
     finished_t: float = 0.0
+    transfer_wait_s: float = 0.0     # disaggregated KV-transfer time the
+    #   request spent between prefill and decode (copied from the
+    #   backend sequence at retire); latency attribution carves it out
+    #   of the prefill phase
 
     output: Any = None
     finish_reason: str = ""

@@ -51,6 +51,9 @@ from repro.core import routing
 from repro.serving.backend import (InProcessBackend, InProcessMuxBackend,
                                    ModelBackend)
 from repro.serving.kv_cache import OutOfPages
+from repro.serving.observability import (NULL_TRACER, backend_track,
+                                         prewarm_residents, request_track,
+                                         sample_gauges)
 from repro.serving.scheduler.admission import AdmissionController
 from repro.serving.scheduler.batcher import (BatchingPolicy, DecodeSlots,
                                              MicroBatcher, ModelQueue)
@@ -85,12 +88,21 @@ class SchedulerLifecycle:
     """
 
     def _init_lifecycle(self, n_workers: int, clock,
-                        backends: Sequence[ModelBackend] = ()) -> None:
+                        backends: Sequence[ModelBackend] = (),
+                        tracer=None) -> None:
         self.clock = clock
         self._n_workers = n_workers
         self._lc_backends = list(backends)
+        # the tracer fans out to every layer: metrics emits the
+        # per-request span timelines (and consumes instants back),
+        # backends emit executor + KV-transfer spans, and their
+        # engines/pools emit COW/reclaim/alloc instants
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics.bind_tracer(self.tracer)
         for m, b in enumerate(self._lc_backends):
             b.bind_metrics(self.metrics, m)
+            b.bind_tracer(self.tracer)
+        self._gauge_task: Optional[asyncio.Task] = None
         self._events = [asyncio.Event() for _ in range(n_workers)]
         self._workers: List[asyncio.Task] = []
         self._running = False
@@ -112,6 +124,15 @@ class SchedulerLifecycle:
         self.metrics.on_start(self.clock())
         self._workers = [asyncio.ensure_future(self._worker(m))
                          for m in range(self._n_workers)]
+        if self.tracer.enabled and self.tracer.gauge_interval_s > 0:
+            self._gauge_task = asyncio.ensure_future(self._gauge_loop())
+
+    async def _gauge_loop(self) -> None:
+        """Periodic gauge sampling into the tracer ring while the
+        scheduler runs (see observability.gauges)."""
+        while True:
+            sample_gauges(self.tracer, self)
+            await asyncio.sleep(self.tracer.gauge_interval_s)
 
     async def stop(self, drain: bool = True) -> None:
         """Graceful shutdown: stop accepting, flush/finish every queued
@@ -144,6 +165,13 @@ class SchedulerLifecycle:
             if not fut.done():          # belt: a future fail() couldn't
                 fut.cancel()            # resolve must still unblock
         self._workers = []
+        if self._gauge_task is not None:
+            self._gauge_task.cancel()
+            with contextlib.suppress(asyncio.CancelledError):
+                await self._gauge_task
+            self._gauge_task = None
+            # one final sample so sub-interval runs still trace gauges
+            sample_gauges(self.tracer, self)
         self.metrics.on_stop(self.clock())
         # backends drain their executors before the pools are touched:
         # a zombie device call must never race the reclamation below
@@ -251,7 +279,8 @@ class MuxScheduler(SchedulerLifecycle):
 
     def __init__(self, server, cfg: Optional[SchedulerConfig] = None,
                  clock=time.monotonic, *,
-                 backends: Optional[Sequence[ModelBackend]] = None):
+                 backends: Optional[Sequence[ModelBackend]] = None,
+                 tracer=None):
         # clock parameterizes timestamps/deadlines for testability, but
         # worker waits still run on the event loop's real time — it
         # must advance with wall clock (a frozen fake clock would keep
@@ -276,7 +305,7 @@ class MuxScheduler(SchedulerLifecycle):
             deadline_degrade=self.cfg.deadline_degrade,
             backends=self.backends,
             shed_on_overload=self.cfg.shed_on_overload)
-        self._init_lifecycle(n, clock, self.backends)
+        self._init_lifecycle(n, clock, self.backends, tracer=tracer)
 
     def warmup(self, sample_x) -> None:
         """Compile the probe and every model step at their serving
@@ -406,6 +435,14 @@ class MuxScheduler(SchedulerLifecycle):
             np.asarray(x)[None], self.cfg.max_batch_size)
         return np.asarray(self.server.model_step(model_id, bucket))[0]
 
+    # ---- report -------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Metrics snapshot plus per-backend stats — the same
+        dashboard surface the paged scheduler exposes."""
+        snap = self.metrics.snapshot()
+        snap["backends"] = [b.stats() for b in self.backends]
+        return snap
+
 
 # ===========================================================================
 # Token-level continuous decode over paged engines (the LLM path)
@@ -431,6 +468,7 @@ class _Prefilling:
     holding pages (everything its backend sequence lists)."""
     req: Request
     seq: Any            # backend sequence handle (PagedSequence or mirror)
+    chunks: int = 0     # chunks already run (PREFILL_CHUNK[i] span index)
 
 
 class PagedLLMScheduler(SchedulerLifecycle):
@@ -485,7 +523,7 @@ class PagedLLMScheduler(SchedulerLifecycle):
                  *, backends: Optional[Sequence[ModelBackend]] = None,
                  select_fn: Optional[Callable[[Any], int]] = None,
                  costs: Optional[Sequence[float]] = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, tracer=None):
         if backends is None:
             if not engines:
                 raise ValueError("pass paged engines or backends")
@@ -509,8 +547,9 @@ class PagedLLMScheduler(SchedulerLifecycle):
         self.interleaved_chunks = 0        # chunks run while decoding
         self.prefill_evictions = 0         # chunk-starvation evictions
         self._prefilling: List[List[_Prefilling]] = [[] for _ in range(n)]
+        self._inflight_chunks = 0          # chunk tasks currently in flight
         self._dead = [False] * n    # backend died (see _worker)
-        self._init_lifecycle(n, clock, self.backends)
+        self._init_lifecycle(n, clock, self.backends, tracer=tracer)
 
     def _chunk_tokens(self, backend: ModelBackend) -> Optional[int]:
         if self.cfg.prefill_chunk_pages <= 0:
@@ -678,6 +717,8 @@ class PagedLLMScheduler(SchedulerLifecycle):
                             self.metrics.on_fail(req)
                         continue                # request-local: keep going
                     progressed = True
+                    seq.trace_rid = req.rid   # lets backend-side spans
+                    #   (KV_TRANSFER) name the request they serve
                     req.on_prefill_progress(seq.prefill_pos, self.clock())
                     prefilling.append(_Prefilling(req, seq))
 
@@ -749,12 +790,21 @@ class PagedLLMScheduler(SchedulerLifecycle):
                     self.metrics.on_batch(m, len(active), slots.capacity)
                     self.metrics.on_model_busy(m, t1 - t0)
                     self.tokens_generated += len(active)
+                    if self.tracer.enabled:
+                        self.tracer.span(
+                            "DECODE_STEP", backend_track(backend.name,
+                                                         "decode"),
+                            t0, t1,
+                            {"model": m, "batch": len(active),
+                             "pages": sum(len(getattr(e.seq, "pages", ()))
+                                          for e in active)})
                     for e in active:
                         if not e.req.is_terminal:
                             e.req.on_token(int(e.seq.tokens[-1]),
                                            e.seq.pos, t1)
                         if e.last_token_t:
-                            self.metrics.on_decode_gap(t1 - e.last_token_t)
+                            self.metrics.on_decode_gap(m,
+                                                       t1 - e.last_token_t)
                         e.last_token_t = t1
                         if e.seq.done:
                             self._retire(m, e, t1)
@@ -792,8 +842,18 @@ class PagedLLMScheduler(SchedulerLifecycle):
         """One backend round of ``prefill_chunk`` for ``ent``.
         Returns True on progress, False on backpressure, None when the
         backend died (the worker must exit)."""
+        self._inflight_chunks += 1      # gauge: chunk tasks in flight
+        try:
+            return await self._chunk_once(m, ent, chunk_tokens)
+        finally:
+            self._inflight_chunks -= 1
+
+    async def _chunk_once(self, m: int, ent: _Prefilling,
+                          chunk_tokens: Optional[int]) -> Optional[bool]:
         backend = self.backends[m]
         prefilling, slots = self._prefilling[m], self.slots[m]
+        tracer = self.tracer
+        t0 = self.clock() if tracer.enabled else 0.0
         chunk_fut = asyncio.ensure_future(
             backend.prefill_chunk(ent.seq, chunk_tokens=chunk_tokens))
         try:
@@ -830,6 +890,8 @@ class PagedLLMScheduler(SchedulerLifecycle):
                 backend.release(ent.seq)
                 if not ent.req.is_terminal:
                     self.queues[m].push(ent.req, self.clock())
+                    tracer.instant("oop_requeue",
+                                   args={"rid": ent.req.rid, "model": m})
                 return False
             if not slots.active():
                 # mid-prefill starvation with nothing decoding: evict
@@ -845,6 +907,9 @@ class PagedLLMScheduler(SchedulerLifecycle):
                 if not victim.req.is_terminal:   # see requeue note above
                     self.queues[m].push(victim.req, self.clock())
                     self.prefill_evictions += 1
+                    tracer.instant("prefill_eviction",
+                                   args={"victim": victim.req.rid,
+                                         "for": ent.req.rid, "model": m})
                 return True
             return False        # decode frees are coming: retry next sweep
         except Exception as exc:
@@ -863,6 +928,13 @@ class PagedLLMScheduler(SchedulerLifecycle):
         if slots.active():
             self.interleaved_chunks += 1
         t = self.clock()
+        if tracer.enabled:
+            tracer.span(f"PREFILL_CHUNK[{ent.chunks}]",
+                        request_track(ent.req.rid), t0, t,
+                        {"model": m, "backend": backend.name,
+                         "prefill_pos": ent.seq.prefill_pos,
+                         "pages": len(getattr(ent.seq, "pages", ()))})
+        ent.chunks += 1
         ent.req.on_prefill_progress(ent.seq.prefill_pos, t)
         if done:
             prefilling.remove(ent)
@@ -926,6 +998,10 @@ class PagedLLMScheduler(SchedulerLifecycle):
         # Eq. 14 meaning vs always-largest); token counts are reported
         # separately via tokens_generated
         req.flops = self.metrics.costs[m]
+        # disaggregated backends accumulate KV-transfer time on the
+        # sequence; hand it to the request so latency attribution can
+        # carve transfer wait out of the prefill phase
+        req.transfer_wait_s = getattr(entry.seq, "transfer_s", 0.0)
         out = np.concatenate([np.asarray(req.x, np.int32),
                               np.asarray(entry.seq.tokens, np.int32)])
         if req.complete(out, t, reason=entry.seq.finish_reason):
@@ -955,5 +1031,22 @@ class PagedLLMScheduler(SchedulerLifecycle):
             "transfers": total("transfers"),
             "pools": [s.get("pool") for s in bstats],
             "backends": bstats,
+        })
+        # flattened pool/cache gauges: the dashboard-facing view of
+        # PagePool.stats() and the engine caches (summed over backends;
+        # the per-backend breakdown stays in "backends"/"pools")
+        pools = [p for p in snap["pools"] if p]
+        hits, misses = snap["logit_cache_hits"], snap["logit_cache_misses"]
+        snap.update({
+            "pool_pages_in_use": sum(p["pages_in_use"] for p in pools),
+            "pool_peak_pages_in_use": sum(p["peak_pages_in_use"]
+                                          for p in pools),
+            "pool_shared_pages": sum(p["shared_pages"] for p in pools),
+            "pool_cow_headroom": sum(p["cow_headroom"] for p in pools),
+            "logit_cache_hit_rate": (hits / (hits + misses)
+                                     if hits + misses else 0.0),
+            "prewarm_residents": sum(prewarm_residents(b) or 0
+                                     for b in self.backends),
+            "inflight_chunks": self._inflight_chunks,
         })
         return snap
