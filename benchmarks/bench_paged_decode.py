@@ -1,4 +1,6 @@
-"""Ring-buffer vs paged KV cache at mixed request lengths.
+"""Ring-buffer vs paged KV cache at mixed request lengths, plus the
+GQA-grouped decode-kernel contract (bytes/token and tokens/s vs the
+per-head grid).
 
 Closed-form demo on a random-init mini decoder (no accelerator, no
 trained state): the same model serves a trace of requests with very
@@ -25,6 +27,7 @@ results/BENCH_paged_decode.json.
 from __future__ import annotations
 
 import asyncio
+import functools
 import time
 from typing import Dict, List
 
@@ -36,7 +39,8 @@ from benchmarks import common
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
-from repro.serving.kv_cache import pool_bytes_per_page, ring_cache_bytes
+from repro.serving.kv_cache import (pool_bytes_per_page, pool_bytes_per_token,
+                                    ring_cache_bytes)
 from repro.serving.observability import Tracer
 from repro.serving.scheduler import PagedLLMConfig, PagedLLMScheduler
 
@@ -142,9 +146,74 @@ def bench_paged(cfg: ModelConfig, params, prompts,
         "num_pages": stats["num_pages"],
         "page_size": stats["page_size"],
         "bytes_per_page": per_page,
+        # pool STORAGE per token — the roofline's floor on what one
+        # full-stack decode step must re-read per token per layer
+        "pool_bytes_per_token": pool_bytes_per_token(cfg, PAGE_SIZE,
+                                                     jnp.float32),
         "cache_bytes": stats["peak_pages_in_use"] * per_page,
         "mean_batch_fill": snap["mean_batch_fill"],
     }
+
+
+def bench_kernel_grouping() -> Dict:
+    """Grouped (KV-head grid) vs per-head paged decode kernel on a g=8
+    GQA config: token-identical outputs, analytic HBM bytes/token ratio
+    of exactly K/H, and steady-state step time (jitted interpret-mode
+    Pallas, compile excluded — execution cost tracks the grid, which is
+    g-fold smaller grouped).  The asserts ARE the PR's perf contract.
+    """
+    from repro.kernels import paged_attention as pk
+    B, H, K, hd, ps, M = 4, 8, 1, 16, 8, 4           # g = 8 (MQA-like GQA)
+    g = H // K
+    pages = 1 + B * M
+    rng = np.random.RandomState(7)
+    q = jnp.asarray(rng.randn(B, H, hd), jnp.float32)
+    k_pages = jnp.asarray(rng.randn(pages, ps, K, hd), jnp.float32)
+    v_pages = jnp.asarray(rng.randn(pages, ps, K, hd), jnp.float32)
+    bt = np.arange(1, 1 + B * M).reshape(B, M).astype(np.int32)
+    lengths = np.array([3, 11, 25, 32], np.int32)    # mixed: short rows
+    btj, lj = jnp.asarray(bt), jnp.asarray(lengths)  # skip pages
+
+    outs: Dict[bool, np.ndarray] = {}
+    step_s: Dict[bool, float] = {}
+    for grouped in (False, True):
+        f = jax.jit(functools.partial(pk.paged_attention, grouped=grouped,
+                                      interpret=True))
+        outs[grouped] = np.asarray(f(q, k_pages, v_pages, btj, lj))
+        best = float("inf")
+        for _ in range(20):
+            t0 = time.perf_counter()
+            f(q, k_pages, v_pages, btj, lj).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        step_s[grouped] = best
+
+    hbm = {grouped: pk.decode_hbm_bytes(k_pages, v_pages, bt, lengths,
+                                        num_q_heads=H, grouped=grouped)
+           for grouped in (False, True)}
+    res = {
+        "config": {"batch": B, "num_heads": H, "num_kv_heads": K,
+                   "group": g, "head_dim": hd, "page_size": ps,
+                   "pages_per_row": M, "lengths": lengths.tolist()},
+        "hbm_bytes_per_token": {
+            "grouped": hbm[True] / B,
+            "per_head": hbm[False] / B,
+            "ratio": hbm[True] / hbm[False],
+        },
+        "step_us": {"grouped": step_s[True] * 1e6,
+                    "per_head": step_s[False] * 1e6},
+        "tokens_per_s": {"grouped": B / step_s[True],
+                         "per_head": B / step_s[False]},
+        "token_identical": bool(np.array_equal(outs[True], outs[False])),
+    }
+    # ---- the grouped-kernel contract, asserted -----------------------
+    assert res["token_identical"], \
+        "grouped kernel output diverged from the per-head kernel"
+    assert hbm[True] / hbm[False] <= 1 / g + 0.15, \
+        f"grouped bytes/token {hbm[True] / hbm[False]:.3f} of per-head " \
+        f"exceeds 1/g + 0.15 = {1 / g + 0.15:.3f} at g={g}"
+    assert res["tokens_per_s"]["grouped"] > res["tokens_per_s"]["per_head"], \
+        f"grouped decode not faster: {res['step_us']}"
+    return res
 
 
 def run() -> None:
@@ -156,6 +225,7 @@ def run() -> None:
     tracer = Tracer() if trace else None
     paged = bench_paged(cfg, params, prompts, tracer=tracer)
     common.export_trace(tracer, trace)
+    kernel = bench_kernel_grouping()
 
     saving = ring["cache_bytes"] / max(paged["cache_bytes"], 1)
     common.emit(
@@ -175,12 +245,24 @@ def run() -> None:
         f"mixed_admission_batches={paged['mixed_admission_batches']} "
         f"batch_fill={paged['mean_batch_fill']:.2f} "
         f"cache_saving={saving:.2f}x pages_freed=all")
+    common.emit(
+        "paged_decode_kernel",
+        kernel["step_us"]["grouped"],
+        f"grouped_tokens_per_s={kernel['tokens_per_s']['grouped']:.1f} "
+        f"per_head_tokens_per_s={kernel['tokens_per_s']['per_head']:.1f} "
+        f"hbm_bytes_per_token={kernel['hbm_bytes_per_token']['grouped']:.0f} "
+        f"bytes_ratio={kernel['hbm_bytes_per_token']['ratio']:.3f} "
+        f"token_identical={kernel['token_identical']}")
     common.emit_json("paged_decode", {
         "config": {"max_len": MAX_LEN, "max_new_tokens": MAX_NEW,
                    "page_size": PAGE_SIZE, "prompt_lens": PROMPT_LENS,
                    "decode_batch": DECODE_BATCH},
         "ring": ring,
         "paged": paged,
+        "kernel": kernel,
+        # the bench-trajectory key: measured decode K/V HBM bytes per
+        # generated token of the grouped kernel on the g=8 microbench
+        "hbm_bytes_per_token": kernel["hbm_bytes_per_token"]["grouped"],
         "cache_bytes_saving_factor": saving,
     })
 

@@ -71,6 +71,10 @@ def _prompts(cfg: ModelConfig) -> List[np.ndarray]:
         tail = np.asarray(jax.random.randint(jax.random.fold_in(key, i + 1),
                                              (sl,), 0, cfg.vocab_size))
         out.append(np.concatenate([prefix, tail]))
+    # a retried/duplicate request: identical to the first prompt, so it
+    # shares the partially-filled boundary page too and its first decode
+    # insert exercises the fused copy-on-write path
+    out.append(out[0].copy())
     return out
 
 
@@ -131,24 +135,41 @@ def run() -> None:
     prompts = _prompts(cfg)
     trace = common.trace_dest("prefix_sharing")
     tr_base = Tracer() if trace else None
-    tr_shared = Tracer() if trace else None
+    tr_shared = Tracer()        # always live: the fused-COW assert reads it
     base = serve_trace(cfg, params, prompts, sharing=False, tracer=tr_base)
     shared = serve_trace(cfg, params, prompts, sharing=True, tracer=tr_shared)
     common.export_trace(tr_base, common.tag_trace(trace, "baseline"))
-    common.export_trace(tr_shared, common.tag_trace(trace, "sharing"))
+    if trace:
+        common.export_trace(tr_shared, common.tag_trace(trace, "sharing"))
 
     # ---- the sharing contract, asserted --------------------------------
-    followers = len(prompts) - 1
-    assert shared["prefill_tokens_shared"] == followers * PREFIX_LEN, (
+    # divergent-tail followers map the aligned prefix pages; the
+    # duplicate of prompt 0 maps everything but its final token
+    want_shared = (len(SUFFIX_LENS) - 1) * PREFIX_LEN + len(prompts[0]) - 1
+    assert shared["prefill_tokens_shared"] == want_shared, (
         "every follower must map the whole shared prefix: the prefix is "
         f"prefilled exactly once, got {shared['prefill_tokens_shared']} "
-        f"shared tokens, want {followers * PREFIX_LEN}")
+        f"shared tokens, want {want_shared}")
+    assert shared["cow_copies"] >= 1, (
+        "the duplicate prompt must trigger at least one boundary-page COW")
     assert base["prefill_tokens_shared"] == 0
     assert shared["peak_unique_pages"] < base["peak_unique_pages"], (
         f"sharing must hold strictly fewer unique pages: "
         f"{shared['peak_unique_pages']} vs {base['peak_unique_pages']}")
     for out_b, out_s in zip(base["outputs"], shared["outputs"]):
         np.testing.assert_array_equal(out_b, out_s)   # parity across modes
+
+    # COW is fused into the decode insert: the trace must carry one
+    # "cow" instant (fused=True) per copy and NO standalone copy_page
+    # dispatch — a separate copy program would be the old two-call path
+    from repro.serving.observability.tracer import INSTANT
+    evs = tr_shared.events()
+    cow_evs = [e for e in evs if e[2] == "cow" and e[1] == INSTANT]
+    assert len(cow_evs) == shared["cow_copies"], (
+        f"{len(cow_evs)} cow instants vs {shared['cow_copies']} copies")
+    assert all(e[6].get("fused") is True for e in cow_evs)
+    assert not [e for e in evs if "copy_page" in e[2]], (
+        "standalone page-copy dispatch found: COW is not fused")
 
     flops_saved = 1.0 - (shared["prefill_flops"]
                          / max(base["prefill_flops"], 1))
@@ -179,6 +200,7 @@ def run() -> None:
         "prefill_flops_saved_frac": flops_saved,
         "peak_unique_page_saving_factor": page_saving,
         "outputs_identical": True,
+        "cow_fused": True,          # asserted against the trace above
     })
 
 

@@ -134,6 +134,16 @@ def eval_zoo(state) -> Dict[str, Any]:
     }
 
 
+def peak_hbm_bytes_per_s() -> float:
+    """Peak memory bandwidth (bytes/s) the roofline normalises achieved
+    bandwidth against.  ``REPRO_PEAK_HBM_GBPS`` overrides (set it to the
+    accelerator's datasheet number, e.g. 1640 for a v5p core); the
+    default 32 GB/s is a one-DDR5-channel-ish figure for the CPU CI
+    runner, so CI percentages are comparable run-to-run rather than
+    absolute truth."""
+    return float(os.environ.get("REPRO_PEAK_HBM_GBPS", "32")) * 1e9
+
+
 def emit(name: str, us_per_call: float, derived: str):
     """The scaffold's CSV contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,17 +1,22 @@
 """Pallas TPU flash attention (causal / sliding-window / chunked, GQA,
 logit soft-capping).
 
-Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the trailing grid
-dimension is sequential on TPU, so the online-softmax running state
-(m, l, acc) lives in VMEM scratch and is carried across kv blocks.
-Fully-masked kv blocks (above the causal diagonal, outside the window /
-chunk span) are skipped with pl.when — the kernel does the same
-sub-quadratic work the banded jnp reference path claims.
+Grid: (batch, kv_heads, num_q_blocks, num_kv_blocks) with a
+(g, block_q, head_dim) query block, where g = q_heads // kv_heads is
+the GQA group size — mirroring the paged decode kernel, each K/V block
+is DMA'd **once per group** instead of once per query head, and the
+score / PV matmuls are (g * block_q, block_k)-shaped
+(``grouped=False`` keeps the per-q-head grid as a bandwidth baseline).
+The trailing grid dimension is sequential on TPU, so the online-softmax
+running state (m, l, acc) lives in VMEM scratch and is carried across
+kv blocks.  Fully-masked kv blocks (above the causal diagonal, outside
+the window / chunk span) are skipped with pl.when — the kernel does the
+same sub-quadratic work the banded jnp reference path claims.
 
-BlockSpec tiling (VMEM working set per grid step):
-  q   (1, 1, block_q, head_dim)
-  k/v (1, 1, block_k, head_dim)     indexed by kv head = h // (H / K)
-  out (1, 1, block_q, head_dim)
+BlockSpec tiling (VMEM working set per grid step, grouped):
+  q   (1, 1, g, block_q, head_dim)
+  k/v (1, 1, block_k, head_dim)     indexed by the kv head directly
+  out (1, 1, g, block_q, head_dim)
 with block_q = block_k = 128 by default (MXU-aligned: 128 lanes).
 """
 from __future__ import annotations
@@ -30,7 +35,8 @@ NEG_INF = -1e30
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                  scale: float, causal: bool, window: Optional[int],
                  chunk: Optional[int], logit_cap: Optional[float],
-                 block_q: int, block_k: int, seq_len: int, kv_len: int):
+                 block_q: int, block_k: int, seq_len: int, kv_len: int,
+                 group: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -57,14 +63,19 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, hd)
-        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
-        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, vd)
+        # the g group members' q blocks stack into one (g*bq, hd) matmul
+        # operand; row r of the scores belongs to query position
+        # q_first + (r % bq) of head kv_head * g + r // bq
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (g, bq, hd)
+        q = q.reshape(group * block_q, q.shape[-1])
+        k = k_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)             # (bk, vd)
         sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         if logit_cap is not None:
             sc = jnp.tanh(sc / logit_cap) * logit_cap
-        q_pos = q_first + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+        row = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0)
+        q_pos = q_first + jax.lax.rem(row, block_q)
         kv_pos = k_first + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
         mask = kv_pos < kv_len
         if causal:
@@ -88,7 +99,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     @pl.when(ik == nk - 1)
     def _finalize():
         l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        out = acc_scr[...] / l[:, None]                 # (g*bq, vd)
+        o_ref[0, 0] = out.reshape(group, block_q,
+                                  out.shape[-1]).astype(o_ref.dtype)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
@@ -96,8 +109,14 @@ def flash_attention(q, k, v, *, causal: bool = True,
                          chunk: Optional[int] = None,
                          logit_cap: Optional[float] = None,
                          scale: Optional[float] = None, block_q: int = 128,
-                         block_k: int = 128, interpret: bool = False):
-    """q: (B, S, H, hd); k/v: (B, T, K, hd|vd).  Returns (B, S, H, vd)."""
+                         block_k: int = 128, grouped: bool = True,
+                         interpret: bool = False):
+    """q: (B, S, H, hd); k/v: (B, T, K, hd|vd).  Returns (B, S, H, vd).
+
+    ``grouped`` grids over KV heads so each K/V block is fetched once
+    per GQA group; False grids over query heads (each group member
+    re-fetches its group's K/V block) as the bandwidth baseline.
+    """
     from jax.experimental.pallas import tpu as pltpu
 
     b, s, h, hd = q.shape
@@ -117,30 +136,43 @@ def flash_attention(q, k, v, *, causal: bool = True,
         k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
 
-    qh = q.transpose(0, 2, 1, 3)
+    G = g if grouped else 1
+    nh = kk if grouped else h
+    # (b, s_pad, h, hd) -> (b, nh, G, s_pad, hd); head h <-> (h//g, h%g)
+    qh = q.transpose(0, 2, 1, 3).reshape(b, nh, G, s_pad, hd)
     kh = k.transpose(0, 2, 1, 3)
     vh = v.transpose(0, 2, 1, 3)
+    if grouped:
+        def kv_head(h_):
+            return h_
+    else:
+        def kv_head(h_):
+            return h_ // g
 
     kernel = functools.partial(
         _attn_kernel, scale=scale_, causal=causal, window=window, chunk=chunk,
-        logit_cap=logit_cap, block_q=bq, block_k=bk, seq_len=s, kv_len=t)
+        logit_cap=logit_cap, block_q=bq, block_k=bk, seq_len=s, kv_len=t,
+        group=G)
 
     out = pl.pallas_call(
         kernel,
-        grid=(b, h, nq, nk),
+        grid=(b, nh, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
-            pl.BlockSpec((1, 1, bk, vd), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, G, bq, hd),
+                         lambda b_, h_, iq, ik: (b_, h_, 0, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, iq, ik: (b_, kv_head(h_), ik, 0)),
+            pl.BlockSpec((1, 1, bk, vd),
+                         lambda b_, h_, iq, ik: (b_, kv_head(h_), ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, vd),
-                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, vd), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, G, bq, vd),
+                               lambda b_, h_, iq, ik: (b_, h_, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, G, s_pad, vd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq, vd), jnp.float32),
+            pltpu.VMEM((G * bq,), jnp.float32),
+            pltpu.VMEM((G * bq,), jnp.float32),
+            pltpu.VMEM((G * bq, vd), jnp.float32),
         ],
         interpret=interpret,
     )(qh, kh, vh)
-    return out.transpose(0, 2, 1, 3)[:, :s]
+    return out.reshape(b, h, s_pad, vd).transpose(0, 2, 1, 3)[:, :s]

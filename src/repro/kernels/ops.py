@@ -52,15 +52,22 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     logit_cap: Optional[float] = None,
                     scale: Optional[float] = None,
                     k_scales=None, v_scales=None,
-                    v_dim: Optional[int] = None):
-    """Paged decode attention: Pallas kernel on TPU (block-table
-    scalar prefetch, int8 dequant in-kernel), jnp gather oracle
-    elsewhere.  q: (B, H, hd) one token per row; lengths: (B,)."""
+                    v_dim: Optional[int] = None,
+                    grouped: bool = True,
+                    prefetch=None):
+    """Paged decode attention: Pallas kernel on TPU (KV-head-grouped
+    grid, block-table scalar prefetch, int8 dequant in-kernel), jnp
+    gather oracle elsewhere.  q: (B, H, hd) one token per row; lengths:
+    (B,).  ``prefetch`` is the combined (B, M+1) operand from
+    :func:`repro.kernels.paged_attention.decode_prefetch`, built once
+    per decode step and shared across layers (ignored by the oracle,
+    which reads block_tables/lengths directly)."""
     if use_pallas():
         return _paged_pallas(q, k_pages, v_pages, block_tables, lengths,
                              window=window, chunk=chunk, logit_cap=logit_cap,
                              scale=scale, k_scales=k_scales,
                              v_scales=v_scales, v_dim=v_dim,
+                             grouped=grouped, prefetch=prefetch,
                              interpret=_interpret())
     # oracle fallback (the models' own jnp path is
     # attention.paged_decode_attention; this keeps the dispatcher

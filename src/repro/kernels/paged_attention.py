@@ -9,17 +9,31 @@ index_map can steer the K/V DMA to the right page before the kernel
 body runs — the gather never materialises a contiguous per-row KV copy
 in HBM.
 
-Grid: (batch, q_heads, num_pages_per_row).  The trailing grid dimension
-is sequential on TPU, so the online-softmax running state (m, l, acc)
-lives in VMEM scratch and is carried across a row's pages, exactly like
-the flash kernel carries it across KV blocks.  Pages past a row's
-length (and outside its window/chunk span) are skipped with pl.when on
-the *dynamic* per-row length — short rows in a mixed-length decode
-batch do proportionally less work, which is the point of paging.
+Grid: (batch, kv_heads, num_pages_per_row) with a (g, hd) query block,
+where g = q_heads // kv_heads is the GQA group size.  Each K/V page is
+DMA'd **once per group** and the score / PV matmuls are (g, page_size)-
+shaped — decode HBM traffic, the thing decode is bound on, is cut g-fold
+versus gridding over query heads (``grouped=False`` keeps the per-head
+grid as a measurable baseline; there every group member re-fetches the
+same page).  The trailing grid dimension is sequential on TPU, so the
+online-softmax running state (m, l, acc) lives in VMEM scratch and is
+carried across a row's pages, exactly like the flash kernel carries it
+across KV blocks.  Pages past a row's length (and outside its
+window/chunk span) are skipped with pl.when on the *dynamic* per-row
+length — short rows in a mixed-length decode batch do proportionally
+less work, which is the point of paging.
 
 When the pool stores int8, per-(slot, head) bf16 scales ride along as
 two more page slabs and K/V are dequantized in-kernel after the DMA —
 HBM traffic stays at the quantized width.
+
+:func:`decode_prefetch` packs block tables and lengths into ONE
+(B, M+1) int32 scalar operand that the caller builds once per decode
+step and shares across every layer, so the per-layer scalar-prefetch
+setup amortizes over the stack instead of re-staging two operands per
+layer.  :func:`decode_hbm_bytes` is the analytic mirror of the grid —
+the deterministic K/V byte count benchmarks and the roofline report
+use, so the g-fold claim is measured, not asserted.
 """
 from __future__ import annotations
 
@@ -29,15 +43,21 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
 
 
-def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
-                       scale: float, window: Optional[int],
+def _paged_attn_kernel(*refs, scale: float, window: Optional[int],
                        chunk: Optional[int], logit_cap: Optional[float],
-                       page_size: int, quantized: bool):
+                       page_size: int, quantized: bool,
+                       length_col: Optional[int]):
+    if length_col is None:
+        bt_ref, len_ref, q_ref, k_ref, v_ref, *rest = refs
+    else:                       # combined (B, M+1) prefetch: lengths ride
+        bt_ref, q_ref, k_ref, v_ref, *rest = refs  # in the last column
+        len_ref = None
     if quantized:
         ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -53,7 +73,7 @@ def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    length = len_ref[b]
+    length = len_ref[b] if length_col is None else bt_ref[b, length_col]
     q_pos = length - 1
     k_first = i * page_size
     k_last = k_first + page_size - 1
@@ -68,7 +88,7 @@ def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0].astype(jnp.float32) * scale            # (1, hd)
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (G, hd)
         k = k_ref[0, :, 0, :].astype(jnp.float32)           # (ps, hd)
         v = v_ref[0, :, 0, :].astype(jnp.float32)           # (ps, vd)
         if quantized:
@@ -99,7 +119,65 @@ def _paged_attn_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
     @pl.when(i == nm - 1)
     def _finalize():
         l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        # a row with length == 0 never enters _compute: acc / clamped-l
+        # is not attention over anything — the contract is exact zeros
+        out = jnp.where(length > 0, acc_scr[...] / l[:, None], 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_prefetch(block_tables, lengths):
+    """Pack a decode step's block tables (B, M) and per-row lengths (B,)
+    into ONE (B, M+1) int32 scalar-prefetch operand: columns 0..M-1 are
+    page ids, column M is the row's length.  Built once per decode step
+    and shared by every layer of the stack, so the per-layer scalar-
+    prefetch staging amortizes instead of re-packing two operands per
+    layer.  Pass it as ``paged_attention(..., prefetch=...)``.
+    """
+    bt = jnp.asarray(block_tables, jnp.int32)
+    ln = jnp.asarray(lengths, jnp.int32).reshape(bt.shape[0], 1)
+    return jnp.concatenate([bt, ln], axis=1)
+
+
+def decode_hbm_bytes(k_pages, v_pages, block_tables, lengths, *,
+                     num_q_heads: int,
+                     window: Optional[int] = None,
+                     chunk: Optional[int] = None,
+                     v_dim: Optional[int] = None,
+                     quantized: Optional[bool] = None,
+                     grouped: bool = True) -> int:
+    """Analytic K/V HBM bytes one :func:`paged_attention` call DMAs —
+    a deterministic host-side mirror of the kernel's grid and per-page
+    liveness test (length / window / chunk), counting only page (and
+    scale-slab) traffic, the term decode is bandwidth-bound on.
+
+    grouped=True counts one K/V fetch per (row, kv_head, live page);
+    grouped=False counts one per (row, q_head, live page) — the exact
+    g-fold difference the re-grid removes.
+    """
+    ps = int(k_pages.shape[1])
+    kk = int(k_pages.shape[2])
+    hd = int(k_pages.shape[3])
+    vd = int(v_dim) if v_dim is not None else int(v_pages.shape[-1])
+    if quantized is None:
+        quantized = k_pages.dtype == jnp.int8
+    heads = kk if grouped else int(num_q_heads)
+    visit = (ps * hd * jnp.dtype(k_pages.dtype).itemsize
+             + ps * vd * jnp.dtype(v_pages.dtype).itemsize)
+    if quantized:                       # two bf16 (slot, head) scale rows
+        visit += 2 * ps * 2
+    m = int(np.asarray(block_tables).shape[1])
+    live_pages = 0
+    for length in np.asarray(lengths).reshape(-1).tolist():
+        q_pos = length - 1
+        for i in range(m):
+            k_first, k_last = i * ps, i * ps + ps - 1
+            live = k_first < length
+            if window is not None:
+                live &= k_last > q_pos - window
+            if chunk is not None:
+                live &= k_last >= (q_pos // chunk) * chunk
+            live_pages += bool(live)
+    return live_pages * heads * visit
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
@@ -109,6 +187,8 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     scale: Optional[float] = None,
                     k_scales=None, v_scales=None,
                     v_dim: Optional[int] = None,
+                    grouped: bool = True,
+                    prefetch=None,
                     interpret: bool = False):
     """q: (B, H, hd); k_pages/v_pages: (P, page_size, K, hd|vd);
     block_tables: (B, M) int32; lengths: (B,) int32 visible tokens per
@@ -117,7 +197,13 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     v_dim features of each v page — with v_pages=k_pages that serves
     absorbed-MLA decode, where v is the latent's first kv_lora features
     of the same slab, without a second page store.
-    Returns (B, H, vd) in q.dtype.
+
+    ``grouped`` grids over KV heads with a (g, hd) query block (each
+    page fetched once per GQA group); False keeps the per-head grid as
+    the bandwidth baseline.  ``prefetch`` accepts the combined
+    (B, M+1) operand from :func:`decode_prefetch`, replacing the
+    separate block-table + lengths scalar operands.
+    Returns (B, H, vd) in q.dtype; rows with length 0 are exact zeros.
     """
     from jax.experimental.pallas import tpu as pltpu
 
@@ -128,47 +214,82 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     g = h // kk
     scale_ = scale if scale is not None else 1.0 / math.sqrt(hd)
     quantized = k_pages.dtype == jnp.int8
-    block_tables = block_tables.astype(jnp.int32)
-    lengths = lengths.astype(jnp.int32)
+
+    # grouped: grid over KV heads, the g query heads of the group ride in
+    # one (1, 1, g, hd) block and the page is DMA'd once for all of them;
+    # per-head: grid over q heads (G=1), each group member re-fetches it
+    G = g if grouped else 1
+    nh = kk if grouped else h
+    qg = q.reshape(b, nh, G, hd)        # head h <-> (h // g, h % g)
+    if grouped:
+        def kv_head(h_):
+            return h_
+    else:
+        def kv_head(h_):
+            return h_ // g
+
+    if prefetch is not None:
+        if prefetch.shape != (b, m + 1):
+            raise ValueError(f"prefetch shape {prefetch.shape} != ({b}, {m + 1})")
+        length_col = m
+        nsp = 1
+        scalars = (prefetch.astype(jnp.int32),)
+
+        def q_idx(b_, h_, i, pf):
+            return (b_, h_, 0, 0)
+
+        def kv_idx(b_, h_, i, pf):
+            return (pf[b_, i], 0, kv_head(h_), 0)
+
+        def sc_idx(b_, h_, i, pf):
+            return (pf[b_, i], 0, kv_head(h_))
+    else:
+        length_col = None
+        nsp = 2
+        scalars = (block_tables.astype(jnp.int32), lengths.astype(jnp.int32))
+
+        def q_idx(b_, h_, i, bt, ln):
+            return (b_, h_, 0, 0)
+
+        def kv_idx(b_, h_, i, bt, ln):
+            return (bt[b_, i], 0, kv_head(h_), 0)
+
+        def sc_idx(b_, h_, i, bt, ln):
+            return (bt[b_, i], 0, kv_head(h_))
 
     kernel = functools.partial(
         _paged_attn_kernel, scale=scale_, window=window, chunk=chunk,
-        logit_cap=logit_cap, page_size=ps, quantized=quantized)
+        logit_cap=logit_cap, page_size=ps, quantized=quantized,
+        length_col=length_col)
 
-    # index maps see the grid indices then the scalar-prefetch refs; the
-    # page id for (row b, step i) steers the K/V (and scale) DMAs
+    # index maps see the grid indices then the scalar-prefetch ref(s);
+    # the page id for (row b, step i) steers the K/V (and scale) DMAs
     in_specs = [
-        pl.BlockSpec((1, 1, hd), lambda b_, h_, i, bt, ln: (b_, h_, 0)),
-        pl.BlockSpec((1, ps, 1, hd),
-                     lambda b_, h_, i, bt, ln: (bt[b_, i], 0, h_ // g, 0)),
-        pl.BlockSpec((1, ps, 1, vd),
-                     lambda b_, h_, i, bt, ln: (bt[b_, i], 0, h_ // g, 0)),
+        pl.BlockSpec((1, 1, G, hd), q_idx),
+        pl.BlockSpec((1, ps, 1, hd), kv_idx),
+        pl.BlockSpec((1, ps, 1, vd), kv_idx),
     ]
-    args = [q, k_pages, v_pages]
+    args = [qg, k_pages, v_pages]
     if quantized:
-        in_specs += [
-            pl.BlockSpec((1, ps, 1),
-                         lambda b_, h_, i, bt, ln: (bt[b_, i], 0, h_ // g)),
-            pl.BlockSpec((1, ps, 1),
-                         lambda b_, h_, i, bt, ln: (bt[b_, i], 0, h_ // g)),
-        ]
+        in_specs += [pl.BlockSpec((1, ps, 1), sc_idx),
+                     pl.BlockSpec((1, ps, 1), sc_idx)]
         args += [k_scales, v_scales]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, h, m),
+        num_scalar_prefetch=nsp,
+        grid=(b, nh, m),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, vd),
-                               lambda b_, h_, i, bt, ln: (b_, h_, 0)),
+        out_specs=pl.BlockSpec((1, 1, G, vd), q_idx),
         scratch_shapes=[
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1, vd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, vd), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, vd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, nh, G, vd), q.dtype),
         interpret=interpret,
-    )(block_tables, lengths, *args)
+    )(*scalars, *args)
+    return out.reshape(b, h, vd)

@@ -85,7 +85,11 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     sc = jnp.where(mask[:, None, None], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bkgt,btkv->bkgv", p, v.astype(p.dtype))
-    return out.reshape(b, h, v.shape[-1]).astype(q.dtype)
+    out = out.reshape(b, h, v.shape[-1])
+    # a row with length 0 has an all-masked softmax (NaN); the kernel
+    # contract for such rows is exact zeros
+    out = jnp.where(lengths[:, None, None] > 0, out, 0)
+    return out.astype(q.dtype)
 
 
 def selective_scan_ref(x, dt, b_mat, c_mat, a_mat, d_vec

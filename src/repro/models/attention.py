@@ -610,11 +610,24 @@ def paged_gather_kv(cache: Params, block_tables):
     return k, v
 
 
+def build_decode_prefetch(block_tables, pos):
+    """Pack a decode step's (B, M) block tables and per-row positions
+    into the combined (B, M+1) scalar-prefetch operand the paged kernel
+    accepts (lengths = pos + 1 ride in the last column).  Build it ONCE
+    per decode step and pass it to every layer via
+    ``paged_decode_attention(..., prefetch=...)`` — the per-layer
+    scalar-prefetch staging then amortizes over the stack."""
+    from repro.kernels.paged_attention import decode_prefetch
+    lengths = jnp.asarray(pos, jnp.int32).reshape((-1,)) + 1
+    return decode_prefetch(block_tables, lengths)
+
+
 def paged_decode_attention(q, cache: Params, block_tables, pos, *,
                            window: Optional[int] = None,
                            chunk: Optional[int] = None,
                            scale: Optional[float] = None,
-                           logit_cap: Optional[float] = None) -> jnp.ndarray:
+                           logit_cap: Optional[float] = None,
+                           prefetch=None) -> jnp.ndarray:
     """Single-token attention over a paged pool via per-row block tables.
 
     q: (B, 1, H, hd); block_tables: (B, M) int32 page ids; pos: (B,)
@@ -629,7 +642,8 @@ def paged_decode_attention(q, cache: Params, block_tables, pos, *,
         out = kops.paged_attention(
             q[:, 0], cache["k"], cache["v"], block_tables, lengths,
             window=window, chunk=chunk, scale=scale, logit_cap=logit_cap,
-            k_scales=cache.get("k_scale"), v_scales=cache.get("v_scale"))
+            k_scales=cache.get("k_scale"), v_scales=cache.get("v_scale"),
+            prefetch=prefetch)
         return out[:, None]
     k, v = paged_gather_kv(cache, block_tables)
     k = shard(k, "batch", None, "kv_heads", None)

@@ -135,7 +135,7 @@ def mla_prefill(params: Params, x, *, num_heads: int, q_lora: int, kv_lora: int,
 
 def mla_decode(params: Params, x, cache: Params, pos, *, num_heads: int,
                kv_lora: int, d_nope: int, d_rope: int, v_head_dim: int,
-               rope_theta: float, block_tables=None):
+               rope_theta: float, block_tables=None, prefetch=None):
     """Absorbed single-token decode.  cache['k']: (B, cap, 1, kv_lora+d_rope)
     (ring), or with ``block_tables`` (B, M) a paged latent pool
     (P, page_size, 1, kv_lora+d_rope) with per-row positions ``pos`` (B,).
@@ -173,7 +173,7 @@ def mla_decode(params: Params, x, cache: Params, pos, *, num_heads: int,
             out_lat = kops.paged_attention(
                 q_cat[:, 0], cache["k"], cache["k"], block_tables, lengths,
                 scale=1.0 / math.sqrt(d_nope + d_rope),
-                v_dim=kv_lora)[:, None]
+                v_dim=kv_lora, prefetch=prefetch)[:, None]
         else:
             lat = gather_pages(cache["k"], block_tables)   # (B, T, 1, L)
             out_lat = masked_decode_attention(

@@ -217,7 +217,7 @@ def _attn_scale(cfg: ModelConfig) -> float:
 def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
                    *, positions, mode: str, pos=None, cache=None,
                    image_embeds=None, block_tables=None, q_offset=None,
-                   insert_from=None):
+                   insert_from=None, prefetch=None):
     """Returns (out, new_cache).  ``block_tables`` (B, M) switches the
     cache path to the paged pool; in decode mode ``pos`` is then a
     per-row (B,) vector rather than a shared scalar.  ``q_offset``
@@ -244,7 +244,8 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
                   rope_theta=cfg.rope_theta)
         if mode == "decode":
             return mla_mod.mla_decode(p["attn"], x, cache, pos,
-                                      block_tables=block_tables, **kw)
+                                      block_tables=block_tables,
+                                      prefetch=prefetch, **kw)
         return mla_mod.mla_prefill(p["attn"], x, q_lora=cfg.q_lora,
                                    positions=positions, cache=cache,
                                    inner_remat=inner_remat,
@@ -300,7 +301,8 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
             cache = attn.paged_cache_insert(cache, k, v, block_tables, pos)
             out = attn.paged_decode_attention(
                 q, cache, block_tables, pos, window=window, chunk=chunk,
-                scale=_attn_scale(cfg), logit_cap=cfg.attn_logit_cap)
+                scale=_attn_scale(cfg), logit_cap=cfg.attn_logit_cap,
+                prefetch=prefetch)
         else:
             cache = attn.cache_insert(cache, k, v, pos)
             out = attn.decode_attention(q, cache, pos, window=window,
@@ -335,7 +337,7 @@ def _mixer_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, x,
 def _block_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, h,
                    *, positions, mode: str, pos=None, cache=None,
                    image_embeds=None, block_tables=None, q_offset=None,
-                   insert_from=None):
+                   insert_from=None, prefetch=None):
     """One transformer block.  Returns (h, new_cache, aux_loss)."""
     gated_residual = spec.mixer == "cross_attn"
     mix_in = apply_norm(p["norm1"], h, cfg.norm, cfg.norm_eps)
@@ -343,7 +345,8 @@ def _block_forward(p: Params, spec: LayerSpec, cfg: ModelConfig, h,
                                     mode=mode, pos=pos, cache=cache,
                                     image_embeds=image_embeds,
                                     block_tables=block_tables,
-                                    q_offset=q_offset, insert_from=insert_from)
+                                    q_offset=q_offset, insert_from=insert_from,
+                                    prefetch=prefetch)
     # Megatron-SP: constrain the row-parallel output to the seq-sharded
     # layout BEFORE the residual add so XLA emits a reduce-scatter
     # instead of all-reduce + reshard (2x+ the link bytes); §Perf iter
@@ -411,7 +414,7 @@ def unembed(params: Params, cfg: ModelConfig, h):
 
 def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
                  pos=None, caches=None, image_embeds=None, block_tables=None,
-                 q_offset=None, insert_from=None):
+                 q_offset=None, insert_from=None, prefetch=None):
     """Scan over the G pattern groups.  Returns (h, new_caches, aux_sum)."""
     specs = cfg.pattern
 
@@ -428,7 +431,7 @@ def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
                     block_params[f"p{i}"], spec, cfg, hh, positions=positions,
                     mode=mode, pos=pos, cache=c, image_embeds=image_embeds,
                     block_tables=block_tables, q_offset=q_offset,
-                    insert_from=insert_from)
+                    insert_from=insert_from, prefetch=prefetch)
                 hh = hh2
                 aux_g = aux_g + aux
                 if nc is not None:
@@ -447,7 +450,7 @@ def _scan_blocks(params: Params, cfg: ModelConfig, h, *, positions, mode: str,
 
 def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
             mode: str = "train", caches=None, pos=None, block_tables=None,
-            q_offset=None, insert_from=None):
+            q_offset=None, insert_from=None, prefetch=None):
     """Main entry.  mode: train | prefill | decode.
 
     ``block_tables`` (B, M) routes the cache path through the paged
@@ -455,7 +458,9 @@ def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
     (traced ok) shifts the sequence to absolute positions q_offset..
     — the shared-prefix tail path, where the resident prefix KV is
     read back from the pool instead of recomputed; ``insert_from``
-    bounds which of those positions write the pool.
+    bounds which of those positions write the pool.  ``prefetch`` is
+    the combined decode-step scalar-prefetch operand
+    (attention.build_decode_prefetch), shared by every layer.
     Returns (hidden (B,S,D) post-final-norm, new_caches, aux_loss).
     """
     if mode == "decode":
@@ -476,7 +481,8 @@ def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
                                       image_embeds=image_embeds,
                                       block_tables=block_tables,
                                       q_offset=q_offset,
-                                      insert_from=insert_from)
+                                      insert_from=insert_from,
+                                      prefetch=prefetch)
     h = apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
     return h, new_caches, aux
 
@@ -575,7 +581,14 @@ def decode_step(params: Params, cfg: ModelConfig, token, caches, pos, *,
 
     Returns (logits for the next token, updated caches).
     """
+    prefetch = None
+    if block_tables is not None:
+        # one combined block-table + lengths scalar-prefetch operand for
+        # the whole stack — every layer's paged kernel shares it instead
+        # of staging two scalar operands per layer
+        prefetch = attn.build_decode_prefetch(block_tables, pos)
     h, caches, _ = forward(params, cfg, token, mode="decode", caches=caches,
-                           pos=pos, block_tables=block_tables)
+                           pos=pos, block_tables=block_tables,
+                           prefetch=prefetch)
     logits = unembed(params, cfg, h)
     return logits, caches

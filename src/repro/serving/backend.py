@@ -252,8 +252,9 @@ def _engine_warmup(engine, prompt_lens: Sequence[int],
                    chunk_tokens: Optional[int]) -> None:
     """Compile one paged engine's serving shapes: prefill at each
     padded prompt length (plus an identical twin so the traced-offset
-    tail path and the copy-on-write page copy compile when sharing is
-    on), the decode step, and — chunked mode — the fixed chunk shape.
+    tail path and the fused copy-on-write decode program compile when
+    sharing is on), the decode step, and — chunked mode — the fixed
+    chunk shape.
     Warmup pages always hand back; the logit cache is bypassed and
     cleared so synthetic prompts neither skip the compiles nor leave
     entries behind."""
@@ -291,6 +292,12 @@ def _engine_warmup(engine, prompt_lens: Sequence[int],
                     pass
             try:
                 engine.decode_step_batch([seq])
+                if twin is not None:
+                    # the twin made the first step COW, compiling the
+                    # fused-COW decode program; step again on the now-
+                    # private page so the plain decode program also
+                    # compiles during warmup rather than mid-serve
+                    engine.decode_step_batch([seq])
             except OutOfPages:
                 pass                # warmup COW found no free page
             finally:

@@ -84,7 +84,7 @@ class Engine:
         self._paged_prefill = None
         self._paged_prefill_tail = None
         self._paged_decode = None
-        self._copy_page = None
+        self._paged_decode_cow = None
         self._max_pages = 0
         self._decode_batch = 0
         self._caches_poisoned = False
@@ -252,11 +252,17 @@ class Engine:
             return tf.decode_step(p, cfg, token, caches, pos,
                                   block_tables=bt)
 
-        def copy_page_fn(caches, src, dst):
-            # copy-on-write: duplicate one physical page across every
-            # layer slab (leaves are (G, num_pages, page_size, ...))
-            return jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]),
-                                caches)
+        def paged_decode_cow_fn(p, token, caches, bt, pos, src, dst):
+            # fused copy-on-write: duplicate the shared pages into this
+            # step's private copies (leaves are (G, num_pages, ps, ...);
+            # src/dst are (decode_batch,) page ids, scratch->scratch for
+            # rows that don't COW) and run the decode insert on the
+            # copied caches — one launched program, no standalone copy
+            # kernel before the step
+            caches = jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]),
+                                  caches)
+            return tf.decode_step(p, cfg, token, caches, pos,
+                                  block_tables=bt)
 
         def compile_all():
             self._paged_prefill = jax.jit(paged_prefill_fn,
@@ -264,7 +270,8 @@ class Engine:
             self._paged_prefill_tail = jax.jit(paged_prefill_tail_fn,
                                                donate_argnums=(2,))
             self._paged_decode = jax.jit(paged_decode_fn, donate_argnums=(2,))
-            self._copy_page = jax.jit(copy_page_fn, donate_argnums=(0,))
+            self._paged_decode_cow = jax.jit(paged_decode_cow_fn,
+                                             donate_argnums=(2,))
 
         ctx = axis_rules(self.rules) if self.rules is not None else None
         if ctx:
@@ -685,14 +692,32 @@ class Engine:
         if len(seqs) > cap:
             raise ValueError(f"{len(seqs)} sequences > decode_batch={cap}")
         ps = self.pool.page_size
-        for seq in seqs:
-            # copy-on-write BEFORE the donating decode jit: a sequence
-            # about to insert into a page other sequences still map
-            # gets a private copy first (sharing must never let one
-            # request's decode tokens leak into another's prefix)
+        # copy-on-write, fused into the decode jit: a sequence about to
+        # insert into a page other sequences still map gets a private
+        # copy as part of the decode step itself (sharing must never let
+        # one request's decode tokens leak into another's prefix).  Page
+        # allocation happens BEFORE the donating jit — OutOfPages here
+        # leaves the caches intact and only this request need fail —
+        # but refcount/block-table bookkeeping is deferred until the jit
+        # succeeds.  ``pending`` mirrors the decrefs that bookkeeping
+        # will apply, so the second holder of a page the first row is
+        # already COWing sees an effective refcount of 1 and keeps the
+        # original page (exactly the sequential-copy behaviour).
+        cow: List[Tuple[int, PagedSequence, int, int, int]] = []
+        pending: Dict[int, int] = {}
+        for i, seq in enumerate(seqs):
             idx = seq.pos // ps
-            if self.pool.refcount(seq.pages[idx]) > 1:
-                self._cow_page(seq, idx)
+            old = seq.pages[idx]
+            if self.pool.refcount(old) - pending.get(old, 0) > 1:
+                try:
+                    new = self.pool.alloc(1)[0]
+                except OutOfPages as exc:
+                    # roll back this step's earlier COW allocations
+                    self.pool.decref([n for _, _, _, _, n in cow])
+                    exc.cow_seq = seq
+                    raise
+                cow.append((i, seq, idx, old, new))
+                pending[old] = pending.get(old, 0) + 1
         tokens = np.zeros((cap, 1), np.int32)
         bt = np.full((cap, self._max_pages), 0, np.int32)
         pos = np.zeros((cap,), np.int32)
@@ -704,10 +729,25 @@ class Engine:
             pos[i] = seq.pos
             seeds[i] = np.uint32(seq.seed)
             temps[i] = seq.temperature
+        # COWing rows decode against their private copy: the fused jit
+        # copies old -> new across every layer slab, then the insert
+        # lands in the copy (rows that don't COW ride scratch -> scratch)
+        src = np.full((cap,), SCRATCH_PAGE, np.int32)
+        dst = np.full((cap,), SCRATCH_PAGE, np.int32)
+        for r, (i, seq, idx, old, new) in enumerate(cow):
+            bt[i, idx] = new
+            src[r] = old
+            dst[r] = new
         try:
-            logits, self._paged_caches = self._paged_decode(
-                self.params, jnp.asarray(tokens), self._paged_caches,
-                jnp.asarray(bt), jnp.asarray(pos))
+            if cow:
+                logits, self._paged_caches = self._paged_decode_cow(
+                    self.params, jnp.asarray(tokens), self._paged_caches,
+                    jnp.asarray(bt), jnp.asarray(pos), jnp.asarray(src),
+                    jnp.asarray(dst))
+            else:
+                logits, self._paged_caches = self._paged_decode(
+                    self.params, jnp.asarray(tokens), self._paged_caches,
+                    jnp.asarray(bt), jnp.asarray(pos))
             # row i's next token sits at position pos[i] + 1; keying
             # the sample by (seq.seed, position) keeps a sampled
             # generation independent of batch composition.  Materialise
@@ -717,44 +757,26 @@ class Engine:
                                                temps=temps))
         except Exception:
             self._caches_poisoned = True    # donated buffers are gone
+            self.pool.decref([n for _, _, _, _, n in cow])
             raise
+        for i, seq, idx, old, new in cow:
+            # the copy diverged from the indexed prefix the moment the
+            # step inserted, so this sequence stops backing entries for
+            # the old page; the remaining holders keep them valid
+            seq.prefix_keys = self.pool.disown_prefix(seq.prefix_keys, old)
+            self.pool.decref([old])
+            seq.pages[idx] = new
+            seq.block_table[idx] = new
+            self.cow_count += 1
+            self.tracer.instant("cow", track=self.trace_track,
+                                args={"old": int(old), "new": int(new),
+                                      "fused": True})
         for i, seq in enumerate(seqs):
             seq.pos += 1
             seq.last_token = int(nxt[i])
             seq.tokens.append(int(nxt[i]))
             self._reclaim_out_of_span(seq)
         return nxt[:len(seqs)]
-
-    def _cow_page(self, seq: PagedSequence, idx: int) -> None:
-        """Give ``seq`` a private copy of its shared page ``idx``
-        before it writes into it.  Raises OutOfPages (tagged with
-        ``cow_seq``) when no page is free — before any donation, so
-        the engine's caches survive and only this request need fail."""
-        old = seq.pages[idx]
-        try:
-            new = self.pool.alloc(1)[0]
-        except OutOfPages as exc:
-            exc.cow_seq = seq
-            raise
-        try:
-            self._paged_caches = self._copy_page(
-                self._paged_caches, jnp.asarray(old, jnp.int32),
-                jnp.asarray(new, jnp.int32))
-            jax.block_until_ready(jax.tree.leaves(self._paged_caches)[0])
-        except Exception:
-            self._caches_poisoned = True    # donated buffers are gone
-            self.pool.decref([new])         # unowned copy must not leak
-            raise
-        # the copy diverges from the indexed prefix the moment we
-        # insert, so this sequence stops backing entries for the old
-        # page; the remaining holders keep them valid
-        seq.prefix_keys = self.pool.disown_prefix(seq.prefix_keys, old)
-        self.pool.decref([old])
-        seq.pages[idx] = new
-        seq.block_table[idx] = new
-        self.cow_count += 1
-        self.tracer.instant("cow", track=self.trace_track,
-                            args={"old": int(old), "new": int(new)})
 
     def generate_paged(self, prompt, *, max_new_tokens: int,
                        seed: Optional[int] = None,

@@ -460,6 +460,18 @@ class PagedLLMConfig:
     #   step, so a long prompt never head-of-line-blocks running
     #   streams; admission budgets first-chunk pages, later chunks
     #   allocate as they run.  0 = serial whole-prompt prefill.
+    adaptive_chunk: bool = False    # SLO-aware chunk sizing: pick each
+    #   chunk's page count per call — shrink toward min_chunk_pages when
+    #   the tightest running stream's remaining deadline budget cannot
+    #   absorb a base-sized prefill stall, grow toward max_chunk_pages
+    #   when nothing is decoding (an idle backend should swallow prompts
+    #   in the biggest compiled bites).  Needs prefill_chunk_pages > 0;
+    #   the chosen size is exposed as the "chunk_pages" tracer counter.
+    min_chunk_pages: int = 1        # adaptive floor
+    max_chunk_pages: int = 0        # adaptive ceiling; 0 = 4x base
+    chunk_slack: float = 4.0        # shrink when min stream slack <
+    #   chunk_slack x (base-chunk stall estimate); grow needs the same
+    #   margin over a max-sized stall
 
 
 @dataclasses.dataclass
@@ -556,6 +568,55 @@ class PagedLLMScheduler(SchedulerLifecycle):
             return None
         return self.cfg.prefill_chunk_pages * backend.capacity().page_size
 
+    def _adaptive_chunk_pages(self, m: int) -> int:
+        """SLO-aware size for the NEXT prefill chunk, in pages.
+
+        A chunk of P pages stalls every running decode stream for
+        roughly P x one decode step (the chunk and the step serialize
+        on the model's executor), so the budget question is whether the
+        tightest running stream — smallest remaining deadline budget
+        minus its estimated remaining decode time — can absorb that
+        stall.  Idle backends (nothing decoding) take the ceiling;
+        streams without inter-token evidence yet keep the base size.
+        """
+        cfg = self.cfg
+        base = cfg.prefill_chunk_pages
+        lo = max(1, cfg.min_chunk_pages)
+        hi = max(base, cfg.max_chunk_pages or 4 * base)
+        active = self.slots[m].active()
+        if not active:
+            return hi                   # no stream to stall
+        itl_ms = self.metrics.itl_by_model[m].percentile_ms(50)
+        if itl_ms <= 0:
+            itl_ms = self.metrics.itl_lat.percentile_ms(50)
+        if itl_ms <= 0:
+            return base                 # no decode-gap evidence yet
+        itl_s = itl_ms / 1e3
+        now = self.clock()
+        slack = min(
+            (e.req.deadline_t - now)
+            - (e.req.max_new_tokens - len(e.seq.tokens)) * itl_s
+            for e in active)
+        if slack < cfg.chunk_slack * base * itl_s:
+            return lo
+        if slack > cfg.chunk_slack * hi * itl_s:
+            return hi
+        return base
+
+    def _next_chunk_tokens(self, m: int) -> Optional[int]:
+        """Token budget for the next prefill chunk: the static
+        prefill_chunk_pages, or the SLO-aware adaptive size (exposed
+        as the "chunk_pages" tracer counter, one series per model)."""
+        backend = self.backends[m]
+        if self.cfg.prefill_chunk_pages <= 0:
+            return None
+        if not self.cfg.adaptive_chunk:
+            return self._chunk_tokens(backend)
+        pages = self._adaptive_chunk_pages(m)
+        if self.tracer.enabled:
+            self.tracer.counter("chunk_pages", {f"m{m}": pages})
+        return pages * backend.capacity().page_size
+
     def _reclaim_stranded(self, t: float) -> None:
         # cancel-path cleanup: sequences stranded in slots or the
         # prefilling roster by a no-drain stop must hand their pages
@@ -587,10 +648,20 @@ class PagedLLMScheduler(SchedulerLifecycle):
         """Compile every backend's serving shapes (prefill at each
         padded prompt length, the decode step, chunk shapes, sharing /
         copy-on-write paths — and, disaggregated, the KV transfer)
-        before traffic arrives.  Control-plane: runs before start()."""
+        before traffic arrives.  Control-plane: runs before start().
+        Adaptive chunk sizing also compiles its floor/ceiling chunk
+        shapes, so a mid-serve size switch never hits the compiler."""
         for backend in self.backends:
-            backend.warmup(prompt_lens,
-                           chunk_tokens=self._chunk_tokens(backend))
+            base = self._chunk_tokens(backend)
+            backend.warmup(prompt_lens, chunk_tokens=base)
+            if base is not None and self.cfg.adaptive_chunk:
+                ps = backend.capacity().page_size
+                hi = max(self.cfg.prefill_chunk_pages,
+                         self.cfg.max_chunk_pages
+                         or 4 * self.cfg.prefill_chunk_pages)
+                for pages in sorted({max(1, self.cfg.min_chunk_pages), hi}):
+                    if pages * ps != base:
+                        backend.warmup([], chunk_tokens=pages * ps)
 
     # ---- submission ---------------------------------------------------
     def _select(self, x) -> int:
@@ -736,10 +807,12 @@ class PagedLLMScheduler(SchedulerLifecycle):
                         # sweeping decode below — this is the whole
                         # point of the split
                         chunk_task = asyncio.ensure_future(
-                            self._run_chunk(m, ent, chunk_tokens))
+                            self._run_chunk(m, ent,
+                                            self._next_chunk_tokens(m)))
                         progressed = True
                     else:
-                        ran = await self._run_chunk(m, ent, chunk_tokens)
+                        ran = await self._run_chunk(
+                            m, ent, self._next_chunk_tokens(m))
                         if ran is None:         # backend died
                             return
                         progressed = progressed or ran

@@ -110,6 +110,134 @@ def test_paged_attention_int8_dequant_in_kernel():
                                atol=0.06)
 
 
+def _quantize_pages(pages):
+    """Per-(slot, head) symmetric int8 + bf16 scales, like the pool's."""
+    sc = np.abs(np.asarray(pages)).max(axis=-1) / 127.0 + 1e-8
+    qp = np.clip(np.round(np.asarray(pages) / sc[..., None]), -127, 127)
+    return jnp.asarray(qp, jnp.int8), jnp.asarray(sc, jnp.bfloat16)
+
+
+_GROUP_VARIANTS = {
+    "full": {},
+    "window": {"window": 9},
+    "chunked": {"chunk": 16},
+    "mla_vdim": {"v_dim": 8},
+}
+
+
+@pytest.mark.parametrize("qtag", ["bf16", "int8"])
+@pytest.mark.parametrize("variant", sorted(_GROUP_VARIANTS))
+@pytest.mark.parametrize("g", [1, 2, 4, 8])
+def test_paged_grouped_token_identical_to_per_head(g, variant, qtag):
+    """The GQA re-grid is a pure traffic optimisation: for every group
+    size x mask variant x page dtype, the grouped kernel's output is
+    TOKEN-IDENTICAL (bitwise) to the per-head baseline grid on a
+    mixed-length batch, and its analytic HBM bytes are exactly 1/g."""
+    b, h, hd, ps, m = 3, 8, 16, 8, 4
+    kk = h // g
+    pages = 1 + b * m
+    kw = dict(_GROUP_VARIANTS[variant])
+    kq, kp, kv = jax.random.split(jax.random.fold_in(KEY, g), 3)
+    q = jax.random.normal(kq, (b, h, hd), jnp.bfloat16)
+    k_pages = jax.random.normal(kp, (pages, ps, kk, hd), jnp.bfloat16)
+    v_pages = (k_pages if variant == "mla_vdim"
+               else jax.random.normal(kv, (pages, ps, kk, hd), jnp.bfloat16))
+    ks = vs = None
+    if qtag == "int8":
+        k_pages, ks = _quantize_pages(k_pages)
+        v_pages, vs = (k_pages, ks) if variant == "mla_vdim" \
+            else _quantize_pages(v_pages)
+    bt = jnp.asarray(np.arange(1, pages).reshape(b, m), jnp.int32)
+    lengths = jnp.asarray([5, 17, 32], jnp.int32)     # mixed-length batch
+    outs = {}
+    for grouped in (True, False):
+        outs[grouped] = paged_attention(
+            q, k_pages, v_pages, bt, lengths, k_scales=ks, v_scales=vs,
+            grouped=grouped, interpret=True, **kw)
+    assert np.array_equal(np.asarray(outs[True], np.float32),
+                          np.asarray(outs[False], np.float32))
+    from repro.kernels.paged_attention import decode_hbm_bytes
+    by = {gr: decode_hbm_bytes(k_pages, v_pages, bt, lengths, num_q_heads=h,
+                               grouped=gr, window=kw.get("window"),
+                               chunk=kw.get("chunk"), v_dim=kw.get("v_dim"))
+          for gr in (True, False)}
+    assert by[True] * g == by[False]
+
+
+def test_paged_zero_length_rows_are_exact_zeros():
+    """A freshly admitted row can reach the kernel with length 0 (no
+    visible tokens): every page is skipped, and _finalize must emit
+    exact zeros instead of 0/eps garbage — in kernel AND oracle."""
+    b, h, kk, hd, ps, m = 3, 4, 2, 16, 4, 3
+    pages = 1 + b * m
+    kq, kp = jax.random.split(KEY)
+    q = jax.random.normal(kq, (b, h, hd))
+    k_pages = jax.random.normal(kp, (pages, ps, kk, hd))
+    bt = jnp.asarray(np.arange(1, pages).reshape(b, m), jnp.int32)
+    lengths = jnp.asarray([0, 7, 0], jnp.int32)
+    for grouped in (True, False):
+        out = np.asarray(paged_attention(q, k_pages, k_pages, bt, lengths,
+                                         grouped=grouped, interpret=True))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_array_equal(out[0], 0.0)
+        np.testing.assert_array_equal(out[2], 0.0)
+        assert np.abs(out[1]).max() > 0
+    want = np.asarray(ref.paged_attention_ref(q, k_pages, k_pages, bt,
+                                              lengths))
+    assert np.all(np.isfinite(want))
+    np.testing.assert_array_equal(want[[0, 2]], 0.0)
+
+
+def test_paged_combined_prefetch_matches_separate_operands():
+    """decode_prefetch packs (bt, lengths) into one (B, M+1) operand;
+    the kernel must read identical liveness from either encoding."""
+    from repro.kernels.paged_attention import decode_prefetch
+    b, h, kk, hd, ps, m = 2, 8, 2, 16, 8, 4
+    pages = 1 + b * m
+    kq, kp, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (b, h, hd))
+    k_pages = jax.random.normal(kp, (pages, ps, kk, hd))
+    v_pages = jax.random.normal(kv, (pages, ps, kk, hd))
+    bt = jnp.asarray(np.arange(1, pages).reshape(b, m), jnp.int32)
+    lengths = jnp.asarray([13, 32], jnp.int32)
+    pf = decode_prefetch(bt, lengths)
+    assert pf.shape == (b, m + 1) and pf.dtype == jnp.int32
+    for kw in ({}, {"window": 9}, {"chunk": 16}):
+        sep = paged_attention(q, k_pages, v_pages, bt, lengths,
+                              interpret=True, **kw)
+        comb = paged_attention(q, k_pages, v_pages, bt, lengths,
+                               prefetch=pf, interpret=True, **kw)
+        assert np.array_equal(np.asarray(sep), np.asarray(comb))
+
+
+def test_decode_hbm_bytes_accounting():
+    """The analytic byte counter mirrors the grid: full-length rows pay
+    all pages, masks drop dead pages, int8 pays quantized width + scale
+    slabs, and grouped/per-head differ by exactly g."""
+    from repro.kernels.paged_attention import decode_hbm_bytes
+    ps, kk, hd, m = 8, 2, 16, 4
+    h = 8
+    k_pages = jnp.zeros((9, ps, kk, hd), jnp.float32)
+    bt = np.arange(1, 9).reshape(2, m)
+    full = decode_hbm_bytes(k_pages, k_pages, bt, [32, 32], num_q_heads=h)
+    # 2 rows x 4 live pages x 2 kv heads x (ps*hd*4 k + ps*hd*4 v)
+    assert full == 2 * 4 * kk * (ps * hd * 4 * 2)
+    short = decode_hbm_bytes(k_pages, k_pages, bt, [32, 1], num_q_heads=h)
+    assert short == full // 8 * 5            # row 1 touches 1 of 4 pages
+    win = decode_hbm_bytes(k_pages, k_pages, bt, [32, 32], num_q_heads=h,
+                           window=4)
+    assert win < full                        # only the trailing page lives
+    per_head = decode_hbm_bytes(k_pages, k_pages, bt, [32, 32],
+                                num_q_heads=h, grouped=False)
+    assert per_head == full * (h // kk)
+    q8 = jnp.zeros((9, ps, kk, hd), jnp.int8)
+    quant = decode_hbm_bytes(q8, q8, bt, [32, 32], num_q_heads=h)
+    assert quant == 2 * 4 * kk * (ps * hd * 1 * 2 + 2 * ps * 2)
+    vd = decode_hbm_bytes(k_pages, k_pages, bt, [32, 32], num_q_heads=h,
+                          v_dim=hd // 2)
+    assert vd == 2 * 4 * kk * (ps * hd * 4 + ps * (hd // 2) * 4)
+
+
 @pytest.mark.parametrize("b,s,d,n,chunk,bd", [
     (2, 128, 64, 16, 64, 32),
     (1, 256, 128, 8, 128, 128),

@@ -443,3 +443,82 @@ def test_scheduler_backpressure_oversized_request():
     for out, ref in zip(outs, refs):
         np.testing.assert_array_equal(out, ref)
     assert sched.snapshot()["pools"][0]["pages_in_use"] == 0
+
+
+class _FakeChunkBackend:
+    """capacity()-only stand-in so the adaptive-chunk policy can be
+    unit-tested without a device worker loop."""
+
+    def capacity(self):
+        from repro.serving.backend import BackendCapacity
+        return BackendCapacity(decode_batch=4, page_size=4, num_pages=16,
+                               free_pages=16)
+
+    def bind_metrics(self, metrics, model_id):
+        pass
+
+    def bind_tracer(self, tracer):
+        pass
+
+
+def _policy_sched(tracer=None, **cfg_kw):
+    cfg = PagedLLMConfig(prefill_chunk_pages=2, adaptive_chunk=True,
+                         min_chunk_pages=1, max_chunk_pages=8,
+                         chunk_slack=4.0, **cfg_kw)
+    return PagedLLMScheduler(backends=[_FakeChunkBackend()], cfg=cfg,
+                             clock=lambda: 0.0, tracer=tracer)
+
+
+def _join(sched, deadline_t, max_new=10, generated=0):
+    from types import SimpleNamespace
+    from repro.serving.scheduler.request import Request, SamplingParams
+    req = Request(rid=1, x=None, arrival_t=0.0, deadline_t=deadline_t,
+                  params=SamplingParams(max_new_tokens=max_new))
+    return sched.slots[0].join(req, SimpleNamespace(tokens=[0] * generated),
+                               admit_step=0)
+
+
+def test_adaptive_chunk_policy_slo_slack():
+    """SLO-aware chunk sizing: idle backend -> ceiling; no inter-token
+    evidence -> base; tight stream slack -> floor; generous -> ceiling;
+    in-between -> base.  (base=2, lo=1, hi=8 pages; itl p50 = 10ms;
+    thresholds at 4*base*itl = 80ms and 4*hi*itl = 320ms of slack.)"""
+    sched = _policy_sched()
+    assert sched._adaptive_chunk_pages(0) == 8       # nothing decoding
+    ent = _join(sched, deadline_t=0.15)
+    assert sched._adaptive_chunk_pages(0) == 2       # no itl evidence yet
+    for _ in range(8):
+        sched.metrics.itl_by_model[0].add(0.010)
+    # slack = 0.15 - 10 remaining tokens * 10ms = 50ms < 80ms -> floor
+    assert sched._adaptive_chunk_pages(0) == 1
+    sched.slots[0].retire(ent)
+    _join(sched, deadline_t=1.0)                     # slack 900ms -> ceiling
+    assert sched._adaptive_chunk_pages(0) == 8
+    ent3 = _join(sched, deadline_t=0.3)              # tightest rules: 200ms
+    assert sched._adaptive_chunk_pages(0) == 2       # between -> base
+    ent3.seq.tokens.extend([0] * 5)                  # 5 left: slack 250ms
+    assert sched._adaptive_chunk_pages(0) == 2
+
+
+def test_next_chunk_tokens_traces_counter():
+    """_next_chunk_tokens converts the policy's pages to tokens and
+    exposes the choice as the 'chunk_pages' tracer counter; with
+    adaptive_chunk off it returns the static base size untraced."""
+    from repro.serving.observability.tracer import COUNTER, Tracer
+    tracer = Tracer()
+    sched = _policy_sched(tracer=tracer)
+    assert sched._next_chunk_tokens(0) == 8 * 4      # idle -> hi pages
+    _join(sched, deadline_t=0.01)
+    for _ in range(8):
+        sched.metrics.itl_by_model[0].add(0.010)
+    assert sched._next_chunk_tokens(0) == 1 * 4      # floor, page_size=4
+    counts = [e for e in tracer.events()
+              if e[1] == COUNTER and e[2] == "chunk_pages"]
+    assert [c[6]["m0"] for c in counts] == [8, 1]
+    static = PagedLLMScheduler(backends=[_FakeChunkBackend()],
+                               cfg=PagedLLMConfig(prefill_chunk_pages=2),
+                               clock=lambda: 0.0)
+    assert static._next_chunk_tokens(0) == 2 * 4
+    off = PagedLLMScheduler(backends=[_FakeChunkBackend()],
+                            cfg=PagedLLMConfig())
+    assert off._next_chunk_tokens(0) is None

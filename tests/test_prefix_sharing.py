@@ -183,6 +183,31 @@ def test_parity_under_forced_pallas_interpret(monkeypatch):
     assert on.pool.pages_in_use == 0
 
 
+def test_cow_is_fused_into_decode_step_trace():
+    """COW runs INSIDE the decode jit (one compiled program copies the
+    boundary page and inserts the token): the trace must show a 'cow'
+    instant with fused=True and NO standalone copy_page span — a
+    separate copy dispatch would be the old two-program round trip."""
+    from repro.serving.observability.tracer import INSTANT, Tracer
+    cfg = tiny_config("full")
+    params = tf.init_params(cfg, jax.random.key(4))
+    p = np.asarray(jax.random.randint(jax.random.key(9), (10,), 0,
+                                      cfg.vocab_size))
+    on = make_engine(cfg, params, sharing=True)
+    on.tracer = tracer = Tracer()
+    a = on.prefill_into_pages(p, max_new_tokens=2)
+    b = on.prefill_into_pages(p, max_new_tokens=2)
+    on.decode_step_batch([a, b])                # COW fires here
+    assert on.cow_count == 1
+    evs = tracer.events()
+    cows = [e for e in evs if e[2] == "cow" and e[1] == INSTANT]
+    assert len(cows) == 1
+    assert cows[0][6]["fused"] is True
+    assert not [e for e in evs if "copy_page" in e[2]]
+    on.pool.release(a)
+    on.pool.release(b)
+
+
 # ---------------------------------------------------------------------------
 # Semantics around the edges
 # ---------------------------------------------------------------------------
