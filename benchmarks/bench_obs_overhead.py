@@ -3,12 +3,18 @@
 The observability contract is "low overhead or it stays off in prod":
 the tracer ring is append-only tuples behind an ``if tracer.enabled``
 guard, so a fully traced run (request span chains, executor spans,
-scheduler instants, gauge sampling) must stay within 5% of untraced
-throughput on the same trace.  This bench enforces that on
+scheduler instants, gauge sampling) must stay within a few percent of
+untraced throughput on the same trace.  This bench enforces that on
 bench_scheduler's serving path — same server, same seeded Poisson
 schedule — alternating untraced/traced runs after a shared warmup and
 comparing best-of-N throughput (best-of filters scheduler-noise
 outliers on a busy host; the tracer's cost is deterministic).
+
+The threshold and repeat count are environment-tunable for noisy CI
+runners: ``REPRO_OBS_OVERHEAD_PCT`` (default 5, the asserted maximum
+overhead percent) and ``REPRO_OBS_REPEATS`` (default 3, the best-of-N
+pool per arm — raise it when a shared runner's scheduling jitter
+swamps the few-percent signal being measured).
 
   PYTHONPATH=src python -m benchmarks.bench_obs_overhead
   PYTHONPATH=src python -m benchmarks.run --only obs_overhead
@@ -16,6 +22,7 @@ outliers on a busy host; the tracer's cost is deterministic).
 from __future__ import annotations
 
 import asyncio
+import os
 from typing import Dict, List
 
 from benchmarks import common
@@ -23,8 +30,8 @@ from benchmarks.bench_scheduler import NUM_REQUESTS, _drive, build_server
 from repro.serving.observability import Tracer
 from repro.serving.scheduler import SchedulerConfig, TrafficConfig
 
-REPEATS = 3
-MAX_OVERHEAD_FRAC = 0.05
+REPEATS = max(1, int(os.environ.get("REPRO_OBS_REPEATS", "3")))
+MAX_OVERHEAD_FRAC = float(os.environ.get("REPRO_OBS_OVERHEAD_PCT", "5")) / 100
 
 
 def run() -> None:
@@ -63,7 +70,8 @@ def run() -> None:
         f"untraced_rps={best_untraced:.1f} traced_rps={best_traced:.1f} "
         f"overhead_frac={overhead:.4f} "
         f"events_recorded={stats['recorded']} "
-        f"events_dropped={stats['dropped']} within_5pct=yes")
+        f"events_dropped={stats['dropped']} "
+        f"within_{MAX_OVERHEAD_FRAC * 100:.0f}pct=yes")
     common.emit_json("obs_overhead", {
         "config": {"rate": tc.rate, "num_requests": tc.num_requests,
                    "repeats": REPEATS,

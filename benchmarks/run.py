@@ -15,6 +15,7 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   chunked    — chunked vs serial prefill TTFT       (serving streaming/TTFT)
   disagg     — disaggregated vs interleaved prefill (serving backends/ITL)
   obs_overhead — traced vs untraced throughput      (serving observability)
+  spec_decode — speculative mux-drafted decoding    (serving latency/decode)
   roofline   — dry-run roofline table               (EXPERIMENTS §Roofline)
 
 ``--trace-dir DIR`` makes every serving benchmark also export a Chrome
@@ -60,7 +61,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,fig6,mux_kernel,"
                          "scheduler,paged,prefix,chunked,disagg,"
-                         "obs_overhead,roofline")
+                         "obs_overhead,spec_decode,roofline")
     ap.add_argument("--trace-dir", default="",
                     help="export a Chrome trace JSON per serving benchmark "
                          "into this directory (Perfetto-loadable)")
@@ -111,6 +112,9 @@ def main() -> None:
     if want("obs_overhead"):
         from benchmarks import bench_obs_overhead
         bench_obs_overhead.run()
+    if want("spec_decode"):
+        from benchmarks import bench_spec_decode
+        bench_spec_decode.run()
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()

@@ -425,7 +425,9 @@ def masked_causal_attention(q, k, v, kv_pos, q_pos, *,
     q: (B, S, H, hd); k: (B, T, K, hd); v: (B, T, K, vd).
     kv_pos: absolute position held by each KV slot, (T,) shared or
     (B, T) per row; -1 marks an empty slot.
-    q_pos: (S,) absolute query positions (traced offsets are fine).
+    q_pos: absolute query positions, (S,) shared or (B, S) per row
+    (traced offsets are fine) — the per-row form is the speculative
+    verify step, where rows sit at different decode positions.
     Materialises the S x T score block — tails are short by
     construction; full prompts stay on the blocked flash path.
     Returns (B, S, H, vd).
@@ -439,7 +441,9 @@ def masked_causal_attention(q, k, v, kv_pos, q_pos, *,
                     preferred_element_type=jnp.float32)
     if logit_cap is not None:
         sc = softcap(sc, logit_cap)
-    q_pos = jnp.asarray(q_pos, jnp.int32).reshape((-1,))        # (S,)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]                                     # (1|B, S)
     kv_pos = jnp.asarray(kv_pos, jnp.int32)
     if kv_pos.ndim == 1:
         kv_pos = kv_pos[None]                                   # (1|B, T)
@@ -449,8 +453,8 @@ def masked_causal_attention(q, k, v, kv_pos, q_pos, *,
     if chunk is not None:
         lower = (q_pos // chunk) * chunk
     mask = ((kv_pos[:, None, :] >= 0)
-            & (kv_pos[:, None, :] <= q_pos[None, :, None])
-            & (kv_pos[:, None, :] >= lower[None, :, None]))     # (1|B, S, T)
+            & (kv_pos[:, None, :] <= q_pos[:, :, None])
+            & (kv_pos[:, None, :] >= lower[:, :, None]))        # (1|B, S, T)
     sc = jnp.where(mask[:, None, None], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bkgst,btkv->bskgv", p, v)
@@ -465,13 +469,14 @@ def paged_prefill_attention(q, cache: Params, block_tables, q_offset, *,
     """Tail-prefill attention over the paged pool: queries at absolute
     positions q_offset + arange(S) attend the block-table gather of the
     pool — the resident shared-prefix pages plus the tail K/V this
-    prefill just wrote.  q: (B, S, H, hd); q_offset traced ok."""
+    prefill just wrote.  q: (B, S, H, hd); q_offset is a shared scalar
+    or per-row (B,) (speculative verify), traced ok."""
     k, v = paged_gather_kv(cache, block_tables)
     k = shard(k, "batch", None, "kv_heads", None)
     v = shard(v, "batch", None, "kv_heads", None)
     kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
-    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(
-        q.shape[1], dtype=jnp.int32)
+    q_pos = jnp.asarray(q_offset, jnp.int32).reshape((-1, 1)) + jnp.arange(
+        q.shape[1], dtype=jnp.int32)[None]                      # (1|B, S)
     return masked_causal_attention(q, k, v, kv_pos, q_pos, window=window,
                                    chunk=chunk, scale=scale,
                                    logit_cap=logit_cap)
@@ -560,24 +565,27 @@ def paged_cache_prefill(cache: Params, k, v, block_tables,
     """Write S tokens (B, S, K, hd) at positions start..start+S-1 of
     each row's block-table mapping (prefill into pages).
 
-    ``start`` may be a traced scalar (shared-prefix tail prefill).
-    ``insert_from`` (absolute position, traced ok) redirects writes
-    *below* it to the scratch page: a tail recomputes those positions
-    for the forward pass but must not touch resident shared pages that
-    already hold their K/V.  Positions whose page index falls past the
-    block-table width also land on scratch (right-padding of a
-    page-rounded tail near max_len)."""
+    ``start`` may be a traced scalar (shared-prefix tail prefill) or
+    per-row (B,) (speculative verify: rows at different positions).
+    ``insert_from`` (absolute position, scalar or (B,), traced ok)
+    redirects writes *below* it to the scratch page: a tail recomputes
+    those positions for the forward pass but must not touch resident
+    shared pages that already hold their K/V.  Positions whose page
+    index falls past the block-table width also land on scratch
+    (right-padding of a page-rounded tail near max_len)."""
     ps = cache["k"].shape[1]
     s = k.shape[1]
     m = block_tables.shape[1]
-    positions = (start + jnp.arange(s)).astype(jnp.int32)       # (S,)
-    idx = positions[None] // ps                                 # (1, S)
+    positions = (jnp.asarray(start, jnp.int32).reshape((-1, 1))
+                 + jnp.arange(s, dtype=jnp.int32)[None])        # (1|B, S)
+    idx = positions // ps                                       # (1|B, S)
     page = jnp.take_along_axis(block_tables, jnp.minimum(idx, m - 1),
                                axis=1)                          # (B, S)
     page = jnp.where(idx >= m, SCRATCH_PAGE, page)
     if insert_from is not None:
-        page = jnp.where(positions[None] >= insert_from, page, SCRATCH_PAGE)
-    slot = jnp.broadcast_to(positions[None] % ps, page.shape)
+        ins = jnp.asarray(insert_from, jnp.int32).reshape((-1, 1))
+        page = jnp.where(positions >= ins, page, SCRATCH_PAGE)
+    slot = jnp.broadcast_to(positions % ps, page.shape)
     out = dict(cache)
     if cache["k"].dtype == jnp.int8:
         kq, ks = _quantize(k, jnp.int8)

@@ -103,8 +103,8 @@ def mla_prefill(params: Params, x, *, num_heads: int, q_lora: int, kv_lora: int,
              jnp.broadcast_to(kr_g[:, :, None, :], (b, t, h, d_rope))],
             axis=-1)
         v_g = (c_g @ v_up).reshape(b, t, h, v_head_dim)
-        q_pos = (jnp.asarray(q_offset, jnp.int32)
-                 + jnp.arange(s, dtype=jnp.int32))
+        q_pos = (jnp.asarray(q_offset, jnp.int32).reshape((-1, 1))
+                 + jnp.arange(s, dtype=jnp.int32)[None])        # (1|B, S)
         out = masked_causal_attention(
             q, k_g, v_g, jnp.arange(t, dtype=jnp.int32), q_pos,
             scale=1.0 / math.sqrt(d_nope + d_rope))

@@ -469,7 +469,8 @@ def forward(params: Params, cfg: ModelConfig, tokens, *, image_embeds=None,
         positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
                                      tokens.shape[:2])
         if q_offset is not None:
-            positions = positions + jnp.asarray(q_offset, jnp.int32)
+            off = jnp.asarray(q_offset, jnp.int32)
+            positions = positions + (off[:, None] if off.ndim == 1 else off)
     h = embed_tokens(params, cfg, tokens)
     if cfg.pos_embed == "sinusoidal":
         p = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape((-1, 1)),
@@ -569,6 +570,26 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens, caches,
         h_last = jax.lax.dynamic_slice_in_dim(
             h, jnp.asarray(last_index, jnp.int32), 1, axis=1)
     logits = unembed(params, cfg, h_last)
+    return logits, caches
+
+
+def verify_paged(params: Params, cfg: ModelConfig, tokens, caches,
+                 block_tables, q_offset, *, insert_from=None):
+    """Speculative-decoding verify step: run S = k+1 tokens per row at
+    per-row absolute positions ``q_offset`` (B,) through the paged
+    prefill path and return logits for EVERY position, (B, S, V) — the
+    verifier's greedy picks at offsets 0..k decide how many draft
+    tokens commit.  Rows sit at different decode positions, hence the
+    per-row q_offset; ``insert_from`` (scalar or (B,)) routes writes
+    below it to scratch.  K/V written above a row's finally-committed
+    position is garbage but masked (kv_pos > q_pos) and overwritten by
+    later inserts before ever becoming visible — rollback on the
+    verifier side is purely positional.
+    """
+    h, caches, _ = forward(params, cfg, tokens, mode="prefill", caches=caches,
+                           block_tables=block_tables, q_offset=q_offset,
+                           insert_from=insert_from)
+    logits = unembed(params, cfg, h)
     return logits, caches
 
 

@@ -318,6 +318,10 @@ class InProcessBackend(_ExecutorMixin, ModelBackend):
     same jitted entry points run, serialized on one executor thread
     exactly as the pre-backend worker serialized them."""
 
+    #: executor that serializes with decode — speculative verify steps
+    #: (``spec_decode.SpeculativeBackend``) must run there
+    verify_executor = "device"
+
     def __init__(self, engine, name: Optional[str] = None):
         if engine.pool is None:   # not an assert: must survive python -O
             raise ValueError(
@@ -326,6 +330,12 @@ class InProcessBackend(_ExecutorMixin, ModelBackend):
         self.engine = engine
         self.name = name or f"inproc:{engine.cfg.name}"
         self._init_executors(["device"])
+
+    @property
+    def verify_engine(self):
+        """The engine whose paged caches multi-token verify steps run
+        against (the speculative-decoding verify surface)."""
+        return self.engine
 
     def bind_tracer(self, tracer) -> None:
         super().bind_tracer(tracer)
@@ -470,6 +480,8 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
     representation included) bit-for-bit."""
 
     concurrent_prefill = True
+    #: speculative verify serializes with decode on the decode executor
+    verify_executor = "decode"
 
     def __init__(self, prefill_engine, decode_engine,
                  name: Optional[str] = None):
@@ -621,6 +633,12 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
         return await self._run("decode",
                                self.decode_engine.decode_step_batch, seqs,
                                op="decode_step")
+
+    @property
+    def verify_engine(self):
+        """Speculative verify runs against the decode engine's caches
+        (that is where running sequences' K/V lives)."""
+        return self.decode_engine
 
     def release(self, seq) -> None:
         seq.transfer_package = None
@@ -785,7 +803,12 @@ class RemoteSequence:
                 setattr(self, k, state[k])
         if "tokens" in state:
             self.tokens = [int(t) for t in state["tokens"]]
-        if "new_token" in state:
+        if "new_tokens" in state:
+            # one decode call may append SEVERAL tokens (speculative
+            # decoding commits draft runs); takes precedence over the
+            # legacy single-token key, never both
+            self.tokens.extend(int(t) for t in state["new_tokens"])
+        elif "new_token" in state:
             self.tokens.append(int(state["new_token"]))
 
 
@@ -868,10 +891,17 @@ class BackendServer:
                     "state": self._state_of(seq, tokens=done)}
         if op == "decode":
             seqs = [self._seqs[sid] for sid in body["sids"]]
+            # snapshot per-row token counts first: a speculative inner
+            # backend commits a RUN of tokens per call, and the client
+            # mirror needs every one of them (plus new_token for
+            # compatibility with v1 clients that predate new_tokens)
+            before = [len(s.tokens) for s in seqs]
             await self.inner.decode_batch(seqs)
             return {"rows": [dict(self._state_of(s),
-                                  new_token=int(s.tokens[-1]))
-                             for s in seqs]}
+                                  new_token=int(s.tokens[-1]),
+                                  new_tokens=[int(t)
+                                              for t in s.tokens[n0:]])
+                             for s, n0 in zip(seqs, before)]}
         if op == "release":
             seq = self._seqs.pop(body["sid"], None)
             if seq is not None:

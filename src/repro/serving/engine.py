@@ -85,6 +85,8 @@ class Engine:
         self._paged_prefill_tail = None
         self._paged_decode = None
         self._paged_decode_cow = None
+        self._paged_verify = None
+        self._lazy_decode_alloc = False
         self._max_pages = 0
         self._decode_batch = 0
         self._caches_poisoned = False
@@ -199,7 +201,8 @@ class Engine:
                    decode_batch: int = 8, dtype=None,
                    prefix_sharing: bool = True,
                    logit_cache: int = 0,
-                   span_reclaim: bool = True) -> PagePool:
+                   span_reclaim: bool = True,
+                   lazy_decode_alloc: bool = False) -> PagePool:
         """Allocate the paged KV pool and compile the paged entry
         points.  ``dtype=None`` honors ``cfg.kv_cache_dtype`` (int8
         pools store quantized pages, dequantized in-kernel).  The pool
@@ -213,7 +216,12 @@ class Engine:
         ``span_reclaim=False`` disables decode-time freeing of pages
         that have fallen wholly below every layer's attention span (the
         window/chunked memory reclaim; a no-op anyway when any layer
-        attends the full context)."""
+        attends the full context).  ``lazy_decode_alloc=True`` seals a
+        prefill with only the prompt's pages instead of reserving the
+        whole prompt+budget span — decode steps then grow the sequence
+        page-by-page as it advances.  The speculative drafter runs its
+        engine this way so a rejected draft's pages can be handed back
+        (``rollback_pages``) instead of sitting reserved."""
         if self.cfg.num_codebooks:
             raise NotImplementedError(
                 "paged decode supports single-stream token LMs")
@@ -234,6 +242,7 @@ class Engine:
         self._span_reclaim = span_reclaim
         self._layer_spans = self._banded_spans()
         self.reclaimed_pages = 0
+        self._lazy_decode_alloc = lazy_decode_alloc
         cfg = self.cfg
         self._paged_caches = tf.init_caches(cfg, 0, 0, dtype,
                                             num_pages=num_pages,
@@ -251,6 +260,11 @@ class Engine:
         def paged_decode_fn(p, token, caches, bt, pos):
             return tf.decode_step(p, cfg, token, caches, pos,
                                   block_tables=bt)
+
+        def paged_verify_fn(p, tokens, caches, bt, q_offset):
+            # speculative verify: S = k+1 tokens per row at per-row
+            # absolute positions, logits for every fed position
+            return tf.verify_paged(p, cfg, tokens, caches, bt, q_offset)
 
         def paged_decode_cow_fn(p, token, caches, bt, pos, src, dst):
             # fused copy-on-write: duplicate the shared pages into this
@@ -272,6 +286,7 @@ class Engine:
             self._paged_decode = jax.jit(paged_decode_fn, donate_argnums=(2,))
             self._paged_decode_cow = jax.jit(paged_decode_cow_fn,
                                              donate_argnums=(2,))
+            self._paged_verify = jax.jit(paged_verify_fn, donate_argnums=(2,))
 
         ctx = axis_rules(self.rules) if self.rules is not None else None
         if ctx:
@@ -518,8 +533,8 @@ class Engine:
         if matched == p and self._logit_cache_cap > 0:
             row = self._logit_cache_get(self._prompt_key(seq.prompt))
             if row is not None:
-                self._grow_pages(seq,
-                                 pool.pages_for(p + seq.max_new_tokens))
+                self._grow_pages(seq, pool.pages_for(
+                    self._sealed_span(p, seq.max_new_tokens)))
                 tok = int(np.asarray(self._sample_rows(
                     jnp.asarray(row)[None], np.asarray([seq.seed]),
                     np.asarray([p]), temps=[seq.temperature]))[0])
@@ -530,6 +545,12 @@ class Engine:
                                     track=self.trace_track,
                                     args={"prompt_len": int(p)})
                 self._seal_prefill(seq, tok)
+
+    def _sealed_span(self, p: int, max_new_tokens: int) -> int:
+        """Token span a sealing prefill reserves pages for: the whole
+        prompt+decode budget normally, or just prompt+1 under lazy
+        decode allocation (decode steps grow page-by-page instead)."""
+        return (p + 1) if self._lazy_decode_alloc else (p + max_new_tokens)
 
     def _grow_pages(self, seq: PagedSequence, upto: int) -> None:
         """Extend ``seq`` to hold ``upto`` pages (alloc + block-table
@@ -590,7 +611,8 @@ class Engine:
         o = seq.prefill_pos
         length = p - o if chunk_tokens is None else min(chunk_tokens, p - o)
         final = o + length >= p
-        span = (p + seq.max_new_tokens) if final else (o + length)
+        span = (self._sealed_span(p, seq.max_new_tokens) if final
+                else (o + length))
         self._grow_pages(seq, pool.pages_for(span))    # OutOfPages: no-op
         prompt = jnp.asarray(seq.prompt, jnp.int32)
         bt = jnp.asarray(seq.block_table)[None]
@@ -692,6 +714,13 @@ class Engine:
         if len(seqs) > cap:
             raise ValueError(f"{len(seqs)} sequences > decode_batch={cap}")
         ps = self.pool.page_size
+        # lazy decode-budget allocation: a sequence sealed without its
+        # full decode span grows page-by-page as it advances (no-op for
+        # fully-reserved sequences).  OutOfPages raises BEFORE any
+        # device work with every page list exact — backpressure, not
+        # corruption.
+        for seq in seqs:
+            self._grow_pages(seq, self.pool.pages_for(seq.pos + 1))
         # copy-on-write, fused into the decode jit: a sequence about to
         # insert into a page other sequences still map gets a private
         # copy as part of the decode step itself (sharing must never let
@@ -777,6 +806,84 @@ class Engine:
             seq.tokens.append(int(nxt[i]))
             self._reclaim_out_of_span(seq)
         return nxt[:len(seqs)]
+
+    # ---- speculative decoding: verify + draft-page rollback ----------
+    def verify_step_batch(self, rows: Sequence[Tuple[PagedSequence,
+                                                     Sequence[int]]],
+                          *, width: int) -> List[np.ndarray]:
+        """Verify up to ``decode_batch`` rows of drafted tokens in ONE
+        multi-token step (the chunked-prefill traced-q_offset path with
+        per-row positions).  Each row feeds
+        ``[seq.last_token, d_1 .. d_k]`` at absolute positions
+        ``seq.pos .. seq.pos + k`` and gets back the verifier's greedy
+        pick after every fed token — ``out[i][j]`` is the token the
+        verifier would emit after seeing the row's context plus drafts
+        ``d_1..d_j``, so the longest matching prefix decides how many
+        drafts commit.  ``width`` fixes the compiled shape (S = width
+        >= k + 1 for every row; short rows right-pad).
+
+        Sequence state is NOT advanced here — the caller commits
+        accepted tokens (``spec_decode.SpeculativeBackend``).  K/V
+        written above a row's finally-committed position is garbage but
+        positionally masked and overwritten before ever becoming
+        visible, so verifier-side rollback costs nothing; inactive and
+        padded slots write the scratch page."""
+        with self._device_lock:
+            return self._verify_step_batch_locked(rows, width)
+
+    def _verify_step_batch_locked(self, rows, width: int) -> List[np.ndarray]:
+        if self.pool is None:
+            raise RuntimeError("no paged KV pool: call init_paged() first")
+        cap = self._decode_batch
+        if len(rows) > cap:
+            raise ValueError(f"{len(rows)} verify rows > "
+                             f"decode_batch={cap}")
+        for seq, drafts in rows:
+            if len(drafts) + 1 > width:
+                raise ValueError(f"{len(drafts)} drafts + 1 exceeds the "
+                                 f"verify width {width}")
+        tokens = np.zeros((cap, width), np.int32)
+        bt = np.full((cap, self._max_pages), SCRATCH_PAGE, np.int32)
+        q_off = np.zeros((cap,), np.int32)
+        for i, (seq, drafts) in enumerate(rows):
+            tokens[i, 0] = seq.last_token
+            tokens[i, 1:1 + len(drafts)] = drafts
+            bt[i] = seq.block_table
+            q_off[i] = seq.pos
+        try:
+            logits, self._paged_caches = self._paged_verify(
+                self.params, jnp.asarray(tokens), self._paged_caches,
+                jnp.asarray(bt), jnp.asarray(q_off))
+            # greedy only: speculative rows are restricted to
+            # temperature <= 0 (exactness is argmax parity).
+            # Materialise inside the guard — async dispatch surfaces
+            # jit failures here, after the caches were donated.
+            picks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        except Exception:
+            self._caches_poisoned = True
+            raise
+        return [picks[i, :len(drafts) + 1]
+                for i, (seq, drafts) in enumerate(rows)]
+
+    def rollback_pages(self, seq: PagedSequence, span_tokens: int) -> int:
+        """Hand back the pages of ``seq`` past the page covering
+        ``span_tokens`` tokens — refcounted decref, block-table slots
+        fall back to scratch.  The speculative drafter calls this after
+        a verify round to free what its rejected drafts allocated; the
+        page list stays exact throughout, so ``pool.release(seq)``
+        after a mid-verify cancellation is still a complete rollback.
+        Returns the number of pages freed."""
+        keep = self.pool.pages_for(span_tokens)
+        freed: List[int] = []
+        while len(seq.pages) > keep:
+            pg = seq.pages.pop()
+            seq.block_table[len(seq.pages)] = SCRATCH_PAGE
+            if pg is not None:
+                seq.prefix_keys = self.pool.disown_prefix(seq.prefix_keys, pg)
+                freed.append(pg)
+        if freed:
+            self.pool.decref(freed)
+        return len(freed)
 
     def generate_paged(self, prompt, *, max_new_tokens: int,
                        seed: Optional[int] = None,

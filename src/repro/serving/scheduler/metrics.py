@@ -134,6 +134,12 @@ class SchedulerMetrics:
         self.backend_queue_wait = [self._reservoir() for _ in range(n)]
         self.transfer_lat = [self._reservoir() for _ in range(n)]
         self.transfers = [0] * n
+        # measured prefill-chunk stall per PAGE (seconds/page, one
+        # reservoir per model): what one chunk page actually costs the
+        # running decode streams.  The adaptive chunk-size policy sizes
+        # chunks against this distribution once it has evidence,
+        # instead of guessing a stall from the inter-token latency
+        self.chunk_stall_page = [self._reservoir() for _ in range(n)]
         self.tracer = NULL_TRACER
         self.trace_instants: Dict[str, int] = {}
         self._service_ema: List[Optional[float]] = [None] * n
@@ -310,6 +316,24 @@ class SchedulerMetrics:
         self.transfer_lat[model_id].add(seconds)
         self.transfers[model_id] += 1
 
+    def on_chunk_stall(self, model_id: int, pages: int,
+                       seconds: float) -> None:
+        """One measured prefill-chunk execution: ``pages`` pages took
+        ``seconds`` on the model's executor.  Recorded per page so
+        chunks of different sizes feed one comparable distribution."""
+        if pages > 0 and 0 <= model_id < len(self.chunk_stall_page):
+            self.chunk_stall_page[model_id].add(seconds / pages)
+
+    def chunk_stall_per_page(self, model_id: int,
+                             percentile: float = 90.0) -> Optional[float]:
+        """Measured seconds one chunk page stalls this model's decode
+        streams (a high percentile — sizing against the tail is what
+        protects SLOs); None until enough chunks ran to trust it."""
+        r = self.chunk_stall_page[model_id]
+        if len(r) < 5:
+            return None
+        return r.percentile_ms(percentile) / 1e3
+
     def service_estimate(self, model_id: int) -> Optional[float]:
         """EMA of observed service time for one model (seconds); None
         until that model has completed at least one request."""
@@ -369,6 +393,8 @@ class SchedulerMetrics:
             "transfer_p99_ms": [r.percentile_ms(99)
                                 for r in self.transfer_lat],
             "transfer_count": list(self.transfers),
+            "chunk_stall_page_p90_ms": [r.percentile_ms(90)
+                                        for r in self.chunk_stall_page],
             # rejected traffic's queue wait (failed/cancelled after
             # admission) — deliberately not mixed into queue_*_ms
             "rejected_count": len(self.rejected_queue_lat),

@@ -571,13 +571,19 @@ class PagedLLMScheduler(SchedulerLifecycle):
     def _adaptive_chunk_pages(self, m: int) -> int:
         """SLO-aware size for the NEXT prefill chunk, in pages.
 
-        A chunk of P pages stalls every running decode stream for
-        roughly P x one decode step (the chunk and the step serialize
-        on the model's executor), so the budget question is whether the
-        tightest running stream — smallest remaining deadline budget
-        minus its estimated remaining decode time — can absorb that
-        stall.  Idle backends (nothing decoding) take the ceiling;
-        streams without inter-token evidence yet keep the base size.
+        A chunk of P pages stalls every running decode stream while it
+        holds the model's executor, so the budget question is whether
+        the tightest running stream — smallest remaining deadline
+        budget minus its estimated remaining decode time — can absorb
+        that stall.  Once enough chunks have run, the stall estimate is
+        the MEASURED per-page chunk duration distribution (its p90 —
+        sizing against the tail is what protects SLOs), and the policy
+        picks the largest compiled size (min/base/max, the shapes
+        warmup compiled) whose predicted stall still fits the slack
+        with the ``chunk_slack`` safety margin.  Before that evidence
+        exists it bootstraps from the old heuristic — one page costs
+        about one decode step.  Idle backends (nothing decoding) take
+        the ceiling; streams without inter-token evidence keep base.
         """
         cfg = self.cfg
         base = cfg.prefill_chunk_pages
@@ -597,6 +603,14 @@ class PagedLLMScheduler(SchedulerLifecycle):
             (e.req.deadline_t - now)
             - (e.req.max_new_tokens - len(e.seq.tokens)) * itl_s
             for e in active)
+        per_page = self.metrics.chunk_stall_per_page(m)
+        if per_page is not None and per_page > 0:
+            # measured policy: largest compiled size whose tail stall
+            # the tightest stream can absorb (with the safety margin)
+            for pages in sorted({lo, base, hi}, reverse=True):
+                if cfg.chunk_slack * pages * per_page <= slack:
+                    return pages
+            return lo
         if slack < cfg.chunk_slack * base * itl_s:
             return lo
         if slack > cfg.chunk_slack * hi * itl_s:
@@ -829,6 +843,11 @@ class PagedLLMScheduler(SchedulerLifecycle):
                 active = slots.active()
                 if active:
                     t0 = self.clock()
+                    # token counts BEFORE the step: one decode call may
+                    # append a RUN of tokens per row (speculative
+                    # decoding commits accepted drafts in one sweep),
+                    # and every one of them must emit a TOKEN event
+                    before = [len(e.seq.tokens) for e in active]
                     try:
                         await backend.decode_batch([e.seq for e in active])
                     except Exception as exc:
@@ -862,7 +881,9 @@ class PagedLLMScheduler(SchedulerLifecycle):
                     self.decode_batches += 1
                     self.metrics.on_batch(m, len(active), slots.capacity)
                     self.metrics.on_model_busy(m, t1 - t0)
-                    self.tokens_generated += len(active)
+                    self.tokens_generated += sum(
+                        len(e.seq.tokens) - n0
+                        for e, n0 in zip(active, before))
                     if self.tracer.enabled:
                         self.tracer.span(
                             "DECODE_STEP", backend_track(backend.name,
@@ -871,10 +892,13 @@ class PagedLLMScheduler(SchedulerLifecycle):
                             {"model": m, "batch": len(active),
                              "pages": sum(len(getattr(e.seq, "pages", ()))
                                           for e in active)})
-                    for e in active:
+                    for e, n0 in zip(active, before):
+                        new = e.seq.tokens[n0:]
                         if not e.req.is_terminal:
-                            e.req.on_token(int(e.seq.tokens[-1]),
-                                           e.seq.pos, t1)
+                            for j, tok in enumerate(new):
+                                e.req.on_token(
+                                    int(tok),
+                                    e.seq.pos - len(new) + 1 + j, t1)
                         if e.last_token_t:
                             self.metrics.on_decode_gap(m,
                                                        t1 - e.last_token_t)
@@ -926,7 +950,8 @@ class PagedLLMScheduler(SchedulerLifecycle):
         backend = self.backends[m]
         prefilling, slots = self._prefilling[m], self.slots[m]
         tracer = self.tracer
-        t0 = self.clock() if tracer.enabled else 0.0
+        t0 = self.clock()
+        pos0 = ent.seq.prefill_pos
         chunk_fut = asyncio.ensure_future(
             backend.prefill_chunk(ent.seq, chunk_tokens=chunk_tokens))
         try:
@@ -1001,6 +1026,11 @@ class PagedLLMScheduler(SchedulerLifecycle):
         if slots.active():
             self.interleaved_chunks += 1
         t = self.clock()
+        # feed the measured stall distribution the adaptive chunk
+        # policy sizes against (per page, so it transfers across sizes)
+        ps = max(1, backend.capacity().page_size)
+        pages_run = max(1, -(-(ent.seq.prefill_pos - pos0) // ps))
+        self.metrics.on_chunk_stall(m, pages_run, t - t0)
         if tracer.enabled:
             tracer.span(f"PREFILL_CHUNK[{ent.chunks}]",
                         request_track(ent.req.rid), t0, t,
@@ -1102,6 +1132,11 @@ class PagedLLMScheduler(SchedulerLifecycle):
             "logit_cache_hits": total("logit_cache_hits"),
             "logit_cache_misses": total("logit_cache_misses"),
             "transfers": total("transfers"),
+            # speculative decoding (spec_decode.SpeculativeBackend):
+            # zeros on non-speculative backends
+            "draft_tokens": total("draft_tokens"),
+            "accepted_tokens": total("accepted_tokens"),
+            "spec_fallbacks": total("spec_fallbacks"),
             "pools": [s.get("pool") for s in bstats],
             "backends": bstats,
         })

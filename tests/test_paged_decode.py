@@ -500,6 +500,53 @@ def test_adaptive_chunk_policy_slo_slack():
     assert sched._adaptive_chunk_pages(0) == 2
 
 
+def test_adaptive_chunk_policy_measured_stalls():
+    """Once >=5 chunks have been measured, the policy sizes against the
+    per-page stall distribution's p90 instead of the one-page-per-decode
+    heuristic: largest of {lo, base, hi} whose chunk_slack-padded stall
+    fits the tightest stream's slack.  (5ms/page p90, margin 4x ->
+    hi=8 needs 160ms, base=2 needs 40ms, lo=1 needs 20ms of slack.)"""
+    sched = _policy_sched()
+    ent = _join(sched, deadline_t=0.3)
+    for _ in range(8):
+        sched.metrics.itl_by_model[0].add(0.010)
+    # under 5 samples -> no evidence -> heuristic (slack 200ms: base)
+    for _ in range(4):
+        sched.metrics.on_chunk_stall(0, 2, 0.010)
+    assert sched.metrics.chunk_stall_per_page(0) is None
+    assert sched._adaptive_chunk_pages(0) == 2
+    sched.metrics.on_chunk_stall(0, 2, 0.010)        # 5th sample
+    assert sched.metrics.chunk_stall_per_page(0) == pytest.approx(0.005)
+    # measured policy kicks in: slack 200ms >= 160ms -> ceiling
+    assert sched._adaptive_chunk_pages(0) == 8
+    sched.slots[0].retire(ent)
+    _join(sched, deadline_t=0.2)                     # slack 100ms -> base
+    assert sched._adaptive_chunk_pages(0) == 2
+    _join(sched, deadline_t=0.13)                    # slack 30ms -> floor
+    assert sched._adaptive_chunk_pages(0) == 1
+    _join(sched, deadline_t=0.105)                   # slack 5ms: nothing
+    assert sched._adaptive_chunk_pages(0) == 1       # fits -> still floor
+    snap = sched.metrics.snapshot()
+    assert snap["chunk_stall_page_p90_ms"][0] == pytest.approx(5.0)
+
+
+def test_chunk_stall_measurement_guards():
+    """Degenerate measurements never poison the policy: zero-page calls
+    are dropped, and all-zero durations (fake clocks) leave the policy
+    on the heuristic path rather than dividing slack by zero."""
+    sched = _policy_sched()
+    sched.metrics.on_chunk_stall(0, 0, 0.010)        # dropped
+    assert len(sched.metrics.chunk_stall_page[0]) == 0
+    for _ in range(6):
+        sched.metrics.on_chunk_stall(0, 1, 0.0)
+    assert sched.metrics.chunk_stall_per_page(0) == 0.0
+    _join(sched, deadline_t=1.0)
+    for _ in range(8):
+        sched.metrics.itl_by_model[0].add(0.010)
+    # per-page 0.0 -> measured branch skipped -> heuristic ceiling
+    assert sched._adaptive_chunk_pages(0) == 8
+
+
 def test_next_chunk_tokens_traces_counter():
     """_next_chunk_tokens converts the policy's pages to tokens and
     exposes the choice as the 'chunk_pages' tracer counter; with

@@ -8,6 +8,11 @@ the next chunk's pages onto a live sequence, ``share`` is a
 prefix-sharing join, ``cow`` a copy-on-write, ``release`` a normal
 retire, and ``cancel`` a mid-flight abort (streaming API) that must
 restore the pool to the sequence's pre-admission unique-page count.
+Speculative decoding adds three more: ``draft`` grows provisional
+pages a verify round may throw away, ``accept`` commits them, and
+``rollback`` is the rejected-draft reconcile — a refcounted decref of
+every page above the kept boundary, exactly what
+``Engine.rollback_pages`` does to a draft cache.
 
 Invariants (the ownership contract the prefix-sharing serving stack
 leans on):
@@ -16,23 +21,37 @@ leans on):
   * pages_in_use + num_free is conserved at num_pages - 1;
   * the scratch page is never handed out;
   * allocation is lowest-id deterministic: replaying an op trace on a
-    fresh pool yields identical page assignments;
+    fresh pool yields identical page assignments — with speculative
+    draft/accept/rollback interleaved with COW and cancel;
   * a cancel of a partially-grown sequence frees exactly the unique
-    pages that sequence held;
+    pages that sequence held — including mid-verify, with draft pages
+    outstanding;
+  * a rollback frees exactly the dropped pages this sequence held
+    exclusively (shared holders keep theirs);
   * after every sequence retires the pool drains to zero pages held,
-    zero prefix entries, zero COW headroom — nothing leaks.
+    zero prefix entries, zero COW headroom — nothing leaks, rejected
+    drafts included.
 """
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("pool-ci", max_examples=40, deadline=None)
+    settings.load_profile("pool-ci")
+except ImportError:
+    # the @given property tests skip; the fixed-trace replay tests —
+    # same interpreter, same invariants — still run
+    class _NoStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+    st = _NoStrategies()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
 
 from repro.models.attention import SCRATCH_PAGE
 from repro.serving.kv_cache import PagePool
-
-settings.register_profile("pool-ci", max_examples=40, deadline=None)
-settings.load_profile("pool-ci")
 
 
 class SimSeq:
@@ -41,6 +60,7 @@ class SimSeq:
     def __init__(self, pages):
         self.pages = list(pages)
         self.prefix_keys = []
+        self.spec_mark = None       # page count before outstanding drafts
 
 
 def apply_op(pool: PagePool, live, op):
@@ -66,6 +86,29 @@ def apply_op(pool: PagePool, live, op):
         new = pool.alloc(1)[0]
         pool.decref([old])
         seq.pages[op[2]] = new
+    elif kind == "draft":
+        # speculative draft: provisional pages grown past the committed
+        # boundary; a later accept keeps them, a rollback decrefs them
+        seq = live[op[1]]
+        if seq.spec_mark is None:
+            seq.spec_mark = len(seq.pages)
+        seq.pages.extend(pool.alloc(op[2]))
+    elif kind == "accept":
+        # verify round accepted the drafts: they become committed pages
+        live[op[1]].spec_mark = None
+    elif kind == "rollback":
+        # verify round rejected drafts past op[2]: refcounted decref of
+        # the dropped span — only pages this sequence held exclusively
+        # come back to the free list
+        seq = live[op[1]]
+        dropped = seq.pages[op[2]:]
+        del seq.pages[op[2]:]
+        before = pool.pages_in_use
+        exclusive = sum(1 for pg in set(dropped)
+                        if pool.refcount(pg) == 1 and pg not in seq.pages)
+        pool.decref(dropped)
+        assert pool.pages_in_use == before - exclusive
+        seq.spec_mark = None
     elif kind == "release":
         pool.release(live.pop(op[1]))
     elif kind == "cancel":
@@ -121,6 +164,12 @@ def test_pool_random_alloc_share_cow_decref(data):
         if live and pool.num_free and any(
                 pool.refcount(pg) > 1 for s in live for pg in s.pages):
             ops.append("cow")
+        if live and pool.num_free:
+            ops.append("draft")
+        specced = [i for i, s in enumerate(live) if s.spec_mark is not None]
+        if specced:
+            ops.append("accept")
+            ops.append("rollback")
         kind = data.draw(st.sampled_from(sorted(ops)), label="op")
         if kind == "alloc":
             n = data.draw(st.integers(1, pool.num_free), label="n")
@@ -137,6 +186,19 @@ def test_pool_random_alloc_share_cow_decref(data):
                      for j, pg in enumerate(s.pages)
                      if pool.refcount(pg) > 1]
             op = ("cow",) + data.draw(st.sampled_from(cands), label="page")
+        elif kind == "draft":
+            op = ("draft", data.draw(st.integers(0, len(live) - 1),
+                                     label="seq"),
+                  data.draw(st.integers(1, pool.num_free), label="n"))
+        elif kind == "accept":
+            op = ("accept", data.draw(st.sampled_from(specced), label="seq"))
+        elif kind == "rollback":
+            i = data.draw(st.sampled_from(specced), label="seq")
+            # keep anywhere from the committed boundary (full rejection)
+            # to everything (k accepted, nothing to roll back)
+            op = ("rollback", i,
+                  data.draw(st.integers(live[i].spec_mark,
+                                        len(live[i].pages)), label="keep"))
         elif kind == "cancel":
             op = ("cancel", data.draw(st.integers(0, len(live) - 1),
                                       label="seq"))
@@ -206,3 +268,48 @@ def test_prefix_index_random_prompt_traffic(data):
     assert pool.pages_in_use == 0
     assert pool.prefix_entries == 0
     assert pool.num_free == pool.num_pages - 1
+
+
+def test_spec_draft_rollback_fixed_trace():
+    """Deterministic spec-decode lifecycle through the same interpreter
+    the property test drives (and a guaranteed-covered floor for its
+    draft ops): draft pages interleave with prefix shares, COW, and
+    mid-verify cancellation; every rollback decref frees exactly the
+    exclusively-held span; replay on a fresh pool is bit-identical; and
+    the pool drains to zero with rejected drafts in the history."""
+    trace = [
+        ("alloc", 3),           # s0: three committed pages
+        ("draft", 0, 2),        # s0 drafts two provisional pages
+        ("share", 0),           # s1 joins mid-verify, sharing the drafts
+        ("rollback", 0, 4),     # s0 rejects its last draft page — s1
+                                # still holds it, so nothing frees yet
+        ("cancel", 1),          # s1 aborts mid-verify: the orphaned
+                                # draft page must come back now
+        ("alloc", 2),           # s1': fresh stream
+        ("draft", 1, 3),
+        ("accept", 1),          # verify accepted: drafts are committed
+        ("draft", 1, 2),
+        ("rollback", 1, 5),     # full rejection of the second round
+        ("share", 0),           # s2 shares s0's surviving pages
+        ("cow", 2, 2),          # s2 copy-on-writes a shared page
+        ("draft", 2, 1),
+        ("cancel", 2),          # cancel with a draft outstanding
+    ]
+    pool = PagePool(num_pages=12, page_size=4)
+    live = []
+    for op in trace:
+        apply_op(pool, live, op)
+        check_invariants(pool, live)
+
+    pool2 = PagePool(num_pages=12, page_size=4)
+    live2 = run_trace(pool2, trace)
+    assert [s.pages for s in live2] == [s.pages for s in live]
+    assert pool2.pages_in_use == pool.pages_in_use
+
+    for seq in list(live):
+        pool.release(seq)
+    assert pool.pages_in_use == 0
+    assert pool.num_free == pool.num_pages - 1
+    assert pool.prefix_entries == 0
+    assert pool.cow_headroom == 0
+    assert pool.refcount(SCRATCH_PAGE) == 0
