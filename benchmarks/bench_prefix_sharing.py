@@ -21,9 +21,18 @@ token-identical across modes, and peak unique pages land strictly
 below the baseline — then emits the CSV rows plus
 results/BENCH_prefix_sharing.json.
 
+A second entry point, ``run_host_tier`` (``--only host_tier``), measures
+the KV memory hierarchy: cold-start TTFT (full prefix prefill) vs
+host-hit TTFT (the prefix restores from the host tier and only the
+divergent tail prefills).  It *asserts* the tier contract — host-hit
+TTFT strictly below cold-start with token-identical outputs, and an
+eviction + re-admission trace whose allocation exceeds the free pages
+(it would previously reject with OutOfPages) completing via spill —
+then emits results/BENCH_host_tier.json.
+
   PYTHONPATH=src python -m benchmarks.bench_prefix_sharing
   PYTHONPATH=src python -m benchmarks.bench_prefix_sharing --trace out.json
-  PYTHONPATH=src python -m benchmarks.run --only prefix
+  PYTHONPATH=src python -m benchmarks.run --only prefix,host_tier
 """
 from __future__ import annotations
 
@@ -204,6 +213,115 @@ def run() -> None:
     })
 
 
+# ---------------------------------------------------------------------------
+# Host-tier memory hierarchy: cold-start vs host-hit TTFT
+# ---------------------------------------------------------------------------
+
+HOST_PREFIX_PAGES = 12                 # a long system prompt: 12 pages
+HOST_PREFIX_LEN = HOST_PREFIX_PAGES * PAGE_SIZE   # = 192 tokens
+HOST_TAIL_LEN = 9                      # divergent user tail
+HOST_TRIALS = 7                        # median over repeats
+
+
+def _host_prompt(cfg: ModelConfig) -> np.ndarray:
+    key = jax.random.key(31)
+    prefix = np.asarray(jax.random.randint(key, (HOST_PREFIX_LEN,), 0,
+                                           cfg.vocab_size))
+    tail = np.asarray(jax.random.randint(jax.random.fold_in(key, 1),
+                                         (HOST_TAIL_LEN,), 0,
+                                         cfg.vocab_size))
+    return np.concatenate([prefix, tail])
+
+
+def run_host_tier() -> None:
+    cfg = bench_config()
+    params = tf.init_params(cfg, jax.random.key(0))
+    prompt = _host_prompt(cfg)
+
+    # cold reference: a flat pool re-prefills the whole prompt every
+    # time (release frees and unregisters everything)
+    flat = Engine(cfg, params, ServeConfig(max_len=MAX_LEN))
+    flat.init_paged(num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+                    decode_batch=DECODE_BATCH, prefix_sharing=True)
+    ref = flat.generate_paged(prompt, max_new_tokens=MAX_NEW)["tokens"]
+    cold_runs = [flat.generate_paged(prompt, max_new_tokens=MAX_NEW)
+                 for _ in range(HOST_TRIALS)]
+
+    # host-hit: every trial starts fully cold on the DEVICE (the
+    # retained prefix dropped to host) but warm in the host tier, so
+    # TTFT = restore (gather from host + one scatter) + tail prefill
+    tiered = Engine(cfg, params, ServeConfig(max_len=MAX_LEN))
+    tiered.init_paged(num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+                      decode_batch=DECODE_BATCH, prefix_sharing=True,
+                      host_tier_pages=2 * HOST_PREFIX_PAGES)
+    tiered.generate_paged(prompt, max_new_tokens=MAX_NEW)   # seed + compile
+    tiered.pool.drop_retained()
+    tiered.generate_paged(prompt, max_new_tokens=MAX_NEW)   # compile tail
+    hit_runs = []
+    for _ in range(HOST_TRIALS):
+        tiered.pool.drop_retained()
+        hit_runs.append(tiered.generate_paged(prompt,
+                                              max_new_tokens=MAX_NEW))
+
+    # ---- the tier contract, asserted -----------------------------------
+    for r in cold_runs + hit_runs:      # bitwise-identical across tiers
+        np.testing.assert_array_equal(r["tokens"], ref)
+    ht = tiered.host_tier.stats()
+    assert ht["hits"] >= HOST_TRIALS and ht["restored_pages"] >= (
+        HOST_TRIALS * HOST_PREFIX_PAGES), ht
+    ttft_cold = float(np.median([r["prefill_s"] for r in cold_runs]))
+    ttft_hit = float(np.median([r["prefill_s"] for r in hit_runs]))
+    assert ttft_hit < ttft_cold, (
+        f"host-hit TTFT must beat cold-start: {ttft_hit * 1e6:.0f}us vs "
+        f"{ttft_cold * 1e6:.0f}us")
+
+    # ---- eviction + re-admission: spill-not-reject ---------------------
+    # 17 allocatable pages; the long prompt seals holding 14, its
+    # release retains 13 (12 full chunks + boundary), leaving 4 free.
+    # The next admission needs 11 — a flat pool would raise OutOfPages
+    # — and completes by spilling the cold prefix to host.
+    small = Engine(cfg, params, ServeConfig(max_len=MAX_LEN))
+    pool = small.init_paged(num_pages=18, page_size=PAGE_SIZE,
+                            decode_batch=DECODE_BATCH, prefix_sharing=True,
+                            host_tier_pages=2 * HOST_PREFIX_PAGES)
+    small.generate_paged(prompt, max_new_tokens=MAX_NEW)
+    other = np.asarray(jax.random.randint(jax.random.key(47), (160,), 0,
+                                          cfg.vocab_size))
+    need, _ = small.admission_page_cost(other, MAX_NEW)
+    free_before = pool.num_free
+    assert need > free_before, (need, free_before)   # flat pool: reject
+    seq = small.prefill_into_pages(other, max_new_tokens=MAX_NEW)
+    spilled = pool.stats()["pages_spilled"]
+    assert spilled >= need - free_before, pool.stats()
+    pool.release(seq)
+    pool.drop_retained()
+    assert pool.pages_in_use == 0, pool.stats()
+
+    common.emit("host_tier_cold_ttft", ttft_cold * 1e6,
+                f"prefix_pages={HOST_PREFIX_PAGES} prompt_len={len(prompt)}")
+    common.emit(
+        "host_tier_hit_ttft", ttft_hit * 1e6,
+        f"speedup={ttft_cold / max(ttft_hit, 1e-9):.2f}x "
+        f"restored_pages_per_hit={HOST_PREFIX_PAGES + 1} outputs=identical")
+    common.emit_json("host_tier", {
+        "config": {"max_len": MAX_LEN, "max_new_tokens": MAX_NEW,
+                   "page_size": PAGE_SIZE, "prefix_len": HOST_PREFIX_LEN,
+                   "prompt_len": len(prompt), "num_pages": NUM_PAGES,
+                   "host_tier_pages": 2 * HOST_PREFIX_PAGES,
+                   "trials": HOST_TRIALS},
+        "ttft_cold_us": ttft_cold * 1e6,
+        "ttft_host_hit_us": ttft_hit * 1e6,
+        "ttft_speedup": ttft_cold / max(ttft_hit, 1e-9),
+        "outputs_identical": True,
+        "host_tier": ht,
+        "spill_not_reject": {"pages_needed": need,
+                             "free_pages_before": free_before,
+                             "pages_spilled": spilled,
+                             "completed": True},
+    })
+
+
 if __name__ == "__main__":
     print("name,us_per_call,derived")
     run()
+    run_host_tier()

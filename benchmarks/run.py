@@ -12,6 +12,7 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   scheduler  — continuous-batching goodput vs load  (serving runtime)
   paged      — ring vs paged KV decode, mixed lens  (serving memory/runtime)
   prefix     — prefix-sharing COW pages vs private  (serving memory/prefill)
+  host_tier  — cold-start vs host-hit TTFT, spill   (serving memory hierarchy)
   chunked    — chunked vs serial prefill TTFT       (serving streaming/TTFT)
   disagg     — disaggregated vs interleaved prefill (serving backends/ITL)
   obs_overhead — traced vs untraced throughput      (serving observability)
@@ -60,7 +61,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,fig6,mux_kernel,"
-                         "scheduler,paged,prefix,chunked,disagg,"
+                         "scheduler,paged,prefix,host_tier,chunked,disagg,"
                          "obs_overhead,spec_decode,roofline")
     ap.add_argument("--trace-dir", default="",
                     help="export a Chrome trace JSON per serving benchmark "
@@ -103,6 +104,9 @@ def main() -> None:
     if want("prefix"):
         from benchmarks import bench_prefix_sharing
         bench_prefix_sharing.run()
+    if want("host_tier"):
+        from benchmarks import bench_prefix_sharing
+        bench_prefix_sharing.run_host_tier()
     if want("chunked"):
         from benchmarks import bench_chunked_prefill
         bench_chunked_prefill.run()

@@ -8,12 +8,14 @@ from repro.serving.backend import (BackendCapacity, DisaggregatedBackend,
 from repro.serving.engine import Engine, ServeConfig
 from repro.serving.kv_cache import (OutOfPages, PagePool, PagedCacheConfig,
                                     PagedSequence)
+from repro.serving.kv_host_tier import HostTier, TieredPagePool
 from repro.serving.mux_server import MuxServer, MuxServerConfig
 from repro.serving.observability import (NULL_TRACER, Tracer,
                                          validate_chrome_trace)
 
 __all__ = ["Engine", "ServeConfig", "MuxServer", "MuxServerConfig",
            "OutOfPages", "PagePool", "PagedCacheConfig", "PagedSequence",
+           "HostTier", "TieredPagePool",
            "ModelBackend", "BackendCapacity", "InProcessBackend",
            "InProcessMuxBackend", "DisaggregatedBackend",
            "RemoteStubBackend", "Tracer", "NULL_TRACER",

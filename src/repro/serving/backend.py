@@ -167,6 +167,11 @@ class ModelBackend:
         return (-(-(prompt_len + max_new_tokens) // cap.page_size)
                 <= cap.num_pages)
 
+    def set_lazy_decode_alloc(self, enabled: bool) -> None:
+        """Push the scheduler's ``lazy_decode_alloc`` policy down to the
+        paged engine(s).  No-op by default — request-level backends hold
+        no pages to reserve lazily."""
+
     @property
     def healthy(self) -> bool:
         return True
@@ -369,12 +374,19 @@ class InProcessBackend(_ExecutorMixin, ModelBackend):
         return await self._run("device", self.engine.prewarm_logits, prompt,
                                op="probe")
 
+    def set_lazy_decode_alloc(self, enabled: bool) -> None:
+        self.engine.set_lazy_decode_alloc(enabled)
+
     # ---- admission -----------------------------------------------------
     def capacity(self) -> BackendCapacity:
+        # reclaimable pages (the tiered pool's cold retained prefixes)
+        # count as free: admission pressure spills them to host instead
+        # of rejecting the request
         pool = self.engine.pool
         return BackendCapacity(
             decode_batch=self.engine.decode_batch, page_size=pool.page_size,
-            num_pages=pool.num_pages - 1, free_pages=pool.num_free,
+            num_pages=pool.num_pages - 1,
+            free_pages=pool.num_free + pool.reclaimable_pages,
             cow_headroom=pool.cow_headroom, max_len=self.engine.scfg.max_len,
             inflight=self._inflight)
 
@@ -521,19 +533,30 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
     def build(cls, cfg, params, scfg, *, num_pages: int, page_size: int = 64,
               decode_batch: int = 8, prefill_pages: Optional[int] = None,
               dtype=None, prefix_sharing: bool = True, logit_cache: int = 0,
+              host_tier_pages: int = 0, spill_watermark: float = 0.0,
               name: Optional[str] = None) -> "DisaggregatedBackend":
         """Construct both engines over shared params.  ``num_pages``
         sizes the decode (serving) pool; ``prefill_pages`` the staging
         pool (defaults to the same).  Prefix sharing and the logit
         cache live on the prefill side — that is where prompts run;
         the decode pool needs neither (the transfer copy already gives
-        every sequence private pages)."""
+        every sequence private pages).
+
+        ``host_tier_pages`` turns on the KV memory hierarchy on the
+        *staging* pool: the gather stage's release then RETAINS a
+        transferred sequence's prefix pages instead of freeing them, so
+        a repeated system prompt maps them and skips the prefill
+        compute entirely (the transfer still copies — the decode pool
+        deliberately has no sharing), and cold retained prefixes spill
+        to host RAM under pressure rather than rejecting admissions."""
         from repro.serving.engine import Engine
         pre = Engine(cfg, params, scfg)
         pre.init_paged(num_pages=prefill_pages or num_pages,
                        page_size=page_size, decode_batch=decode_batch,
                        dtype=dtype, prefix_sharing=prefix_sharing,
-                       logit_cache=logit_cache)
+                       logit_cache=logit_cache,
+                       host_tier_pages=host_tier_pages,
+                       spill_watermark=spill_watermark)
         dec = Engine(cfg, params, scfg)
         dec.init_paged(num_pages=num_pages, page_size=page_size,
                        decode_batch=decode_batch, dtype=dtype,
@@ -669,13 +692,21 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
         return self.prefill_engine.admission_page_cost(
             prompt, max_new_tokens, chunk_tokens=chunk_tokens)
 
+    def set_lazy_decode_alloc(self, enabled: bool) -> None:
+        # the staging pool is where sealing reserves pages (the decode
+        # pool always grows transferred sequences page-by-page)
+        self.prefill_engine.set_lazy_decode_alloc(enabled)
+
     def admissible(self, prompt, max_new_tokens, *, chunk_tokens=None):
         need, extra = self.admission_cost(prompt, max_new_tokens,
                                           chunk_tokens=chunk_tokens)
         pool = self.prefill_engine.pool
-        ok = need + pool.cow_headroom + extra <= pool.num_free
+
+        def free():      # cold retained prefixes spill instead of rejecting
+            return pool.num_free + pool.reclaimable_pages
+        ok = need + pool.cow_headroom + extra <= free()
         if not ok and self.prefill_engine.shed_prewarmed():
-            ok = need + pool.cow_headroom + extra <= pool.num_free
+            ok = need + pool.cow_headroom + extra <= free()
         return ok
 
     def fits_ever(self, prompt_len, max_new_tokens):

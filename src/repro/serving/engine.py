@@ -202,7 +202,9 @@ class Engine:
                    prefix_sharing: bool = True,
                    logit_cache: int = 0,
                    span_reclaim: bool = True,
-                   lazy_decode_alloc: bool = False) -> PagePool:
+                   lazy_decode_alloc: bool = False,
+                   host_tier_pages: int = 0,
+                   spill_watermark: float = 0.0) -> PagePool:
         """Allocate the paged KV pool and compile the paged entry
         points.  ``dtype=None`` honors ``cfg.kv_cache_dtype`` (int8
         pools store quantized pages, dequantized in-kernel).  The pool
@@ -221,13 +223,34 @@ class Engine:
         whole prompt+budget span — decode steps then grow the sequence
         page-by-page as it advances.  The speculative drafter runs its
         engine this way so a rejected draft's pages can be handed back
-        (``rollback_pages``) instead of sitting reserved."""
+        (``rollback_pages``) instead of sitting reserved.
+
+        ``host_tier_pages > 0`` turns on the KV memory hierarchy
+        (repro.serving.kv_host_tier): the pool becomes a
+        ``TieredPagePool`` that retains finished sequences' prefix
+        pages, spills them to a host-RAM tier under pressure (or
+        proactively past ``spill_watermark``, a fraction of allocatable
+        pages to keep free), and restores them through a fixed-shape
+        gather/scatter transfer on a later prefix hit — a host hit
+        prefills only the divergent tail."""
         if self.cfg.num_codebooks:
             raise NotImplementedError(
                 "paged decode supports single-stream token LMs")
-        self.pool = PagePool(num_pages=num_pages, page_size=page_size,
-                             prefix_sharing=prefix_sharing)
+        self.host_tier = None
+        if host_tier_pages > 0:
+            from repro.serving.kv_host_tier import HostTier, TieredPagePool
+            self.host_tier = HostTier(host_tier_pages, page_size=page_size)
+            self.pool = TieredPagePool(num_pages=num_pages,
+                                       page_size=page_size,
+                                       prefix_sharing=prefix_sharing,
+                                       host_tier=self.host_tier,
+                                       spill_watermark=spill_watermark)
+        else:
+            self.pool = PagePool(num_pages=num_pages, page_size=page_size,
+                                 prefix_sharing=prefix_sharing)
         self._max_pages = self.pool.pages_for(self.scfg.max_len)
+        if self.host_tier is not None:
+            self.pool.bind_spill(self._spill_pages, self._max_pages)
         self._decode_batch = decode_batch
         self._caches_poisoned = False
         self.prefill_tokens_computed = 0
@@ -278,6 +301,19 @@ class Engine:
             return tf.decode_step(p, cfg, token, caches, pos,
                                   block_tables=bt)
 
+        def tier_gather_fn(caches, pages):
+            # host-tier spill: pull whole pages off the device.  NOT
+            # donating — the pages stay valid until the pool decrefs
+            # them after the host store commits.
+            return jax.tree.map(lambda x: x[:, pages], caches)
+
+        def tier_scatter_fn(caches, package, pages):
+            # host-tier restore: land host pages in freshly-allocated
+            # device pages (rows padded with the scratch page id, so
+            # zero-pad garbage goes where garbage already lives)
+            return jax.tree.map(lambda c, pkg: c.at[:, pages].set(pkg),
+                                caches, package)
+
         def compile_all():
             self._paged_prefill = jax.jit(paged_prefill_fn,
                                           donate_argnums=(2,))
@@ -287,6 +323,9 @@ class Engine:
             self._paged_decode_cow = jax.jit(paged_decode_cow_fn,
                                              donate_argnums=(2,))
             self._paged_verify = jax.jit(paged_verify_fn, donate_argnums=(2,))
+            self._tier_gather = jax.jit(tier_gather_fn)
+            self._tier_scatter = jax.jit(tier_scatter_fn,
+                                         donate_argnums=(0,))
 
         ctx = axis_rules(self.rules) if self.rules is not None else None
         if ctx:
@@ -294,6 +333,15 @@ class Engine:
                 compile_all()
         else:
             compile_all()
+        if self.host_tier is not None:
+            # pre-compile the tier transfer on scratch-only page lists
+            # (gather scratch, scatter it straight back): the first real
+            # spill/restore must not pay a mid-serve XLA compile
+            idle = jnp.full((self._max_pages,), SCRATCH_PAGE, jnp.int32)
+            pkg = self._tier_gather(self._paged_caches, idle)
+            self._paged_caches = self._tier_scatter(self._paged_caches,
+                                                    pkg, idle)
+            jax.block_until_ready(jax.tree.leaves(self._paged_caches)[0])
         return self.pool
 
     @property
@@ -435,7 +483,7 @@ class Engine:
         running batch's frees."""
         prompt_np = np.asarray(prompt, np.int32).reshape((-1,))
         p = len(prompt_np)
-        total = self.pool.pages_for(p + max_new_tokens)
+        total = self.pool.pages_for(self._sealed_span(p, max_new_tokens))
         mapped, matched, shared_len = self._shared_prefix(prompt_np, p)
         headroom = (1 if (mapped and matched == p and p % self.pool.page_size)
                     else 0)
@@ -528,6 +576,11 @@ class Engine:
             seq.prefill_pos = shared_len
             seq.shared_prefix_len = shared_len
             seq.insert_from = len(mapped) * ps
+        # memory hierarchy: where the device-resident prefix ends, the
+        # host tier may hold the next chunks — restore them instead of
+        # recomputing (matched == p never restores: fully resident)
+        if self.host_tier is not None and p > 1 and matched < p:
+            self._restore_from_host(seq)
         # zero-FLOP admission: fully-resident repeat prompt + cached
         # final-token logits -> skip even the one-token tail prefill
         if matched == p and self._logit_cache_cap > 0:
@@ -551,6 +604,88 @@ class Engine:
         prompt+decode budget normally, or just prompt+1 under lazy
         decode allocation (decode steps grow page-by-page instead)."""
         return (p + 1) if self._lazy_decode_alloc else (p + max_new_tokens)
+
+    def set_lazy_decode_alloc(self, enabled: bool) -> None:
+        """Flip lazy decode allocation after ``init_paged`` (the
+        scheduler pushes ``PagedLLMConfig.lazy_decode_alloc`` here at
+        startup).  Only affects sequences sealed from now on — already
+        sealed sequences keep whatever span they reserved."""
+        self._lazy_decode_alloc = bool(enabled)
+
+    # ---- host tier: spill / restore -----------------------------------
+    def _spill_pages(self, pages: Sequence[int]):
+        """Gather whole pages off the device for the host tier — the
+        callback ``TieredPagePool.bind_spill`` runs during eviction
+        (never under the pool lock; this takes the device lock itself).
+        Returns a host-materialised package, leaves
+        ``(g, max_pages, page_size, ...)`` with rows past len(pages)
+        garbage (the store ignores them)."""
+        with self._device_lock:
+            if self._caches_poisoned:
+                raise RuntimeError("paged caches poisoned: cannot spill")
+            t0 = time.time()
+            padded = np.full((self._max_pages,), SCRATCH_PAGE, np.int32)
+            padded[:len(pages)] = pages
+            package = jax.tree.map(
+                np.asarray,
+                self._tier_gather(self._paged_caches, jnp.asarray(padded)))
+            self.tracer.span("SPILL", track=self.trace_track,
+                             t0=t0, t1=time.time(),
+                             args={"pages": len(pages)})
+            return package
+
+    def _restore_from_host(self, seq: PagedSequence) -> None:
+        """Continue a prompt's chunk chain into the host tier: where
+        the device-resident prefix ends, restore the host-resident run
+        into fresh device pages (fixed-shape scatter) and advance the
+        sequence as if those pages had been resident all along — the
+        tail prefill then computes only what neither tier holds.
+        OutOfPages on the restore allocation degrades to a plain miss
+        (chunked prefill proceeds normally); a scatter failure poisons
+        the caches but leaks nothing (the new pages decref, the host
+        entries survive untouched)."""
+        pool, ps = self.pool, self.pool.page_size
+        p = seq.prompt_len
+        base = len(seq.pages)       # device-mapped chunks (all full:
+        #                             a matched partial means matched == p,
+        #                             which never reaches here)
+        run = self.host_tier.lookup(seq.prompt, start_chunk=base)
+        if not run:
+            return
+        n = len(run)
+        matched_total = p if run[-1][2] else (base + n) * ps
+        shared_len = min(matched_total, p - 1)
+        if shared_len <= seq.prefill_pos:
+            return                  # would not advance the prefill
+        try:
+            new = pool.alloc(n)     # may itself spill colder pages
+        except OutOfPages:
+            return                  # treat as a miss, never as failure
+        t0 = time.time()
+        package = self.host_tier.load([s for _k, s, _pt in run],
+                                      self._max_pages)
+        padded = np.full((self._max_pages,), SCRATCH_PAGE, np.int32)
+        padded[:n] = new
+        try:
+            self._paged_caches = self._tier_scatter(
+                self._paged_caches, package, jnp.asarray(padded))
+            jax.block_until_ready(jax.tree.leaves(self._paged_caches)[0])
+        except Exception:
+            self._caches_poisoned = True
+            pool.decref(new)
+            raise
+        # the chunks are device-resident again: retire the host copies
+        # (one tier owns a chunk at a time; they re-index on seal)
+        self.host_tier.consume([k for k, _s, _pt in run])
+        for pg in new:
+            seq.block_table[len(seq.pages)] = pg
+            seq.pages.append(pg)
+        seq.prefill_pos = shared_len
+        seq.shared_prefix_len = shared_len
+        seq.insert_from = len(seq.pages) * ps
+        self.tracer.span("RESTORE", track=self.trace_track,
+                         t0=t0, t1=time.time(),
+                         args={"pages": n, "shared_len": int(shared_len)})
 
     def _grow_pages(self, seq: PagedSequence, upto: int) -> None:
         """Extend ``seq`` to hold ``upto`` pages (alloc + block-table
@@ -720,7 +855,15 @@ class Engine:
         # device work with every page list exact — backpressure, not
         # corruption.
         for seq in seqs:
-            self._grow_pages(seq, self.pool.pages_for(seq.pos + 1))
+            try:
+                self._grow_pages(seq, self.pool.pages_for(seq.pos + 1))
+            except OutOfPages as exc:
+                # like cow_seq below: tag the starving sequence so the
+                # scheduler can fail just this request instead of the
+                # whole backend (lazy decode alloc means a healthy
+                # batch can hit this under plain pressure)
+                exc.grow_seq = seq
+                raise
         # copy-on-write, fused into the decode jit: a sequence about to
         # insert into a page other sequences still map gets a private
         # copy as part of the decode step itself (sharing must never let

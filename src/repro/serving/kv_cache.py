@@ -84,6 +84,25 @@ def _chunk_key(prev: bytes, tokens: np.ndarray, partial: bool) -> bytes:
     return h.digest()
 
 
+def chunk_keys(tokens, page_size: int) -> List[Tuple[bytes, bool]]:
+    """(key, is_partial) for every page-aligned chunk of ``tokens`` —
+    the content-address chain both the device-resident ``PrefixIndex``
+    and the host tier (repro.serving.kv_host_tier) key pages by, so a
+    chunk spilled to host RAM is found under exactly the key its
+    device-resident twin would carry.  A zero-token prompt yields no
+    keys — empty chunks are never indexed (see ``PagePool.pages_for``:
+    zero tokens need zero pages)."""
+    toks = np.ascontiguousarray(np.asarray(tokens).reshape(-1), np.int64)
+    keys: List[Tuple[bytes, bool]] = []
+    prev = b""
+    for start in range(0, len(toks), page_size):
+        chunk = toks[start:start + page_size]
+        partial = len(chunk) < page_size
+        prev = _chunk_key(prev, chunk, partial)
+        keys.append((prev, partial))
+    return keys
+
+
 @dataclasses.dataclass
 class _PrefixEntry:
     page: int           # resident physical page holding this chunk's KV
@@ -113,19 +132,15 @@ class PrefixIndex:
         return len(self._entries)
 
     def _keys_for(self, tokens) -> List[Tuple[bytes, bool]]:
-        """(key, is_partial) for every page-aligned chunk of ``tokens``.
-        A zero-token prompt yields no keys — empty chunks are never
-        indexed (see PagePool.pages_for: zero tokens need zero pages)."""
-        toks = np.ascontiguousarray(np.asarray(tokens).reshape(-1), np.int64)
-        ps = self.page_size
-        keys: List[Tuple[bytes, bool]] = []
-        prev = b""
-        for start in range(0, len(toks), ps):
-            chunk = toks[start:start + ps]
-            partial = len(chunk) < ps
-            prev = _chunk_key(prev, chunk, partial)
-            keys.append((prev, partial))
-        return keys
+        """(key, is_partial) per page-aligned chunk (see chunk_keys)."""
+        return chunk_keys(tokens, self.page_size)
+
+    def page_of(self, key: bytes) -> Optional[int]:
+        """Resident page backing one chunk key (None = not indexed) —
+        the tiered pool resolves a retiring sequence's keys to the
+        pages its retention LRU takes over."""
+        ent = self._entries.get(key)
+        return None if ent is None else ent.page
 
     def lookup(self, tokens) -> Tuple[List[int], int]:
         """Longest indexed page-aligned prefix of ``tokens``.
@@ -276,6 +291,15 @@ class PagePool:
         """Free pages admission must hold back: every writable shared
         page may still need (refcount - 1) copy-on-write copies."""
         return sum(max(self._ref.get(p, 0) - 1, 0) for p in self._cow_risk)
+
+    @property
+    def reclaimable_pages(self) -> int:
+        """Held pages ``alloc`` could claw back on demand without
+        failing anyone (0 here: a flat pool only backpressures).  The
+        tiered pool (repro.serving.kv_host_tier.TieredPagePool) counts
+        its retention LRU — admission adds this to ``num_free`` so
+        pressure spills cold prefixes to host instead of rejecting."""
+        return 0
 
     def pages_for(self, num_tokens: int) -> int:
         """Pages needed to hold ``num_tokens`` KV entries.  Zero tokens

@@ -1,0 +1,450 @@
+"""Host-tier KV page cache: spill, prefix retention, and restore.
+
+The paper's core move is placing work where it is cheapest; this module
+applies the same placement to *memory*.  The flat ``PagePool`` has two
+costly edges: exhaustion is pure backpressure (admission rejects or
+waits), and a finished request's shared-prefix pages die with their
+last reference — every cold start re-prefills from token zero.  The
+host tier closes both, Mooncake-style (trade storage for compute):
+
+  retain   ``TieredPagePool.release`` keeps a retiring sequence's
+           still-indexed prompt pages resident instead of freeing them
+           — the pool's retention LRU takes over the sequence's
+           refcount and its ``PrefixIndex`` backings, so the very next
+           request with the same prefix maps the pages zero-copy,
+           exactly like hitting a live resident.
+  spill    when device pressure crosses a watermark (or an ``alloc``
+           comes up short), the LRU-coldest retained pages are gathered
+           off the device through the engine's fixed-shape jitted
+           gather and stored in ``HostTier`` — a host-RAM page store
+           keyed by the SAME content-address chunk chain
+           (``kv_cache.chunk_keys``) the device index uses.  Only pages
+           whose refcount is exactly 1 (tier-held, no live mapper) ever
+           spill, so a chunk is never resident in both tiers at once.
+  restore  a later prompt whose chain walks past the device-resident
+           prefix continues into the host tier: the engine allocates
+           fresh device pages and scatters the host copy back (the same
+           fixed-shape transfer path the disaggregated backend uses),
+           then prefills only the divergent tail.  A host hit costs one
+           host->device copy instead of a prefill — the TTFT trade the
+           ROADMAP's KV-memory-hierarchy item asks for.
+
+Lock discipline (the one rule that matters): the pool lock is never
+held across device work.  Victim selection — removing pages from the
+retention LRU and unregistering their index backings so no new lookup
+can map them — happens under the pool lock; the jitted gather runs
+with the lock dropped (the engine's spill callback takes the device
+lock itself); the host store + final decref re-take the pool lock.
+A spill that fails for any reason degrades to a plain eviction: the
+pages are freed and the cache entry is simply lost, never leaked.
+
+On this CPU-backed test environment the "host tier" slabs are ordinary
+numpy arrays; on an accelerator deployment the same slabs would live
+in pinned host memory (jax's ``pinned_host`` memory kind) so the
+gather/scatter DMA engines can reach them — nothing in the bookkeeping
+here changes.
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.serving.kv_cache import OutOfPages, PagePool, chunk_keys
+
+
+class HostTier:
+    """Host-RAM page store, content-addressed by prefix chunk chains.
+
+    Slabs mirror the device cache pytree one page at a time: the first
+    ``store`` fixes the leaf shapes from the gathered package (leaves
+    are ``(g, W, page_size, ...)``; the slab allocates ``num_pages``
+    rows of the same per-page shape).  Entries form an LRU keyed by
+    ``kv_cache.chunk_keys`` chain keys — the same content address the
+    device ``PrefixIndex`` uses, so a spilled chunk is found under
+    exactly the key its device-resident twin would carry.  ``lookup``
+    walks a prompt's chain from a given chunk onward and stops at the
+    first miss (a chunk chain is only usable as an unbroken prefix);
+    ``consume`` removes entries after a successful restore, which is
+    what keeps a chunk from being resident in both tiers.
+    """
+
+    def __init__(self, num_pages: int, page_size: int = 64):
+        if num_pages < 0:
+            raise ValueError(f"num_pages must be >= 0, got {num_pages}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self._lock = threading.RLock()
+        self._slabs: Optional[Any] = None       # pytree of numpy slabs
+        self._free: List[int] = list(range(self.num_pages))
+        heapq.heapify(self._free)
+        # key -> slot, insertion/touch order == LRU (first = coldest)
+        self._entries: "collections.OrderedDict[bytes, int]" = \
+            collections.OrderedDict()
+        self._slot_keys: Dict[int, Set[bytes]] = {}
+        # counters (snapshot surface: host_tier_* keys)
+        self.hits = 0               # lookups that extended a prefix
+        self.misses = 0             # lookups that found nothing
+        self.spilled_pages = 0      # pages stored by spills
+        self.restored_pages = 0     # pages copied back to device
+        self.evicted_pages = 0      # entries dropped for host capacity
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    # ---- store (spill) ------------------------------------------------
+    def _ensure_slabs(self, package: Any) -> None:
+        if self._slabs is not None:
+            return
+        import jax
+        self._slabs = jax.tree.map(
+            lambda x: np.zeros((x.shape[0], self.num_pages) + x.shape[2:],
+                               np.asarray(x).dtype), package)
+
+    def _evict_coldest(self) -> bool:
+        """Drop the LRU-coldest entry (host capacity pressure)."""
+        if not self._entries:
+            return False
+        key, slot = self._entries.popitem(last=False)
+        keys = self._slot_keys.get(slot)
+        if keys is not None:
+            keys.discard(key)
+            if not keys:
+                del self._slot_keys[slot]
+                heapq.heappush(self._free, slot)
+        self.evicted_pages += 1
+        return True
+
+    def store(self, items: Sequence[Tuple[bytes, int]], package: Any) -> int:
+        """Store gathered pages: ``items`` maps chunk key -> row index
+        into ``package`` (leaves ``(g, W, page_size, ...)``).  Rows
+        land in host slab slots; the LRU evicts its coldest entries
+        when the tier is full.  Returns the number of pages stored."""
+        if self.num_pages == 0 or not items:
+            return 0
+        import jax
+        with self._lock:
+            self._ensure_slabs(package)
+            stored = 0
+            for key, row in items:
+                if key in self._entries:        # already host-resident
+                    self._entries.move_to_end(key)
+                    continue
+                while not self._free:
+                    if not self._evict_coldest():
+                        return stored           # tier genuinely full
+                slot = heapq.heappop(self._free)
+                jax.tree.map(
+                    lambda slab, pkg: slab.__setitem__(
+                        (slice(None), slot),
+                        np.asarray(pkg[:, row])),
+                    self._slabs, package)
+                self._entries[key] = slot
+                self._slot_keys.setdefault(slot, set()).add(key)
+                self.spilled_pages += 1
+                stored += 1
+            return stored
+
+    # ---- lookup / load (restore) --------------------------------------
+    def lookup(self, tokens, *, start_chunk: int = 0
+               ) -> List[Tuple[bytes, int, bool]]:
+        """Walk ``tokens``' chunk chain from ``start_chunk`` (chunks
+        below it are device-resident) and return the host-resident run
+        ``[(key, slot, is_partial), ...]`` up to the first miss.
+        Matched entries are touched (LRU refresh); an empty return
+        counts a miss, a non-empty one a hit."""
+        keys = chunk_keys(tokens, self.page_size)
+        out: List[Tuple[bytes, int, bool]] = []
+        with self._lock:
+            for key, partial in keys[start_chunk:]:
+                slot = self._entries.get(key)
+                if slot is None:
+                    break
+                self._entries.move_to_end(key)
+                out.append((key, slot, partial))
+            if out:
+                self.hits += 1
+            elif len(keys) > start_chunk:
+                self.misses += 1
+        return out
+
+    def load(self, slots: Sequence[int], width: int) -> Any:
+        """Render host rows as a scatter package: leaves
+        ``(g, width, page_size, ...)``, rows past ``len(slots)``
+        zero-padded (they scatter to the scratch page)."""
+        import jax
+        with self._lock:
+            if self._slabs is None:
+                raise ValueError("host tier is empty: nothing to load")
+
+            def leaf(slab):
+                out = np.zeros((slab.shape[0], width) + slab.shape[2:],
+                               slab.dtype)
+                for i, slot in enumerate(slots):
+                    out[:, i] = slab[:, slot]
+                return out
+            return jax.tree.map(leaf, self._slabs)
+
+    def consume(self, keys: Sequence[bytes]) -> None:
+        """A restore committed: the chunks are device-resident again
+        (and will re-register in the device index when their sequence
+        seals), so their host entries retire — one tier owns a chunk
+        at a time."""
+        with self._lock:
+            for key in keys:
+                slot = self._entries.pop(key, None)
+                if slot is None:
+                    continue
+                sk = self._slot_keys.get(slot)
+                if sk is not None:
+                    sk.discard(key)
+                    if not sk:
+                        del self._slot_keys[slot]
+                        heapq.heappush(self._free, slot)
+                self.restored_pages += 1
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"num_pages": self.num_pages,
+                    "pages_in_use": self.pages_in_use,
+                    "entries": len(self._entries),
+                    "hits": self.hits, "misses": self.misses,
+                    "spilled_pages": self.spilled_pages,
+                    "restored_pages": self.restored_pages,
+                    "evicted_pages": self.evicted_pages}
+
+
+class TieredPagePool(PagePool):
+    """``PagePool`` with prefix retention and host-tier spill.
+
+    ``release`` becomes *deferred* for index-reachable prompt pages: the
+    retention LRU inherits the retiring sequence's reference and its
+    prefix-index backings, so the pages stay mappable (a zero-copy
+    resident hit) until pressure reclaims them.  ``alloc`` never gives
+    up while retained pages exist — it evicts LRU-coldest retained
+    pages (spilling refcount-1 pages to the host tier first) and
+    retries, so a request that would previously reject with
+    ``OutOfPages`` completes once cold prefixes move down-tier.
+    ``spill_watermark`` (a fraction of allocatable pages) spills
+    proactively at release time so admission headroom exists before
+    the shortfall, not after.
+
+    The engine binds the device half via ``bind_spill``: a callback
+    gathering pages into a host package (run with the pool lock
+    DROPPED — see module docstring for the lock rule).  Without a
+    bound callback (or a host tier), eviction degrades to dropping the
+    retained pages — plain LRU retention, still strictly better than
+    the flat pool's free-at-release."""
+
+    def __init__(self, num_pages: int, page_size: int = 64,
+                 prefix_sharing: bool = True, *,
+                 host_tier: Optional[HostTier] = None,
+                 spill_watermark: float = 0.0):
+        super().__init__(num_pages, page_size=page_size,
+                         prefix_sharing=prefix_sharing)
+        if not 0.0 <= spill_watermark < 1.0:
+            raise ValueError(f"spill_watermark must be in [0, 1), got "
+                             f"{spill_watermark}")
+        self.host_tier = host_tier
+        self.spill_watermark = float(spill_watermark)
+        # page -> the index keys the tier inherited for it; order is the
+        # retention LRU (first = coldest).  incref (a new mapper) and
+        # re-retention refresh a page's position.
+        self._retained: "collections.OrderedDict[int, List[bytes]]" = \
+            collections.OrderedDict()
+        self._spill_fn: Optional[Callable[[List[int]], Any]] = None
+        self._spill_width = 0
+        # counters (snapshot surface)
+        self.pages_retained_total = 0   # retention events (cumulative)
+        self.pages_spilled = 0          # evictions that reached the host
+        self.pages_dropped = 0          # evictions that freed without spill
+
+    def bind_spill(self, fn: Callable[[List[int]], Any],
+                   max_pages: int) -> None:
+        """Attach the engine's gather callback: ``fn(pages)`` returns a
+        host package (leaves ``(g, max_pages, page_size, ...)``) for up
+        to ``max_pages`` pages per call.  Called WITHOUT the pool lock
+        held; the callback serializes on the engine's device lock."""
+        self._spill_fn = fn
+        self._spill_width = int(max_pages)
+
+    # ---- geometry / introspection -------------------------------------
+    @property
+    def retained_pages(self) -> int:
+        return len(self._retained)
+
+    @property
+    def spillable_pages(self) -> int:
+        """Retained pages whose eviction frees a device page right now
+        (refcount 1: only the tier holds them)."""
+        with self._lock:
+            return sum(1 for pg in self._retained
+                       if self._ref.get(pg) == 1)
+
+    @property
+    def reclaimable_pages(self) -> int:
+        return self.spillable_pages
+
+    def _watermark_target(self) -> int:
+        return int(self.spill_watermark * (self.num_pages - 1))
+
+    # ---- retention (deferred release) ---------------------------------
+    def release(self, seq) -> None:
+        """Retire one sequence, retaining its index-reachable prompt
+        pages: the retention LRU inherits this sequence's reference
+        and index backings for every page its prefix keys still
+        resolve to; everything else (decode tail, COW'd copies,
+        already-retained pages) decrefs as usual.  A never-sealed
+        sequence has no prefix keys, so failed-admission rollbacks
+        keep their exact free-everything semantics."""
+        with self._lock:
+            keys = getattr(seq, "prefix_keys", None) or []
+            held = [pg for pg in seq.pages if pg is not None]
+            held_set = set(held)
+            inherit: Dict[int, List[bytes]] = {}
+            passthrough: List[bytes] = []
+            for key in keys:
+                pg = self._index.page_of(key)
+                if (pg is None or pg not in held_set
+                        or pg in self._retained):
+                    # stale key, disowned page, or the tier already
+                    # backs this page from an earlier retirement: this
+                    # sequence's claim retires normally
+                    passthrough.append(key)
+                elif pg in inherit:
+                    inherit[pg].append(key)
+                else:
+                    inherit[pg] = [key]
+            if passthrough:
+                self._index.unregister(passthrough)
+            seq.prefix_keys = []
+            for pg, ks in inherit.items():
+                self._retained[pg] = ks         # newest = hottest end
+                self.pages_retained_total += 1
+            self.decref([pg for pg in held if pg not in inherit])
+            if inherit and self.tracer.enabled:
+                self.tracer.instant("page_retain", track=self.trace_track,
+                                    args={"n": len(inherit),
+                                          "retained": len(self._retained)})
+        # proactive spill OUTSIDE the pool lock (device gather inside)
+        if self.spill_watermark > 0.0:
+            shortfall = self._watermark_target() - self.num_free
+            if shortfall > 0:
+                self._reclaim(shortfall)
+
+    def incref(self, pages: Sequence[int]) -> None:
+        super().incref(pages)
+        with self._lock:
+            for pg in pages:
+                if int(pg) in self._retained:   # a live mapper: hot again
+                    self._retained.move_to_end(int(pg))
+
+    def decref(self, pages: Sequence[int]) -> None:
+        super().decref(pages)
+        with self._lock:
+            for pg in pages:
+                pg = int(pg)
+                if pg in self._retained and pg not in self._ref:
+                    # freed out from under its retention (only reachable
+                    # by driving the pool raw — the tier itself always
+                    # holds one ref): drop the stale claim so a future
+                    # alloc can't hand out a page the LRU still lists
+                    del self._retained[pg]
+
+    # ---- eviction / spill ---------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        while True:
+            try:
+                return super().alloc(n)
+            except OutOfPages:
+                with self._lock:
+                    shortfall = n - len(self._free)
+                    if not self._retained:
+                        raise
+                if self._reclaim(shortfall) <= 0:
+                    raise
+
+    def _reclaim(self, need: int) -> int:
+        """Evict LRU-coldest retained pages until ``need`` device pages
+        came free (or retention runs dry).  Selection — LRU pop +
+        unregistering the inherited index backings, so no concurrent
+        lookup can map a victim mid-flight — runs under the pool lock;
+        the spill gather runs with it dropped.  Returns pages freed."""
+        freed = 0
+        while freed < max(need, 1):
+            with self._lock:
+                victims: List[Tuple[int, List[bytes]]] = []
+                budget = max(need - freed, 1)
+                if self._spill_width:
+                    budget = min(budget, self._spill_width)
+                while self._retained and len(victims) < budget:
+                    pg, ks = self._retained.popitem(last=False)
+                    self._index.unregister(ks)
+                    victims.append((pg, ks))
+                if not victims:
+                    break
+                # a page some live sequence still maps frees nothing by
+                # eviction: just drop the tier's claim (its content
+                # stays device-resident with its mappers — never copy a
+                # chunk to host while it is mapped on device)
+                drop_now = [(pg, ks) for pg, ks in victims
+                            if self._ref.get(pg, 0) != 1]
+                spill = [(pg, ks) for pg, ks in victims
+                         if self._ref.get(pg, 0) == 1]
+                for pg, _ks in drop_now:
+                    self.decref([pg])
+                    self.pages_dropped += 1
+            stored = 0
+            if spill and self.host_tier is not None \
+                    and self._spill_fn is not None:
+                pages = [pg for pg, _ in spill]
+                try:
+                    package = self._spill_fn(pages)   # device work: no lock
+                except Exception:
+                    package = None                    # degrade to drop
+                if package is not None:
+                    items = [(ks[0], row) for row, (_pg, ks)
+                             in enumerate(spill) if ks]
+                    stored = self.host_tier.store(items, package)
+            with self._lock:
+                for pg, _ks in spill:
+                    self.decref([pg])
+                    freed += 1
+                    if stored:
+                        self.pages_spilled += 1
+                    else:
+                        self.pages_dropped += 1
+            if not spill:
+                # every victim this round was drop-only; count their
+                # contribution (they freed nothing) and keep going only
+                # while retention has more to give
+                with self._lock:
+                    if not self._retained:
+                        break
+        return freed
+
+    def drop_retained(self) -> int:
+        """Evict every retained page (drop/spill as usual) — the
+        deterministic 'make it cold' hook tests and benchmarks use.
+        Returns pages freed."""
+        with self._lock:
+            n = len(self._retained)
+        return self._reclaim(n) if n else 0
+
+    def stats(self) -> Dict[str, Any]:
+        s = super().stats()
+        s.update({"retained_pages": self.retained_pages,
+                  "spillable_pages": self.spillable_pages,
+                  "pages_retained_total": self.pages_retained_total,
+                  "pages_spilled": self.pages_spilled,
+                  "pages_dropped": self.pages_dropped})
+        if self.host_tier is not None:
+            s["host_tier"] = self.host_tier.stats()
+        return s

@@ -23,9 +23,17 @@ from typing import Optional
 from repro.serving.observability.tracer import Tracer
 
 #: PagePool.stats() series worth a counter track (subset: total pool
-#: size is static, so plotting it would just flatten the axis)
+#: size is static, so plotting it would just flatten the axis).  The
+#: retention keys exist only on TieredPagePool (kv_host_tier) — flat
+#: pools simply contribute no series for them.
 POOL_SERIES = ("pages_in_use", "peak_pages_in_use", "shared_pages",
-               "num_free", "cow_headroom")
+               "num_free", "cow_headroom", "retained_pages",
+               "spillable_pages")
+
+#: HostTier.stats() series (the "host_tier" sub-dict of a tiered
+#: pool's stats): occupancy plus cumulative spill/restore traffic
+HOST_TIER_SERIES = ("pages_in_use", "entries", "hits", "misses",
+                    "spilled_pages", "restored_pages", "evicted_pages")
 
 
 def prewarm_residents(backend) -> Optional[int]:
@@ -57,6 +65,12 @@ def sample_gauges(tracer: Tracer, sched, t: Optional[float] = None) -> None:
                 tracer.counter(f"{name}:{key}",
                                {k: pool[k] for k in POOL_SERIES if k in pool},
                                t=t)
+                tier = pool.get("host_tier")
+                if tier:
+                    tracer.counter(
+                        f"{name}:{key}:host_tier",
+                        {k: tier[k] for k in HOST_TIER_SERIES if k in tier},
+                        t=t)
         hits = st.get("logit_cache_hits")
         if hits is not None:
             misses = st.get("logit_cache_misses", 0)

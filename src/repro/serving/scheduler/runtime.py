@@ -43,7 +43,7 @@ import asyncio
 import contextlib
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -472,6 +472,18 @@ class PagedLLMConfig:
     chunk_slack: float = 4.0        # shrink when min stream slack <
     #   chunk_slack x (base-chunk stall estimate); grow needs the same
     #   margin over a max-sized stall
+    auto_chunk_bounds: bool = False  # tune the adaptive lo/hi bounds from
+    #   the MEASURED chunk-stall distribution instead of the fixed
+    #   min/max above: a heavy-tailed stall tail (p90 >> p50) narrows
+    #   the policy to small bites, a tight one widens it to the
+    #   ceiling.  Warmup compiles the whole bound ladder, so the tuned
+    #   bounds never hit the compiler mid-serve.
+    lazy_decode_alloc: Optional[bool] = None  # push down to the paged
+    #   engines at construction: True seals prefills with prompt-only
+    #   pages and grows decode page-by-page (admission stops reserving
+    #   the full prompt+budget span up front — with a host tier, the
+    #   pressure this admits more aggressively into spills instead of
+    #   rejecting).  None keeps each engine's init_paged setting.
 
 
 @dataclasses.dataclass
@@ -561,6 +573,9 @@ class PagedLLMScheduler(SchedulerLifecycle):
         self._prefilling: List[List[_Prefilling]] = [[] for _ in range(n)]
         self._inflight_chunks = 0          # chunk tasks currently in flight
         self._dead = [False] * n    # backend died (see _worker)
+        if self.cfg.lazy_decode_alloc is not None:
+            for b in self.backends:
+                b.set_lazy_decode_alloc(self.cfg.lazy_decode_alloc)
         self._init_lifecycle(n, clock, self.backends, tracer=tracer)
 
     def _chunk_tokens(self, backend: ModelBackend) -> Optional[int]:
@@ -587,8 +602,7 @@ class PagedLLMScheduler(SchedulerLifecycle):
         """
         cfg = self.cfg
         base = cfg.prefill_chunk_pages
-        lo = max(1, cfg.min_chunk_pages)
-        hi = max(base, cfg.max_chunk_pages or 4 * base)
+        lo, hi = self._chunk_bounds(m)
         active = self.slots[m].active()
         if not active:
             return hi                   # no stream to stall
@@ -616,6 +630,37 @@ class PagedLLMScheduler(SchedulerLifecycle):
         if slack > cfg.chunk_slack * hi * itl_s:
             return hi
         return base
+
+    def _chunk_bounds(self, m: int) -> Tuple[int, int]:
+        """(lo, hi) page bounds the adaptive chunk policy picks inside.
+
+        Fixed config bounds normally; with ``auto_chunk_bounds`` the
+        MEASURED per-page chunk-stall distribution re-tunes them: a
+        heavy tail (p90 > 2x p50 — chunk cost is unpredictable, so a
+        big bite risks a tail-sized stall the slack math never priced
+        in) narrows to (1, base); a tight distribution (p90 within 25%
+        of p50 — the estimate is trustworthy) widens to (base, ceiling)
+        so an idle-leaning backend takes the biggest compiled bites.
+        In between, or before ``chunk_stall_per_page`` has evidence
+        (>= 5 chunks), the config bounds stand.  Every bound returned
+        here is on the warmup-compiled ladder {1, min, base, max} —
+        auto-tuning must never introduce a mid-serve compile."""
+        cfg = self.cfg
+        base = cfg.prefill_chunk_pages
+        lo = max(1, cfg.min_chunk_pages)
+        hi = max(base, cfg.max_chunk_pages or 4 * base)
+        if not cfg.auto_chunk_bounds:
+            return lo, hi
+        p50 = self.metrics.chunk_stall_per_page(m, percentile=50.0)
+        p90 = self.metrics.chunk_stall_per_page(m, percentile=90.0)
+        if not p50 or not p90 or p50 <= 0:
+            return lo, hi
+        ratio = p90 / p50
+        if ratio > 2.0:
+            return 1, base
+        if ratio <= 1.25:
+            return base, hi
+        return lo, hi
 
     def _next_chunk_tokens(self, m: int) -> Optional[int]:
         """Token budget for the next prefill chunk: the static
@@ -673,7 +718,13 @@ class PagedLLMScheduler(SchedulerLifecycle):
                 hi = max(self.cfg.prefill_chunk_pages,
                          self.cfg.max_chunk_pages
                          or 4 * self.cfg.prefill_chunk_pages)
-                for pages in sorted({max(1, self.cfg.min_chunk_pages), hi}):
+                ladder = {max(1, self.cfg.min_chunk_pages), hi}
+                if self.cfg.auto_chunk_bounds:
+                    # the measured-bounds policy may narrow the floor to
+                    # a single page (_chunk_bounds): compile it too, so
+                    # the tuned ladder never hits the compiler mid-serve
+                    ladder.add(1)
+                for pages in sorted(ladder):
                     if pages * ps != base:
                         backend.warmup([], chunk_tokens=pages * ps)
 
@@ -851,15 +902,19 @@ class PagedLLMScheduler(SchedulerLifecycle):
                     try:
                         await backend.decode_batch([e.seq for e in active])
                     except Exception as exc:
-                        cow_seq = getattr(exc, "cow_seq", None)
+                        victim_seq = (getattr(exc, "cow_seq", None)
+                                      or getattr(exc, "grow_seq", None))
                         if (isinstance(exc, OutOfPages)
-                                and cow_seq is not None and backend.healthy):
+                                and victim_seq is not None
+                                and backend.healthy):
                             # copy-on-write found no free page (the
-                            # admission headroom raced).  The COW check
-                            # runs before the donating jit, so the
-                            # engine survives: fail only the writer.
+                            # admission headroom raced), or a lazily-
+                            # allocated sequence could not grow its
+                            # next decode page.  Both checks run before
+                            # the donating jit, so the engine survives:
+                            # fail only the starving sequence.
                             for e in active:
-                                if e.seq is cow_seq:
+                                if e.seq is victim_seq:
                                     backend.release(e.seq)
                                     slots.retire(e)
                                     if e.req.fail(exc, self.clock()):
@@ -1156,5 +1211,31 @@ class PagedLLMScheduler(SchedulerLifecycle):
             "prewarm_residents": sum(prewarm_residents(b) or 0
                                      for b in self.backends),
             "inflight_chunks": self._inflight_chunks,
+        })
+        # KV memory hierarchy (kv_host_tier): tiered pools report
+        # retention and host-tier occupancy / traffic; flat pools
+        # contribute zeros.  Every pool a backend exposes counts —
+        # disaggregated backends tier their *staging* pool, which
+        # stats() reports under "prefill_pool".
+        tiered = [p for s in bstats
+                  for p in (s.get("pool"), s.get("prefill_pool")) if p]
+        tiers = [p["host_tier"] for p in tiered if p.get("host_tier")]
+
+        def tier_total(key):
+            return sum(t.get(key, 0) for t in tiers)
+        h, m_ = tier_total("hits"), tier_total("misses")
+        snap.update({
+            "pool_retained_pages": sum(p.get("retained_pages", 0)
+                                       for p in tiered),
+            "pool_spillable_pages": sum(p.get("spillable_pages", 0)
+                                        for p in tiered),
+            "host_tier_pages_in_use": tier_total("pages_in_use"),
+            "host_tier_entries": tier_total("entries"),
+            "host_tier_hits": h,
+            "host_tier_misses": m_,
+            "host_tier_hit_rate": (h / (h + m_) if h + m_ else 0.0),
+            "host_tier_spilled_pages": tier_total("spilled_pages"),
+            "host_tier_restored_pages": tier_total("restored_pages"),
+            "host_tier_evicted_pages": tier_total("evicted_pages"),
         })
         return snap

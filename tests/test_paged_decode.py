@@ -547,6 +547,67 @@ def test_chunk_stall_measurement_guards():
     assert sched._adaptive_chunk_pages(0) == 8
 
 
+def test_auto_chunk_bounds_follow_stall_distribution():
+    """auto_chunk_bounds re-tunes the policy's (lo, hi) from the
+    measured per-page stall distribution: a heavy tail (p90 > 2x p50)
+    narrows to (1, base), a tight one (p90 within 25% of p50) widens
+    to (base, hi), in-between keeps the config bounds — and before
+    there is evidence the config bounds stand."""
+    sched = _policy_sched(auto_chunk_bounds=True)
+    assert sched._chunk_bounds(0) == (1, 8)          # no evidence yet
+    for _ in range(8):                               # heavy tail: 20x ratio
+        sched.metrics.on_chunk_stall(0, 1, 0.001)
+    for _ in range(2):
+        sched.metrics.on_chunk_stall(0, 1, 0.020)
+    assert sched._chunk_bounds(0) == (1, 2)          # narrow to (1, base)
+    # the narrowed ceiling binds the whole policy: idle -> hi -> base
+    assert sched._adaptive_chunk_pages(0) == 2
+
+    tight = _policy_sched(auto_chunk_bounds=True)
+    for _ in range(10):                              # ratio 1.0
+        tight.metrics.on_chunk_stall(0, 1, 0.010)
+    assert tight._chunk_bounds(0) == (2, 8)          # widen to (base, hi)
+    assert tight._adaptive_chunk_pages(0) == 8       # idle -> ceiling
+
+    mid = _policy_sched(auto_chunk_bounds=True)
+    for _ in range(8):                               # ratio 1.5: in-between
+        mid.metrics.on_chunk_stall(0, 1, 0.010)
+    for _ in range(2):
+        mid.metrics.on_chunk_stall(0, 1, 0.015)
+    assert mid._chunk_bounds(0) == (1, 8)            # config bounds stand
+    # default (auto off) never consults the distribution at all
+    fixed = _policy_sched()
+    for _ in range(10):
+        fixed.metrics.on_chunk_stall(0, 1, 0.001)
+    fixed.metrics.on_chunk_stall(0, 1, 0.050)
+    assert fixed._chunk_bounds(0) == (1, 8)
+
+
+def test_auto_chunk_bounds_warmup_compiles_single_page():
+    """The warmup ladder always includes the one-page chunk shape when
+    auto_chunk_bounds is on — the tuned floor may narrow to a single
+    page mid-serve and must already be compiled."""
+
+    class _WarmupRecorder(_FakeChunkBackend):
+        def __init__(self):
+            self.chunk_tokens = []
+
+        def warmup(self, prompt_lens, chunk_tokens=None):
+            self.chunk_tokens.append(chunk_tokens)
+
+    def ladder(auto):
+        b = _WarmupRecorder()
+        PagedLLMScheduler(
+            backends=[b], clock=lambda: 0.0,
+            cfg=PagedLLMConfig(prefill_chunk_pages=2, adaptive_chunk=True,
+                               min_chunk_pages=2, max_chunk_pages=8,
+                               auto_chunk_bounds=auto)).warmup([8])
+        return b.chunk_tokens
+
+    assert ladder(auto=False) == [8, 32]             # base + hi (ps=4)
+    assert ladder(auto=True) == [8, 4, 32]           # + the 1-page shape
+
+
 def test_next_chunk_tokens_traces_counter():
     """_next_chunk_tokens converts the policy's pages to tokens and
     exposes the choice as the 'chunk_pages' tracer counter; with

@@ -51,7 +51,8 @@ except ImportError:
         return pytest.mark.skip(reason="hypothesis not installed")
 
 from repro.models.attention import SCRATCH_PAGE
-from repro.serving.kv_cache import PagePool
+from repro.serving.kv_cache import OutOfPages, PagePool
+from repro.serving.kv_host_tier import HostTier, TieredPagePool
 
 
 class SimSeq:
@@ -267,6 +268,188 @@ def test_prefix_index_random_prompt_traffic(data):
         pool.release(seq)
     assert pool.pages_in_use == 0
     assert pool.prefix_entries == 0
+    assert pool.num_free == pool.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# KV memory hierarchy: TieredPagePool retention / spill / restore
+# ---------------------------------------------------------------------------
+
+def make_tiered(num_pages=16, host_pages=8, watermark=0.0) -> TieredPagePool:
+    pool = TieredPagePool(num_pages=num_pages, page_size=4,
+                          host_tier=HostTier(host_pages, page_size=4),
+                          spill_watermark=watermark)
+    # bookkeeping-only stand-in for Engine._spill_pages: the harness
+    # checks ownership accounting, not KV bytes, so every "gathered"
+    # package is a fixed-shape zero slab
+    pool.bind_spill(lambda pages: np.zeros((1, 8, 4, 1), np.float32), 8)
+    return pool
+
+
+def tiered_admit(pool: TieredPagePool, live, toks,
+                 cancel_restore: bool = False):
+    """The engine's admission flow against the memory hierarchy:
+    device-resident prefix maps (incref), the host tier continues the
+    chain (alloc + consume — or, ``cancel_restore``, the mid-restore
+    cancellation: the freshly-allocated pages decref and the host
+    entries survive untouched), and the remainder allocates fresh.
+    Any OutOfPages rolls the whole admission back — the pool must
+    return to its pre-admission state."""
+    toks = np.asarray(toks, np.int32)
+    mapped, _matched = pool.lookup_prefix(toks)
+    pool.incref(mapped)
+    pages = list(mapped)
+    try:
+        run = pool.host_tier.lookup(toks, start_chunk=len(mapped))
+        if run:
+            new = pool.alloc(len(run))
+            if cancel_restore:
+                # scatter failed / request cancelled mid-restore: the
+                # device pages hand back, the host copies stay intact
+                pool.decref(new)
+            else:
+                pool.host_tier.consume([k for k, _s, _p in run])
+                pages += new
+        pages += pool.alloc(pool.pages_for(len(toks)) - len(pages))
+    except OutOfPages:
+        pool.decref(pages)          # roll back: mapped increfs + restores
+        return None
+    seq = SimSeq(pages)
+    seq.prefix_keys = pool.register_prefix(toks, pages)
+    live.append(seq)
+    return seq
+
+
+def check_tiered_invariants(pool: TieredPagePool, live):
+    """Cross-tier ownership: every held device page is accounted for by
+    live holders plus at most one retention claim (refcount
+    conservation across tiers); the host tier's slot map is coherent;
+    the scratch page is never handed out; page conservation holds."""
+    assert pool.pages_in_use + pool.num_free == pool.num_pages - 1
+    holders = {}
+    for seq in live:
+        for pg in seq.pages:
+            assert pg != SCRATCH_PAGE
+            holders[pg] = holders.get(pg, 0) + 1
+    retained = set(pool._retained)
+    assert pool.pages_in_use == len(set(holders) | retained)
+    for pg in set(holders) | retained:
+        assert pool.refcount(pg) == (holders.get(pg, 0)
+                                     + (1 if pg in retained else 0))
+    assert pool.retained_pages == len(retained)
+    assert pool.spillable_pages == sum(
+        1 for pg in retained if pool.refcount(pg) == 1)
+    tier = pool.host_tier
+    assert tier.pages_in_use == len(tier._slot_keys) <= tier.num_pages
+    assert sum(len(ks) for ks in tier._slot_keys.values()) \
+        == len(tier._entries)
+    for key, slot in tier._entries.items():
+        assert key in tier._slot_keys[slot]
+
+
+@given(st.data())
+def test_tiered_pool_random_retain_spill_restore(data):
+    """Random admit / retire / spill / restore traffic over the memory
+    hierarchy, prompts drawn from a tiny alphabet so chunk chains
+    collide: refcounts stay conserved across tiers, mid-restore
+    cancellation leaks nothing, and after every retirement plus a full
+    eviction sweep the device pool drains to zero."""
+    num_pages = data.draw(st.integers(6, 16), label="num_pages")
+    host_pages = data.draw(st.integers(0, 8), label="host_pages")
+    pool = make_tiered(num_pages=num_pages, host_pages=host_pages)
+    live = []
+    for _ in range(data.draw(st.integers(1, 25), label="steps")):
+        ops = ["admit"]
+        if live:
+            ops.append("retire")
+        if pool.retained_pages:
+            ops.append("spill")
+        kind = data.draw(st.sampled_from(sorted(ops)), label="op")
+        if kind == "admit":
+            toks = data.draw(st.lists(st.integers(0, 2), min_size=1,
+                                      max_size=12), label="prompt")
+            cancel = data.draw(st.booleans(), label="cancel_restore")
+            before = pool.pages_in_use
+            if tiered_admit(pool, live, toks, cancel_restore=cancel) is None:
+                # rollback leaks nothing — in-use can only have DROPPED
+                # (the failing alloc may have evicted cold retention as
+                # a side effect before coming up short)
+                assert pool.pages_in_use <= before
+        elif kind == "retire":
+            pool.release(live.pop(data.draw(
+                st.integers(0, len(live) - 1), label="seq")))
+        else:
+            pool.drop_retained()
+        check_tiered_invariants(pool, live)
+
+    for seq in list(live):
+        pool.release(seq)
+    pool.drop_retained()
+    check_tiered_invariants(pool, [])
+    assert pool.pages_in_use == 0
+    assert pool.num_free == pool.num_pages - 1
+    assert pool.prefix_entries == 0
+    assert pool.refcount(SCRATCH_PAGE) == 0
+
+
+def test_tiered_fixed_trace_spill_restore_cancel():
+    """Deterministic floor for the tiered ops (runs without
+    hypothesis): retention takes over a retiring prompt's pages,
+    eviction under demand spills refcount-1 pages to the host (the
+    device page FREES — never resident in both tiers), a restore
+    consumes the host copy, a cancelled restore leaks nothing and
+    leaves the host copy intact, and a shared retained page drops
+    without ever spilling."""
+    pool = make_tiered(num_pages=10, host_pages=8)
+    tier = pool.host_tier
+    live = []
+
+    toks = [1, 1, 2, 2, 3, 3, 4, 4, 5]          # 2 full chunks + partial
+    s0 = tiered_admit(pool, live, toks)
+    assert [pool.refcount(pg) for pg in s0.pages] == [1, 1, 1]
+    pool.release(live.pop(0))
+    assert pool.retained_pages == 3 and pool.pages_in_use == 3
+
+    # demand eviction: allocating past free capacity spills the
+    # retained pages — and frees them on-device (single-tier residency)
+    spilled = list(pool._retained)
+    big = SimSeq(pool.alloc(9)); live.append(big)
+    assert pool.retained_pages == 0
+    # the spilled pages FREED on-device (single-tier residency) — the
+    # 9-page alloc could only succeed by reusing them
+    assert set(spilled) <= set(big.pages) and pool.pages_in_use == 9
+    assert tier.pages_in_use == 3 and pool.stats()["pages_spilled"] == 3
+    pool.release(live.pop(0))               # big held no prefix: all free
+    assert pool.pages_in_use == 0
+
+    # cancelled restore: device pages hand back, host copies intact
+    before = tier.stats()["restored_pages"]
+    s1 = tiered_admit(pool, live, toks, cancel_restore=True)
+    assert tier.pages_in_use == 3                   # host untouched
+    assert tier.stats()["restored_pages"] == before
+    check_tiered_invariants(pool, live)
+    pool.release(live.pop(0))
+    pool.drop_retained()                            # stale dup copies drop
+
+    # committed restore: host entries consume, pages come back exact
+    s2 = tiered_admit(pool, live, toks)
+    assert tier.pages_in_use == 0                   # consumed on restore
+    assert tier.stats()["restored_pages"] >= 3
+    check_tiered_invariants(pool, live)
+
+    # a retained page a live sequence still maps must drop, not spill
+    s3 = tiered_admit(pool, live, toks)             # shares s2's pages
+    pool.release(live.pop(0))                       # retire s2: retained,
+    assert pool.retained_pages == 3                 # but s3 still maps them
+    assert pool.spillable_pages == 0
+    spilled_before = tier.stats()["spilled_pages"]
+    assert pool.drop_retained() == 0                # frees nothing
+    assert tier.stats()["spilled_pages"] == spilled_before
+    check_tiered_invariants(pool, live)
+
+    pool.release(live.pop(0))
+    pool.drop_retained()
+    assert pool.pages_in_use == 0 and pool.prefix_entries == 0
     assert pool.num_free == pool.num_pages - 1
 
 
