@@ -17,6 +17,7 @@ Tables/figures (each also runnable standalone as benchmarks.<name>):
   disagg     — disaggregated vs interleaved prefill (serving backends/ITL)
   obs_overhead — traced vs untraced throughput      (serving observability)
   spec_decode — speculative mux-drafted decoding    (serving latency/decode)
+  cluster    — multi-host router over sockets       (serving cluster/ITL)
   roofline   — dry-run roofline table               (EXPERIMENTS §Roofline)
 
 ``--trace-dir DIR`` makes every serving benchmark also export a Chrome
@@ -62,7 +63,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig1,table1,table2,fig6,mux_kernel,"
                          "scheduler,paged,prefix,host_tier,chunked,disagg,"
-                         "obs_overhead,spec_decode,roofline")
+                         "obs_overhead,spec_decode,cluster,roofline")
     ap.add_argument("--trace-dir", default="",
                     help="export a Chrome trace JSON per serving benchmark "
                          "into this directory (Perfetto-loadable)")
@@ -119,6 +120,9 @@ def main() -> None:
     if want("spec_decode"):
         from benchmarks import bench_spec_decode
         bench_spec_decode.run()
+    if want("cluster"):
+        from benchmarks import bench_cluster
+        bench_cluster.run()
     if want("roofline"):
         from benchmarks import roofline
         roofline.run()

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import heapq
 import itertools
 import json
 import time
@@ -55,6 +56,13 @@ import numpy as np
 
 from repro.serving.kv_cache import OutOfPages
 from repro.serving.observability.tracer import NULL_TRACER, backend_track
+
+
+class BackendLost(RuntimeError):
+    """The backend serving a sequence is gone (transport died, host
+    evicted).  Only the requests in flight on that backend fail — with
+    the ``BACKEND_LOST`` finish reason — while siblings keep serving;
+    contrast with a poisoned-cache failure, which kills the worker."""
 
 
 @dataclasses.dataclass
@@ -184,6 +192,13 @@ class ModelBackend:
 
     def stats(self) -> Dict[str, Any]:
         return {"name": self.name, "healthy": self.healthy}
+
+    def prefix_digest(self, cap: int = 2048) -> List[str]:
+        """Truncated-hex chunk keys this backend's pools hold (device
+        ``PrefixIndex`` + host tier) — gossiped in cluster status
+        replies so the router can score prefix-aware placement.
+        Backends without a paged pool advertise nothing."""
+        return []
 
     # ---- shared helpers ----------------------------------------------
     def _note_queue_wait(self, seconds: float) -> None:
@@ -412,6 +427,9 @@ class InProcessBackend(_ExecutorMixin, ModelBackend):
     def warmup(self, prompt_lens, chunk_tokens=None):
         _engine_warmup(self.engine, prompt_lens, chunk_tokens)
 
+    def prefix_digest(self, cap: int = 2048) -> List[str]:
+        return self.engine.pool.chunk_digest(cap)
+
     def stats(self) -> Dict[str, Any]:
         e = self.engine
         return {
@@ -515,6 +533,15 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
         self._max_pages = decode_engine._max_pages
         self.transfers = 0
         self.transfer_pages = 0
+        # EDF transfer admission: sealed prefills queue here and the
+        # earliest request deadline scatters first (see
+        # _transfer_scatter); transfer_log records dispatch order so
+        # tests can prove the reordering
+        self._transfer_cv: Optional[asyncio.Condition] = None
+        self._transfer_heap: List[List[Any]] = []
+        self._transfer_tickets = itertools.count()
+        self._transfer_busy = False
+        self.transfer_log: List[Any] = []
         self._init_executors(["prefill", "decode"])
 
         from repro.models.attention import SCRATCH_PAGE
@@ -601,8 +628,7 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
             seq.transfer_package = (pkg, n)
         # OutOfPages below is backpressure: the package stays on the
         # sequence and the scheduler retries after decode frees
-        dst = await self._run("decode", self._scatter_stage,
-                              seq.transfer_package, op="kv_scatter")
+        dst = await self._transfer_scatter(seq)
         seq.pages = list(dst)
         seq.block_table[:] = self.decode_engine.pool.block_table(
             dst, self._max_pages)
@@ -633,6 +659,46 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
                            jnp.asarray(row))
         jax.block_until_ready(jax.tree.leaves(pkg)[0])
         return pkg, len(live)
+
+    async def _transfer_scatter(self, seq):
+        """Deadline-ordered (EDF) admission to the scatter stage.
+
+        Sealed prefills used to hit the decode executor in seal order
+        (FIFO), so a tight-SLO request's KV transfer could sit behind a
+        batch of lax ones.  Now every transfer takes a ticket keyed by
+        its request's absolute deadline (``seq.deadline_t``, inherited
+        from the scheduler; direct backend users without deadlines get
+        +inf and keep seal order via the ticket counter) and waits its
+        turn: the earliest-deadline pending transfer dispatches next,
+        one at a time.  A ticket-holder that dies (cancelled mid-wait)
+        removes itself so it can never wedge the queue."""
+        cv = self._transfer_cv
+        if cv is None:
+            cv = self._transfer_cv = asyncio.Condition()
+        deadline = getattr(seq, "deadline_t", None)
+        ticket = [float("inf") if deadline is None else float(deadline),
+                  next(self._transfer_tickets)]
+        async with cv:
+            heapq.heappush(self._transfer_heap, ticket)
+            try:
+                await cv.wait_for(
+                    lambda: (not self._transfer_busy
+                             and self._transfer_heap[0] is ticket))
+            except BaseException:
+                self._transfer_heap.remove(ticket)
+                heapq.heapify(self._transfer_heap)
+                cv.notify_all()
+                raise
+            heapq.heappop(self._transfer_heap)
+            self._transfer_busy = True
+        try:
+            self.transfer_log.append(getattr(seq, "trace_rid", None))
+            return await self._run("decode", self._scatter_stage,
+                                   seq.transfer_package, op="kv_scatter")
+        finally:
+            async with cv:
+                self._transfer_busy = False
+                cv.notify_all()
 
     def _scatter_stage(self, package):
         import jax
@@ -747,6 +813,11 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
         except OutOfPages:
             pass                        # pool too small: first use compiles
 
+    def prefix_digest(self, cap: int = 2048) -> List[str]:
+        # the staging pool is where sharing and the host tier live —
+        # that is the coverage a routed repeat prompt would hit
+        return self.prefill_engine.pool.chunk_digest(cap)
+
     def stats(self) -> Dict[str, Any]:
         pre, dec = self.prefill_engine, self.decode_engine
         return {
@@ -768,13 +839,41 @@ class DisaggregatedBackend(_ExecutorMixin, ModelBackend):
 # Remote stub: wire schema over an in-process duplex channel
 # ===========================================================================
 
-WIRE_VERSION = 1
+WIRE_VERSION = 2
+#: versions this build speaks.  v2 added hello version negotiation,
+#: acked ``release`` replies (the retry loop that makes a lost release
+#: frame leak-free), the ``status`` op (capacity + queue depth +
+#: prefix-digest gossip for the cluster router), deadline inheritance
+#: on begin payloads, and the socket transport's streaming decode push
+#: frames.  v1 (request/response only, fire-and-forget release) is
+#: retired: a v1 peer is rejected at hello, in both directions.
+WIRE_VERSIONS: Tuple[int, ...] = (2,)
+
+
+class WireVersionError(RuntimeError):
+    """hello negotiation found no common wire version."""
+
+
+def negotiate_wire_version(peer_versions: Sequence[int]) -> int:
+    """Highest version both sides speak; raises WireVersionError when
+    the intersection is empty (the reply crosses the wire, so the
+    rejected peer learns exactly what this build speaks)."""
+    common = {int(v) for v in peer_versions} & set(WIRE_VERSIONS)
+    if not common:
+        raise WireVersionError(
+            f"wire version mismatch: peer speaks "
+            f"{sorted(int(v) for v in peer_versions)}, this build speaks "
+            f"{sorted(WIRE_VERSIONS)}")
+    return max(common)
+
 
 #: wire error type -> exception class raised client-side
 _WIRE_ERRORS = {
     "OutOfPages": OutOfPages,
     "ValueError": ValueError,
     "RuntimeError": RuntimeError,
+    "WireVersionError": WireVersionError,
+    "BackendLost": BackendLost,
 }
 
 
@@ -847,9 +946,16 @@ class BackendServer:
     """Server half of the stub: drives any inner ``ModelBackend`` from
     wire messages.  One request at a time, in arrival order — the
     stub trades concurrency for a dead-simple protocol; the disagg
-    backend is where concurrency lives."""
+    backend is where concurrency lives.
 
-    def __init__(self, inner: ModelBackend, channel: DuplexChannel):
+    The op dispatcher is transport-agnostic: the in-process stub runs
+    ``serve()`` over a ``DuplexChannel``, while the cluster socket
+    transport (``repro.serving.cluster.transport``) instantiates a
+    channel-less ``BackendServer`` per client session and calls
+    ``_dispatch`` on frames it reads off the socket."""
+
+    def __init__(self, inner: ModelBackend,
+                 channel: Optional[DuplexChannel] = None):
         self.inner = inner
         self.channel = channel
         self._seqs: Dict[int, Any] = {}
@@ -864,13 +970,20 @@ class BackendServer:
             st["tokens"] = [int(t) for t in seq.tokens]
         return st
 
+    def reclaim(self) -> int:
+        """Release every sequence this session holds (shutdown /
+        orphaned-session cleanup).  Returns how many were reclaimed."""
+        n = len(self._seqs)
+        for seq in self._seqs.values():
+            self.inner.release(seq)
+        self._seqs.clear()
+        return n
+
     async def serve(self) -> None:
         while True:
             msg = wire_decode(await self.channel.to_server.get())
             if msg["op"] == "shutdown":
-                for seq in self._seqs.values():
-                    self.inner.release(seq)     # disconnect reclaims
-                self._seqs.clear()
+                self.reclaim()                  # disconnect reclaims
                 self._reply(msg, {})
                 return
             try:
@@ -897,8 +1010,15 @@ class BackendServer:
     async def _dispatch(self, msg) -> Dict[str, Any]:
         op, body = msg["op"], msg.get("body", {})
         if op == "hello":
+            # negotiation: the peer states every version it speaks
+            # (legacy v1 hellos carry no list — their envelope "v" is
+            # the whole claim); no overlap is a typed rejection that
+            # tells the peer what this build speaks
+            v = negotiate_wire_version(
+                body.get("versions") or [msg.get("v", 1)])
             cap = self.inner.capacity()
-            return {"v": WIRE_VERSION, "page_size": cap.page_size,
+            return {"v": v, "versions": list(WIRE_VERSIONS),
+                    "page_size": cap.page_size,
                     "num_pages": cap.num_pages,
                     "decode_batch": cap.decode_batch,
                     "max_len": cap.max_len}
@@ -915,6 +1035,12 @@ class BackendServer:
                     max_new_tokens=b["max_new_tokens"], seed=b["seed"],
                     temperature=b["temperature"],
                     stop_tokens=tuple(b["stop_tokens"]))
+                if b.get("deadline_rel") is not None:
+                    # deadline inheritance: the client ships seconds-to-
+                    # deadline (clocks differ across hosts); the server
+                    # re-anchors it so an inner disaggregated backend's
+                    # EDF transfer queue orders by the real SLO
+                    seq.deadline_t = time.monotonic() + b["deadline_rel"]
                 self._seqs[sid] = seq
             done = await self.inner.prefill_chunk(
                 seq, chunk_tokens=body["chunk_tokens"])
@@ -924,20 +1050,39 @@ class BackendServer:
             seqs = [self._seqs[sid] for sid in body["sids"]]
             # snapshot per-row token counts first: a speculative inner
             # backend commits a RUN of tokens per call, and the client
-            # mirror needs every one of them (plus new_token for
-            # compatibility with v1 clients that predate new_tokens)
+            # mirror needs every one of them
             before = [len(s.tokens) for s in seqs]
             await self.inner.decode_batch(seqs)
             return {"rows": [dict(self._state_of(s),
-                                  new_token=int(s.tokens[-1]),
+                                  sid=sid,
                                   new_tokens=[int(t)
                                               for t in s.tokens[n0:]])
-                             for s, n0 in zip(seqs, before)]}
+                             for sid, s, n0 in zip(body["sids"], seqs,
+                                                   before)]}
         if op == "release":
+            # acked and idempotent: the client retries until it sees
+            # this reply, and releasing an unknown sid (already
+            # reclaimed, or a retry of a release that DID land) is a
+            # clean no-op — that pairing is what makes a release frame
+            # lost to a reconnect leak-free
             seq = self._seqs.pop(body["sid"], None)
             if seq is not None:
                 self.inner.release(seq)
-            return {}
+            return {"released": seq is not None}
+        if op == "status":
+            # the cluster heartbeat: capacity rides the reply envelope;
+            # the body gossips load, the prefix-chunk digest the router
+            # scores placement against, and the prefill-work counters
+            # bench_cluster sums into aggregate prefill cost per policy
+            st = self.inner.stats()
+            return {"queue_depth": self.inner.capacity().inflight,
+                    "seqs": len(self._seqs),
+                    "digest": self.inner.prefix_digest(
+                        int(body.get("digest_cap", 2048))),
+                    "prefill_tokens_computed":
+                        st.get("prefill_tokens_computed", 0),
+                    "prefill_tokens_shared":
+                        st.get("prefill_tokens_shared", 0)}
         raise ValueError(f"unknown wire op {op!r}")
 
 
@@ -970,18 +1115,32 @@ class RemoteStubBackend(ModelBackend):
         self._healthy = True
         self._geom: Dict[str, int] = {}
         self.messages_sent = 0
+        # releases awaiting their server ack; each retries until acked
+        # (idempotent server-side), so none can leak server pages
+        self._pending_releases: set = set()
+        self._release_tasks: set = set()
 
     # ---- lifecycle -----------------------------------------------------
     async def start(self) -> None:
         await self.inner.start()
         self._server_task = asyncio.ensure_future(self._server.serve())
         self._reader_task = asyncio.ensure_future(self._read_loop())
-        self._geom = await self._call("hello")
-        if self._geom["v"] != WIRE_VERSION:
-            raise RuntimeError(f"wire version mismatch: {self._geom['v']}")
+        self._geom = await self._call(
+            "hello", {"versions": list(WIRE_VERSIONS)})
+        if self._geom["v"] not in WIRE_VERSIONS:
+            raise WireVersionError(
+                f"wire version mismatch: server negotiated "
+                f"{self._geom['v']}, this client speaks "
+                f"{sorted(WIRE_VERSIONS)}")
 
     async def stop(self) -> None:
         if self._server_task is not None:
+            # let in-flight release acks land first: shutdown reclaims
+            # leftovers anyway, but an abandoned release task would die
+            # noisily with the loop
+            while self._release_tasks:
+                await asyncio.gather(*list(self._release_tasks),
+                                     return_exceptions=True)
             try:
                 await self._call("shutdown")
             finally:
@@ -1067,11 +1226,18 @@ class RemoteStubBackend(ModelBackend):
     async def prefill_chunk(self, seq, *, chunk_tokens=None) -> bool:
         body: Dict[str, Any] = {"sid": seq.sid, "chunk_tokens": chunk_tokens}
         if not seq.begun:
+            deadline_t = getattr(seq, "deadline_t", None)
             body["begin"] = {"prompt": seq.prompt.tolist(),
                              "max_new_tokens": seq.max_new_tokens,
                              "seed": seq.seed,
                              "temperature": seq.temperature,
-                             "stop_tokens": list(seq.stop_tokens)}
+                             "stop_tokens": list(seq.stop_tokens),
+                             # seconds-to-deadline, not absolute: the
+                             # server re-anchors on its own clock
+                             "deadline_rel": (
+                                 None if deadline_t is None
+                                 else max(0.0,
+                                          deadline_t - time.monotonic()))}
             # mark begun BEFORE awaiting: an error reply (e.g.
             # OutOfPages backpressure) may leave the server-side twin
             # registered and holding shared-prefix increfs, so the
@@ -1095,11 +1261,27 @@ class RemoteStubBackend(ModelBackend):
         if self._server_task is None or not seq.begun:
             return              # never reached the server / it reclaimed
         seq.begun = False
-        mid = next(self._ids)   # fire-and-forget: reply is dropped
-        self.messages_sent += 1
-        self.channel.to_server.put_nowait(
-            wire_encode({"v": WIRE_VERSION, "id": mid, "op": "release",
-                         "body": {"sid": seq.sid}}))
+        # acked-with-retry (v2): the sync protocol surface spawns a
+        # task that awaits the server's {"released": ...} reply and
+        # retries until it sees one — a release is only forgotten once
+        # the server confirmed it (or shutdown reclaimed everything)
+        self._pending_releases.add(seq.sid)
+        task = asyncio.ensure_future(self._release_with_retry(seq.sid))
+        self._release_tasks.add(task)
+        task.add_done_callback(self._release_tasks.discard)
+
+    async def _release_with_retry(self, sid: int,
+                                  attempts: int = 8) -> None:
+        for attempt in range(attempts):
+            try:
+                await self._call("release", {"sid": sid})
+            except asyncio.CancelledError:
+                raise
+            except Exception:   # noqa: BLE001 — transport hiccup: retry
+                await asyncio.sleep(min(0.05 * (1 << attempt), 1.0))
+                continue
+            break
+        self._pending_releases.discard(sid)
 
     # ---- admission (conservative, from the cached wire snapshot) -------
     def capacity(self) -> BackendCapacity:
@@ -1115,5 +1297,6 @@ class RemoteStubBackend(ModelBackend):
 
     def stats(self) -> Dict[str, Any]:
         s = dict(self.inner.stats())
-        s.update({"name": self.name, "wire_messages": self.messages_sent})
+        s.update({"name": self.name, "wire_messages": self.messages_sent,
+                  "pending_releases": len(self._pending_releases)})
         return s

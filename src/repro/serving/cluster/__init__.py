@@ -1,0 +1,30 @@
+"""repro.serving.cluster — pod-scale serving over a socket transport.
+
+The single-host stack (engine → backend → scheduler) goes multi-host
+in three pieces, each a file here:
+
+* ``transport`` — the wire made real: length-prefixed JSON frames over
+  TCP with HMAC auth, client_id sessions that survive reconnects,
+  heartbeat/timeout liveness, streaming decode pushes, and the
+  BACKEND_LOST marking that keeps in-flight requests from ever
+  hanging on a dead pipe.  ``SocketBackendServer`` serves any
+  ``ModelBackend``; ``SocketClientBackend`` is its scheduler-facing
+  twin.
+* ``router`` — ``ClusterRouter``: many hosts behind one
+  ``ModelBackend``, with prefix-aware placement (chunk-key digest
+  gossip), cross-host load shedding, probe-based eviction and
+  re-admission, and partial-failure isolation.
+* ``serve`` — ``python -m repro.serving.cluster.serve``: one
+  deterministic tiny host per process, for tests/benches and as the
+  template a real deployment parameterizes.
+"""
+from repro.serving.cluster.router import ClusterRouter
+from repro.serving.cluster.transport import (DEFAULT_SECRET, FrameError,
+                                             MAX_FRAME_BYTES, SECRET_ENV,
+                                             SocketBackendServer,
+                                             SocketClientBackend,
+                                             encode_frame, read_frame)
+
+__all__ = ["ClusterRouter", "SocketBackendServer", "SocketClientBackend",
+           "FrameError", "encode_frame", "read_frame",
+           "MAX_FRAME_BYTES", "DEFAULT_SECRET", "SECRET_ENV"]

@@ -1,0 +1,438 @@
+"""ClusterRouter — many remote hosts behind one ``ModelBackend``.
+
+The scheduler keeps its single-backend worldview (one worker, one
+admission gate, one decode sweep); this router fans that worldview out
+across a pod of ``SocketClientBackend`` hosts:
+
+* **Placement** happens in ``begin``: prefix-aware first — the prompt's
+  chunk-key chain (the same content addresses the device ``PrefixIndex``
+  and host tier use) is scored against each host's gossiped digest; the
+  host holding the longest consecutive-from-start match wins — unless
+  that host is overloaded past ``shed_factor`` × the least-loaded
+  host's depth (cross-host load shedding), in which case the request
+  falls back to least-loaded.  No digest match ⇒ least-loaded.
+* **Health** is probed on an interval (``status`` round trips).  A host
+  that misses ``evict_after`` consecutive probes is EVICTED: its
+  in-flight mirrors are marked ``BACKEND_LOST`` so their requests fail
+  promptly (never hang), and no new work is placed on it.  The probe
+  loop keeps watching evicted hosts — a probe that answers again
+  RE-ADMITS the host (flapping hosts rejoin without a restart).
+* **Partial failure never poisons the pod.**  ``decode_batch`` groups
+  sequences by host and gathers; a host whose group errored is evicted
+  and only ITS sequences are marked lost — survivors' rows return
+  bitwise identical to a single-host run (per-request seed chains make
+  outputs independent of batch composition).  The router stays
+  ``healthy`` while any host lives, so the scheduler worker survives.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Any, Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.serving.backend import (BackendCapacity, BackendLost,
+                                   ModelBackend)
+from repro.serving.kv_cache import OutOfPages, PagePool, chunk_keys
+from repro.serving.scheduler.request import BACKEND_LOST
+
+
+class _HostState:
+    """One remote host as the router sees it: liveness, cached gossip,
+    and the mirrors placed there."""
+
+    def __init__(self, backend, index: int):
+        self.backend = backend
+        self.index = index
+        self.name = getattr(backend, "name", f"host{index}")
+        self.started = False
+        self.live = False                # becomes True at first start/probe
+        self.misses = 0
+        self.queue_depth = 0
+        self.remote_seqs = 0
+        self.digest: Set[str] = set()
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_shared = 0
+        # mirrors in flight on this host, keyed by sid (unique per
+        # host; RemoteSequence is an eq-dataclass, so no hashing)
+        self.placed: Dict[int, Any] = {}
+
+    def load(self) -> int:
+        """Placement load: what WE have in flight there plus what its
+        status gossip says is queued (other routers, probes)."""
+        return len(self.placed) + self.queue_depth
+
+
+class ClusterRouter(ModelBackend):
+    """Fan one scheduler across many socket-served hosts."""
+
+    #: chunk awaits ride the wire; the decode sweep must keep running
+    concurrent_prefill = True
+
+    def __init__(self, hosts: Sequence[ModelBackend], *,
+                 name: str = "cluster",
+                 prefix_aware: bool = True,
+                 probe_interval_s: float = 0.2,
+                 probe_timeout_s: float = 1.0,
+                 evict_after: int = 2,
+                 shed_factor: float = 2.0,
+                 decode_batch_hint: int = 0):
+        if not hosts:
+            raise ValueError("a cluster needs at least one host")
+        self.name = name
+        self.hosts = [_HostState(b, i) for i, b in enumerate(hosts)]
+        self.prefix_aware = prefix_aware
+        self.probe_interval_s = float(probe_interval_s)
+        self.probe_timeout_s = float(probe_timeout_s)
+        self.evict_after = int(evict_after)
+        self.shed_factor = float(shed_factor)
+        self.decode_batch_hint = int(decode_batch_hint)
+        self._probe_task: Optional[asyncio.Task] = None
+        # placement / failure counters (snapshot: cluster_* keys)
+        self.evictions = 0
+        self.readmissions = 0
+        self.requests_lost = 0
+        self.prefix_routed = 0
+        self.load_routed = 0
+        self.shed_overrides = 0
+        self._rr = 0                      # round-robin cursor for ties
+
+    # ---- lifecycle -----------------------------------------------------
+    async def start(self) -> None:
+        await asyncio.gather(*(self._start_host(h) for h in self.hosts))
+        if not any(h.live for h in self.hosts):
+            raise BackendLost(
+                f"cluster {self.name!r}: no host reachable at start "
+                f"({[h.name for h in self.hosts]})")
+        await self.probe_hosts()          # seed digests before traffic
+        if self._probe_task is None:
+            self._probe_task = asyncio.ensure_future(self._probe_loop())
+
+    async def _start_host(self, hs: _HostState) -> None:
+        if hs.started:
+            hs.live = True
+            return
+        try:
+            await hs.backend.start()
+        except asyncio.CancelledError:
+            raise
+        except Exception:                 # noqa: BLE001 — probe retries it
+            hs.live = False
+            hs.misses = self.evict_after
+            return
+        hs.started = True
+        hs.live = True
+        hs.misses = 0
+
+    async def stop(self) -> None:
+        if self._probe_task is not None:
+            self._probe_task.cancel()
+            try:
+                await self._probe_task
+            except asyncio.CancelledError:
+                pass
+            self._probe_task = None
+        await asyncio.gather(
+            *(h.backend.stop() for h in self.hosts if h.started),
+            return_exceptions=True)
+
+    def bind_metrics(self, metrics, model_id: int) -> None:
+        super().bind_metrics(metrics, model_id)
+        for h in self.hosts:
+            h.backend.bind_metrics(metrics, model_id)
+
+    def bind_tracer(self, tracer) -> None:
+        super().bind_tracer(tracer)
+        for h in self.hosts:
+            h.backend.bind_tracer(tracer)
+
+    # ---- health --------------------------------------------------------
+    async def _probe_loop(self) -> None:
+        while True:
+            await asyncio.sleep(self.probe_interval_s)
+            try:
+                await self.probe_hosts()
+            except asyncio.CancelledError:
+                raise
+            except Exception:             # noqa: BLE001 — next tick retries
+                pass
+
+    async def probe_hosts(self) -> None:
+        """One probe round over EVERY host — evicted ones included,
+        because answering again is how they get re-admitted.  Public
+        and awaitable so tests drive deterministic rounds."""
+        await asyncio.gather(*(self._probe_one(h) for h in self.hosts))
+
+    async def _probe_one(self, hs: _HostState) -> None:
+        if not hs.started:
+            await self._start_host(hs)
+            if not hs.started:
+                if hs.live:
+                    self._lose_host(hs, BackendLost("host never started"))
+                return
+        try:
+            st = await hs.backend.status(timeout=self.probe_timeout_s)
+        except asyncio.CancelledError:
+            raise
+        except Exception as exc:          # noqa: BLE001 — that's a miss
+            hs.misses += 1
+            if hs.live and hs.misses >= self.evict_after:
+                self._lose_host(hs, exc)
+            return
+        hs.misses = 0
+        hs.queue_depth = int(st.get("queue_depth", 0))
+        hs.remote_seqs = int(st.get("seqs", 0))
+        hs.digest = set(st.get("digest", ()))
+        hs.prefill_tokens_computed = int(st.get("prefill_tokens_computed",
+                                                0))
+        hs.prefill_tokens_shared = int(st.get("prefill_tokens_shared", 0))
+        if not hs.live:
+            hs.live = True
+            self.readmissions += 1
+            if self._tracer.enabled:
+                self._tracer.instant("cluster_readmit",
+                                     args={"host": hs.name,
+                                           "router": self.name})
+
+    def _lose_host(self, hs: _HostState, exc: BaseException) -> None:
+        """Evict: no new placements, and every mirror in flight there
+        is marked BACKEND_LOST so its request fails promptly instead
+        of hanging on a dead host."""
+        if not hs.live:
+            return
+        hs.live = False
+        hs.misses = max(hs.misses, self.evict_after)
+        self.evictions += 1
+        lost = 0
+        for seq in list(hs.placed.values()):
+            if not seq.done:
+                seq.done = True
+                seq.finish_reason = BACKEND_LOST
+                lost += 1
+        if self._tracer.enabled:
+            self._tracer.instant("cluster_evict",
+                                 args={"host": hs.name,
+                                       "router": self.name,
+                                       "requests_lost": lost,
+                                       "err": str(exc)})
+
+    def _live(self) -> List[_HostState]:
+        return [h for h in self.hosts if h.live]
+
+    @property
+    def healthy(self) -> bool:
+        return any(h.live for h in self.hosts)
+
+    # ---- placement -----------------------------------------------------
+    def _place(self, prompt) -> _HostState:
+        live = self._live()
+        if not live:
+            raise BackendLost(f"cluster {self.name!r}: no live hosts")
+        if len(live) == 1:
+            self.load_routed += 1
+            return live[0]
+        loads = {h: h.load() for h in live}
+        min_load = min(loads.values())
+        # rotate among tied hosts: low-rate traffic arrives one request
+        # at a time, so every placement is a tie — a fixed tie-break
+        # would pin the whole trickle to host 0
+        tied = [h for h in live if loads[h] == min_load]
+        least = tied[self._rr % len(tied)]
+        if self.prefix_aware:
+            ps = max(1, live[0].backend.capacity().page_size)
+            hexn = PagePool.DIGEST_HEX
+            keys = [k.hex()[:hexn]
+                    for k, partial in chunk_keys(prompt, ps) if not partial]
+            best, best_score = None, 0
+            for h in live:
+                score = 0
+                for k in keys:
+                    if k in h.digest:
+                        score += 1
+                    else:
+                        break             # consecutive-from-start only
+                if score > best_score or (
+                        best is not None and score == best_score
+                        and loads[h] < loads[best]):
+                    best, best_score = h, score
+            if best is not None and best_score > 0:
+                if loads[best] <= self.shed_factor * (min_load + 1):
+                    self.prefix_routed += 1
+                    return best
+                self.shed_overrides += 1
+        self.load_routed += 1
+        self._rr += 1
+        return least
+
+    # ---- token-level surface ------------------------------------------
+    def begin(self, prompt, *, max_new_tokens, seed=None, temperature=None,
+              stop_tokens=()):
+        hs = self._place(prompt)
+        seq = hs.backend.begin(prompt, max_new_tokens=max_new_tokens,
+                               seed=seed, temperature=temperature,
+                               stop_tokens=stop_tokens)
+        seq._router_host = hs
+        hs.placed[seq.sid] = seq
+        return seq
+
+    async def prefill_chunk(self, seq, *, chunk_tokens=None) -> bool:
+        hs = seq._router_host
+        if not hs.live:
+            raise BackendLost(f"host {hs.name!r} was evicted mid-prefill")
+        try:
+            return await hs.backend.prefill_chunk(
+                seq, chunk_tokens=chunk_tokens)
+        except BackendLost as exc:
+            self._lose_host(hs, exc)
+            raise
+
+    async def decode_batch(self, seqs):
+        """Group by host and fan out.  A host whose group failed is
+        evicted and only ITS sequences are marked lost — the call
+        itself never raises for a partial failure, so survivors'
+        tokens commit this very sweep.  ``OutOfPages`` is the one
+        exception re-raised: it is request-local backpressure the
+        scheduler already handles, not a host death."""
+        groups: Dict[int, List[Any]] = {}
+        order: Dict[int, _HostState] = {}
+        for s in seqs:
+            hs = s._router_host
+            groups.setdefault(hs.index, []).append(s)
+            order[hs.index] = hs
+        oop: List[BaseException] = []
+
+        async def run(hs: _HostState, group: List[Any]) -> None:
+            if not hs.live:
+                self._mark_lost(hs, group)
+                return
+            try:
+                await hs.backend.decode_batch(group)
+            except asyncio.CancelledError:
+                raise
+            except Exception as exc:      # noqa: BLE001 — classified below
+                if isinstance(exc, OutOfPages):
+                    oop.append(exc)       # request-local: scheduler's path
+                    return
+                self._lose_host(hs, exc)
+                self._mark_lost(hs, group)
+
+        tasks = [asyncio.ensure_future(run(order[i], g))
+                 for i, g in groups.items()]
+        if len(tasks) > 1 and all(
+                getattr(order[i].backend, "streaming", False)
+                for i in groups):
+            # streaming hosts push tokens from their own sweep clocks;
+            # waiting for ALL of them would pin every inter-token gap
+            # to the slowest host's next push.  Wake on the FIRST
+            # host's growth — the others' pushes are already applied
+            # to their mirrors by the read loop and commit on the next
+            # sweep.  Cancelling a pending wait is safe: stream_set is
+            # an idempotent declaration and stream errors stay latched
+            # until a wait observes them.
+            done, pending = await asyncio.wait(
+                tasks, return_when=asyncio.FIRST_COMPLETED)
+            for t in pending:
+                t.cancel()
+            await asyncio.gather(*pending, return_exceptions=True)
+            for t in done:
+                t.result()    # surface bugs in run() itself
+        else:
+            await asyncio.gather(*tasks)
+        if oop:
+            raise oop[0]
+        return np.asarray([s.tokens[-1] if s.tokens else -1
+                           for s in seqs], np.int32)
+
+    def _mark_lost(self, hs: _HostState, group: List[Any]) -> None:
+        for seq in group:
+            if not seq.done:
+                seq.done = True
+                seq.finish_reason = BACKEND_LOST
+
+    def release(self, seq) -> None:
+        hs = seq._router_host
+        hs.placed.pop(seq.sid, None)
+        # the single counting point for lost requests: every lost
+        # mirror comes back through release at retire, whether the
+        # transport marked it (connection died) or the router did
+        # (probe eviction, decode failure)
+        if getattr(seq, "finish_reason", "") == BACKEND_LOST:
+            self.requests_lost += 1
+        hs.backend.release(seq)
+
+    # ---- admission -----------------------------------------------------
+    def capacity(self) -> BackendCapacity:
+        """Aggregate view (snapshot/slots sizing); per-host admission
+        goes through the overridden ``admissible``/``fits_ever``, which
+        require the request to fit ONE host, not the sum."""
+        caps = [h.backend.capacity() for h in self._live()]
+        if not caps:
+            return BackendCapacity(
+                decode_batch=max(1, self.decode_batch_hint))
+        return BackendCapacity(
+            decode_batch=max(self.decode_batch_hint,
+                             sum(c.decode_batch for c in caps)),
+            page_size=caps[0].page_size,
+            num_pages=sum(c.num_pages for c in caps),
+            free_pages=sum(c.free_pages for c in caps),
+            cow_headroom=max(c.cow_headroom for c in caps),
+            max_len=min((c.max_len for c in caps if c.max_len), default=0),
+            inflight=sum(c.inflight for c in caps)
+            + sum(h.queue_depth for h in self._live()))
+
+    def admissible(self, prompt, max_new_tokens, *, chunk_tokens=None):
+        return any(h.backend.admissible(prompt, max_new_tokens,
+                                        chunk_tokens=chunk_tokens)
+                   for h in self._live())
+
+    def fits_ever(self, prompt_len: int, max_new_tokens: int) -> bool:
+        return any(h.backend.fits_ever(prompt_len, max_new_tokens)
+                   for h in self._live())
+
+    # ---- control plane -------------------------------------------------
+    def warmup(self, prompt_lens, chunk_tokens=None):
+        pass                              # hosts warm at their own start
+
+    def prefix_digest(self, cap: int = 2048) -> List[str]:
+        out: List[str] = []
+        seen: Set[str] = set()
+        for h in self._live():
+            for k in h.digest:
+                if k not in seen:
+                    seen.add(k)
+                    out.append(k)
+                    if len(out) >= cap:
+                        return out
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        per_host = []
+        for h in self.hosts:
+            hstat = (h.backend.stats()
+                     if hasattr(h.backend, "stats") else {})
+            per_host.append({
+                "host": h.name, "live": h.live, "misses": h.misses,
+                "queue_depth": h.queue_depth, "seqs": h.remote_seqs,
+                "placed": len(h.placed), "digest_keys": len(h.digest),
+                "prefill_tokens_computed": h.prefill_tokens_computed,
+                "prefill_tokens_shared": h.prefill_tokens_shared,
+                "reconnects": hstat.get("reconnects", 0),
+                "pending_releases": hstat.get("pending_releases", 0),
+            })
+        return {
+            "name": self.name, "healthy": self.healthy,
+            "wire_messages": sum(
+                getattr(h.backend, "messages_sent", 0)
+                for h in self.hosts),
+            "cluster": {
+                "hosts": len(self.hosts),
+                "hosts_live": sum(1 for h in self.hosts if h.live),
+                "evictions": self.evictions,
+                "readmissions": self.readmissions,
+                "requests_lost": self.requests_lost,
+                "prefix_routed": self.prefix_routed,
+                "load_routed": self.load_routed,
+                "shed_overrides": self.shed_overrides,
+                "per_host": per_host,
+            },
+        }

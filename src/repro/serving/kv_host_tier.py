@@ -210,6 +210,12 @@ class HostTier:
                         heapq.heappush(self._free, slot)
                 self.restored_pages += 1
 
+    def keys(self) -> List[bytes]:
+        """Resident chunk keys, coldest first (LRU order) — merged
+        into the cluster gossip digest alongside the device index."""
+        with self._lock:
+            return list(self._entries.keys())
+
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"num_pages": self.num_pages,
@@ -448,3 +454,23 @@ class TieredPagePool(PagePool):
         if self.host_tier is not None:
             s["host_tier"] = self.host_tier.stats()
         return s
+
+    def chunk_digest(self, cap: int = 2048) -> List[str]:
+        """Device-index keys plus host-tier keys: a chunk spilled to
+        host RAM is still a placement win (the restore path beats a
+        cold prefill), so the gossip digest advertises both tiers."""
+        out = super().chunk_digest(cap)
+        if self.host_tier is not None:
+            seen = set(out)
+            hexn = self.DIGEST_HEX
+            # host keys hottest-first (LRU order is coldest-first), so
+            # the cap keeps the entries likeliest to still be resident
+            # when the routed request arrives
+            for k in reversed(self.host_tier.keys()):
+                h = k.hex()[:hexn]
+                if h not in seen:
+                    seen.add(h)
+                    out.append(h)
+                if len(out) >= cap:
+                    break
+        return out[:cap]

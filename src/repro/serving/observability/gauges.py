@@ -89,3 +89,15 @@ def sample_gauges(tracer: Tracer, sched, t: Optional[float] = None) -> None:
         residents = prewarm_residents(backend)
         if residents is not None:
             tracer.counter(f"{name}:prewarm", {"residents": residents}, t=t)
+        cluster = st.get("cluster")
+        if cluster:
+            # cluster router: one counter track per remote host so each
+            # host's queue depth / in-flight sequences chart as its own
+            # series next to the router's aggregate load
+            for h in cluster.get("per_host", ()):
+                tracer.counter(
+                    f"{name}:host:{h.get('host', '?')}",
+                    {"live": int(bool(h.get("live"))),
+                     "queue_depth": h.get("queue_depth", 0),
+                     "seqs": h.get("seqs", 0),
+                     "digest_keys": h.get("digest_keys", 0)}, t=t)

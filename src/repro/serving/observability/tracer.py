@@ -82,6 +82,7 @@ class NullTracer:
     enabled = False
     gauge_interval_s = 0.0
     flight_recorder_path: Optional[str] = None
+    host: Optional[str] = None
 
     def span(self, name, track, t0, t1, args=None):  # pragma: no cover
         pass
@@ -110,11 +111,17 @@ class Tracer:
                  gauge_interval_s: float = 0.05,
                  flight_recorder_path: Optional[str] = None,
                  flight_recorder_window_s: float = 10.0,
-                 flight_recorder_min_interval_s: float = 5.0):
+                 flight_recorder_min_interval_s: float = 5.0,
+                 host: Optional[str] = None):
         if capacity <= 0:
             raise ValueError(f"tracer capacity must be positive: {capacity}")
         self.enabled = True
         self.clock = clock
+        # multi-host label: when set, every track group is prefixed
+        # "host:group" so traces merged across cluster hosts render as
+        # separate Perfetto process tracks instead of colliding on
+        # identical group names ("scheduler", "backend:paged", ...)
+        self.host = host
         self.capacity = int(capacity)
         self.gauge_interval_s = float(gauge_interval_s)
         self.flight_recorder_path = flight_recorder_path
@@ -133,6 +140,11 @@ class Tracer:
     # ---- recording ----------------------------------------------------
     def _record(self, ph: str, name: str, track: str, ts: float,
                 dur: float, args: Optional[Dict[str, Any]]) -> None:
+        if self.host is not None:
+            # prefix the GROUP part: "backend:paged/decode" becomes
+            # "hostA:backend:paged/decode" — chrome_trace partitions on
+            # the first "/", so each host gets its own pid namespace
+            track = f"{self.host}:{track}"
         i = next(self._seq)
         ev: Event = (i, ph, name, track, ts, dur, args)
         self._buf[i % self.capacity] = ev
@@ -252,7 +264,9 @@ class Tracer:
     def export(self, path: str) -> Dict[str, Any]:
         """Write the whole buffer as Chrome trace JSON; returns the
         payload (tests schema-check it without re-reading the file)."""
-        payload = self.chrome_trace()
+        payload = self.chrome_trace(
+            other_data=({"host": self.host} if self.host is not None
+                        else None))
         with open(path, "w") as f:
             json.dump(payload, f)
         return payload
@@ -271,9 +285,12 @@ class Tracer:
         window = (window_s if window_s is not None
                   else self.flight_recorder_window_s)
         now = self.clock()
-        payload = self.chrome_trace(
-            self.events(since=now - window),
-            other_data={"reason": reason, "window_s": window, "t_dump": now})
+        other: Dict[str, Any] = {"reason": reason, "window_s": window,
+                                 "t_dump": now}
+        if self.host is not None:
+            other["host"] = self.host
+        payload = self.chrome_trace(self.events(since=now - window),
+                                    other_data=other)
         with open(path, "w") as f:
             json.dump(payload, f)
         self.dumps += 1

@@ -24,8 +24,8 @@ finished requests free their pages immediately.  Its handles stream:
         ...                                    # TOKEN..., FINISHED
     handle.cancel()                            # abort at any phase
 """
-from repro.serving.scheduler.request import (BUDGET_EXCEEDED, EventType,
-                                             GenerationEvent,
+from repro.serving.scheduler.request import (BACKEND_LOST, BUDGET_EXCEEDED,
+                                             EventType, GenerationEvent,
                                              GenerationHandle, Request,
                                              RequestState, SamplingParams)
 from repro.serving.scheduler.batcher import (ActiveSequence, BatchingPolicy,
@@ -42,7 +42,8 @@ from repro.serving.scheduler.runtime import (MuxScheduler, PagedLLMConfig,
 
 __all__ = [
     "Request", "RequestState", "SamplingParams", "GenerationEvent",
-    "GenerationHandle", "EventType", "BUDGET_EXCEEDED", "ActiveSequence",
+    "GenerationHandle", "EventType", "BACKEND_LOST", "BUDGET_EXCEEDED",
+    "ActiveSequence",
     "BatchingPolicy", "DecodeSlots", "MicroBatcher", "ModelQueue",
     "AdmissionController", "BudgetExceeded", "LatencyReservoir",
     "SchedulerMetrics", "TrafficConfig", "arrival_times", "replay",

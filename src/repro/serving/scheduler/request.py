@@ -51,6 +51,12 @@ TERMINAL_STATES = (RequestState.COMPLETED, RequestState.FAILED,
 #: instead of queueing a certain miss (see admission.BudgetExceeded)
 BUDGET_EXCEEDED = "budget_exceeded"
 
+#: finish_reason for a request whose serving host died mid-flight (the
+#: cluster router evicted it, or its transport dropped): the request
+#: FAILS promptly — never hangs — while requests on surviving hosts
+#: keep decoding untouched (see backend.BackendLost)
+BACKEND_LOST = "backend_lost"
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:

@@ -48,8 +48,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import routing
-from repro.serving.backend import (InProcessBackend, InProcessMuxBackend,
-                                   ModelBackend)
+from repro.serving.backend import (BackendLost, InProcessBackend,
+                                   InProcessMuxBackend, ModelBackend)
 from repro.serving.kv_cache import OutOfPages
 from repro.serving.observability import (NULL_TRACER, backend_track,
                                          prewarm_residents, request_track,
@@ -58,8 +58,9 @@ from repro.serving.scheduler.admission import AdmissionController
 from repro.serving.scheduler.batcher import (BatchingPolicy, DecodeSlots,
                                              MicroBatcher, ModelQueue)
 from repro.serving.scheduler.metrics import SchedulerMetrics
-from repro.serving.scheduler.request import (GenerationHandle, Request,
-                                             RequestState, SamplingParams)
+from repro.serving.scheduler.request import (BACKEND_LOST, GenerationHandle,
+                                             Request, RequestState,
+                                             SamplingParams)
 
 
 def _resolve_params(params: Optional[SamplingParams],
@@ -855,6 +856,9 @@ class PagedLLMScheduler(SchedulerLifecycle):
                     progressed = True
                     seq.trace_rid = req.rid   # lets backend-side spans
                     #   (KV_TRANSFER) name the request they serve
+                    seq.deadline_t = req.deadline_t  # EDF key for the
+                    #   disaggregated KV-transfer turnstile (and the
+                    #   cluster wire's deadline_rel)
                     req.on_prefill_progress(seq.prefill_pos, self.clock())
                     prefilling.append(_Prefilling(req, seq))
 
@@ -1068,7 +1072,9 @@ class PagedLLMScheduler(SchedulerLifecycle):
         except Exception as exc:
             prefilling.remove(ent)
             backend.release(ent.seq)
-            if ent.req.fail(exc, self.clock()):
+            reason = (BACKEND_LOST if isinstance(exc, BackendLost)
+                      else "error")
+            if ent.req.fail(exc, self.clock(), reason=reason):
                 self.metrics.on_fail(ent.req)
             if not backend.healthy:
                 # the donating prefill jit failed at execution: the
@@ -1160,9 +1166,22 @@ class PagedLLMScheduler(SchedulerLifecycle):
         # sequence; hand it to the request so latency attribution can
         # carve transfer wait out of the prefill phase
         req.transfer_wait_s = getattr(entry.seq, "transfer_s", 0.0)
+        reason = entry.seq.finish_reason
+        if reason == BACKEND_LOST:
+            # the host serving this sequence died mid-decode: its mirror
+            # was marked lost by the transport.  The request must FAIL
+            # promptly (a truncated token array is not a completion) —
+            # and only this request: siblings on surviving hosts retire
+            # through the complete() path below, bitwise untouched.
+            if req.fail(BackendLost(
+                    f"serving host lost mid-decode after "
+                    f"{len(entry.seq.tokens)} tokens"), t,
+                    reason=BACKEND_LOST):
+                self.metrics.on_fail(req)
+            return
         out = np.concatenate([np.asarray(req.x, np.int32),
                               np.asarray(entry.seq.tokens, np.int32)])
-        if req.complete(out, t, reason=entry.seq.finish_reason):
+        if req.complete(out, t, reason=reason):
             self.metrics.on_complete(req)
 
     # ---- report -------------------------------------------------------
@@ -1237,5 +1256,26 @@ class PagedLLMScheduler(SchedulerLifecycle):
             "host_tier_spilled_pages": tier_total("spilled_pages"),
             "host_tier_restored_pages": tier_total("restored_pages"),
             "host_tier_evicted_pages": tier_total("evicted_pages"),
+        })
+        # cluster fan-out (serving.cluster.ClusterRouter): multi-host
+        # placement and failure counters; zeros when every backend is
+        # single-host.  The per-host breakdown (queue depth, in-flight
+        # sequences, digest size, liveness) is kept verbatim so a
+        # dashboard can chart each host as its own series.
+        clusters = [s["cluster"] for s in bstats if s.get("cluster")]
+
+        def cluster_total(key):
+            return sum(c.get(key, 0) for c in clusters)
+        snap.update({
+            "cluster_hosts": cluster_total("hosts"),
+            "cluster_hosts_live": cluster_total("hosts_live"),
+            "cluster_evictions": cluster_total("evictions"),
+            "cluster_readmissions": cluster_total("readmissions"),
+            "cluster_requests_lost": cluster_total("requests_lost"),
+            "cluster_prefix_routed": cluster_total("prefix_routed"),
+            "cluster_load_routed": cluster_total("load_routed"),
+            "cluster_shed_overrides": cluster_total("shed_overrides"),
+            "cluster_hosts_detail": [h for c in clusters
+                                     for h in c.get("per_host", [])],
         })
         return snap

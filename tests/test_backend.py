@@ -289,6 +289,49 @@ def test_disagg_rejects_mismatched_geometry(model):
         DisaggregatedBackend(a, b)
 
 
+def test_disagg_transfer_queue_is_deadline_ordered(model):
+    """EDF at the transfer turnstile: while one KV transfer occupies
+    the decode executor, later-sealed-but-tighter deadlines overtake
+    earlier lax ones.  Seal order D, A(lax), B(tight) must dispatch
+    D, B, A — the regression this pins is FIFO dispatch (D, A, B)."""
+    import time as _time
+
+    backend = make_backend(model, "disagg", num_pages=40)
+
+    async def main():
+        await backend.start()
+        try:
+            now = _time.monotonic()
+            seqs = {}
+            for rid, deadline in (("D", None), ("A", now + 100.0),
+                                  ("B", now + 0.5)):
+                seq = backend.begin(prompt_of(8, fold=ord(rid)),
+                                    max_new_tokens=2)
+                seq.trace_rid = rid
+                if deadline is not None:
+                    seq.deadline_t = deadline
+                seqs[rid] = seq
+            # wedge the decode executor so D's scatter holds the
+            # turnstile while A and B queue behind it
+            stall = asyncio.ensure_future(
+                backend._run("decode", _time.sleep, 0.6))
+            await asyncio.sleep(0.05)
+            tasks = []
+            for rid in ("D", "A", "B"):
+                tasks.append(asyncio.ensure_future(
+                    backend.prefill_chunk(seqs[rid])))
+                await asyncio.sleep(0.05)   # D reaches the gate first
+            await asyncio.gather(stall, *tasks)
+            assert backend.transfer_log == ["D", "B", "A"]
+            for seq in seqs.values():
+                backend.release(seq)
+        finally:
+            await backend.stop()
+
+    asyncio.run(main())
+    assert_pools_drained(backend)
+
+
 # ---------------------------------------------------------------------------
 # Satellite: window/chunked span reclaim
 # ---------------------------------------------------------------------------
