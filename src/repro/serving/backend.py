@@ -876,6 +876,40 @@ _WIRE_ERRORS = {
     "BackendLost": BackendLost,
 }
 
+#: request-local victim tags the engine pins on OutOfPages; each must
+#: cross the wire, because the scheduler's recovery path fails ONLY
+#: the tagged sequence — an OutOfPages that arrives without its victim
+#: is treated as a backend death and kills every request on the worker
+_VICTIM_TAGS = (("cow_seq", "cow_sid"), ("grow_seq", "grow_sid"))
+
+
+def wire_error_payload(exc: BaseException,
+                       seqs: Dict[int, Any]) -> Dict[str, Any]:
+    """Serialize an exception for an ``err`` reply/push, resolving any
+    victim-sequence tags (``cow_seq``/``grow_seq``) to sids through the
+    server's sequence table so the client can re-attach them."""
+    err: Dict[str, Any] = {"type": type(exc).__name__, "msg": str(exc)}
+    for attr, key in _VICTIM_TAGS:
+        victim = getattr(exc, attr, None)
+        if victim is not None:
+            err[key] = next(
+                (sid for sid, s in seqs.items() if s is victim), None)
+    return err
+
+
+def wire_error_rehydrate(err: Dict[str, Any],
+                         mirrors: Dict[int, Any]) -> BaseException:
+    """Inverse of :func:`wire_error_payload`: a typed exception with
+    victim sids resolved back to this client's mirror sequences."""
+    exc = _WIRE_ERRORS.get(err["type"], RuntimeError)(err["msg"])
+    for attr, key in _VICTIM_TAGS:
+        sid = err.get(key)
+        if sid is not None:
+            victim = mirrors.get(sid)
+            if victim is not None:
+                setattr(exc, attr, victim)
+    return exc
+
 
 def wire_encode(msg: Dict[str, Any]) -> str:
     """Serialize one message.  Everything on the wire is JSON — the
@@ -989,13 +1023,8 @@ class BackendServer:
             try:
                 self._reply(msg, await self._dispatch(msg))
             except Exception as exc:            # noqa: BLE001 — wire it
-                err = {"type": type(exc).__name__, "msg": str(exc)}
-                cow = getattr(exc, "cow_seq", None)
-                if cow is not None:
-                    err["cow_sid"] = next(
-                        (sid for sid, s in self._seqs.items() if s is cow),
-                        None)
-                self._reply(msg, None, err=err)
+                self._reply(msg, None,
+                            err=wire_error_payload(exc, self._seqs))
 
     def _reply(self, msg, ok, err=None) -> None:
         reply = {"v": WIRE_VERSION, "id": msg["id"],
@@ -1191,12 +1220,7 @@ class RemoteStubBackend(ModelBackend):
             tracer.span(op, backend_track(self.name, "wire"), t0,
                         time.monotonic(), {"mid": mid})
         if "err" in msg:
-            err = msg["err"]
-            exc = _WIRE_ERRORS.get(err["type"], RuntimeError)(err["msg"])
-            cow_sid = err.get("cow_sid")
-            if cow_sid is not None:
-                exc.cow_seq = self._mirrors.get(cow_sid)
-            raise exc
+            raise wire_error_rehydrate(msg["err"], self._mirrors)
         return msg["ok"]
 
     # ---- token-level ---------------------------------------------------
@@ -1270,18 +1294,24 @@ class RemoteStubBackend(ModelBackend):
         self._release_tasks.add(task)
         task.add_done_callback(self._release_tasks.discard)
 
-    async def _release_with_retry(self, sid: int,
-                                  attempts: int = 8) -> None:
-        for attempt in range(attempts):
+    async def _release_with_retry(self, sid: int) -> None:
+        # retried until acked — never a fixed attempt budget: giving up
+        # while the server lives would silently leak its pages.  The
+        # only exit without an ack is the server going away entirely
+        # (shutdown reclaim owns the leftovers); the sid then STAYS in
+        # _pending_releases so stats expose what was never confirmed.
+        backoff = 0.05
+        while self._server_task is not None and not self._server_task.done():
             try:
                 await self._call("release", {"sid": sid})
             except asyncio.CancelledError:
                 raise
             except Exception:   # noqa: BLE001 — transport hiccup: retry
-                await asyncio.sleep(min(0.05 * (1 << attempt), 1.0))
+                await asyncio.sleep(backoff)
+                backoff = min(backoff * 2, 1.0)
                 continue
-            break
-        self._pending_releases.discard(sid)
+            self._pending_releases.discard(sid)
+            return
 
     # ---- admission (conservative, from the cached wire snapshot) -------
     def capacity(self) -> BackendCapacity:

@@ -4,7 +4,9 @@ The scheduler keeps its single-backend worldview (one worker, one
 admission gate, one decode sweep); this router fans that worldview out
 across a pod of ``SocketClientBackend`` hosts:
 
-* **Placement** happens in ``begin``: prefix-aware first — the prompt's
+* **Placement** happens in ``begin``: candidates are the live hosts
+  whose pool can ever hold the request (``fits_ever`` — pools differ
+  per host); among those, prefix-aware first — the prompt's
   chunk-key chain (the same content addresses the device ``PrefixIndex``
   and host tier use) is scored against each host's gossiped digest; the
   host holding the longest consecutive-from-start match wins — unless
@@ -224,10 +226,20 @@ class ClusterRouter(ModelBackend):
         return any(h.live for h in self.hosts)
 
     # ---- placement -----------------------------------------------------
-    def _place(self, prompt) -> _HostState:
+    def _place(self, prompt, max_new_tokens: int = 1) -> _HostState:
         live = self._live()
         if not live:
             raise BackendLost(f"cluster {self.name!r}: no live hosts")
+        # pools differ per host: admission only checked that SOME live
+        # host fits, so placement must not pin the request to one that
+        # never can (it would spin on OutOfPages backpressure while a
+        # host with room sits idle).  If none passes — admission raced
+        # an eviction — fall through to the unfiltered set and let
+        # per-host backpressure surface it.
+        fitting = [h for h in live
+                   if h.backend.fits_ever(len(prompt), max_new_tokens)]
+        if fitting:
+            live = fitting
         if len(live) == 1:
             self.load_routed += 1
             return live[0]
@@ -267,7 +279,7 @@ class ClusterRouter(ModelBackend):
     # ---- token-level surface ------------------------------------------
     def begin(self, prompt, *, max_new_tokens, seed=None, temperature=None,
               stop_tokens=()):
-        hs = self._place(prompt)
+        hs = self._place(prompt, max_new_tokens)
         seq = hs.backend.begin(prompt, max_new_tokens=max_new_tokens,
                                seed=seed, temperature=temperature,
                                stop_tokens=stop_tokens)

@@ -11,7 +11,10 @@ built by :func:`build_tiny_backend` with the same arguments.
 Prints ``LISTENING <port>`` on stdout once the socket is bound (port
 0 asks the kernel), so a parent process can spawn N hosts on ephemeral
 ports and scrape where they landed.  The shared auth secret comes from
-``REPRO_CLUSTER_SECRET`` (default: the dev secret).  When
+``--secret`` or ``REPRO_CLUSTER_SECRET``; without either, the dev
+default is accepted only on loopback binds — a non-loopback ``--bind``
+refuses to start rather than serve with a secret anyone can read out
+of the source.  When
 ``REPRO_TRACE_DIR`` is set, a host-labelled tracer records the whole
 run and exports ``trace_cluster_<label>.json`` there on shutdown —
 merged multi-host traces render each host as its own Perfetto process
@@ -81,6 +84,9 @@ def _parser() -> argparse.ArgumentParser:
                    help="0 = kernel-assigned (scrape LISTENING line)")
     p.add_argument("--host-label", default=None,
                    help="trace/process label (default: host-<port>)")
+    p.add_argument("--secret", default=None,
+                   help="shared auth secret (default: REPRO_CLUSTER_SECRET;"
+                        " required, via either, for non-loopback --bind)")
     p.add_argument("--num-pages", type=int, default=64)
     p.add_argument("--page-size", type=int, default=4)
     p.add_argument("--decode-batch", type=int, default=4)
@@ -104,6 +110,7 @@ async def _amain(args: argparse.Namespace) -> int:
         prefix_sharing=not args.no_prefix_sharing,
         model_scale=args.model_scale)
     server = SocketBackendServer(backend, host=args.bind, port=args.port,
+                                 secret=args.secret,
                                  host_label=args.host_label or "pending")
     await server.start()
     label = args.host_label or f"host-{server.port}"

@@ -51,6 +51,7 @@ import asyncio
 import dataclasses
 import hashlib
 import hmac
+import ipaddress
 import itertools
 import os
 import socket
@@ -63,7 +64,9 @@ from repro.serving.backend import (BackendCapacity, BackendLost,
                                    BackendServer, ModelBackend,
                                    RemoteSequence, WIRE_VERSION,
                                    WIRE_VERSIONS, WireVersionError,
-                                   _WIRE_ERRORS, wire_decode, wire_encode)
+                                   _WIRE_ERRORS, wire_decode, wire_encode,
+                                   wire_error_payload,
+                                   wire_error_rehydrate)
 from repro.serving.observability.tracer import backend_track
 from repro.serving.scheduler.request import BACKEND_LOST
 
@@ -72,10 +75,22 @@ from repro.serving.scheduler.request import BACKEND_LOST
 #: length prefix beyond this is garbage, not a message)
 MAX_FRAME_BYTES = 1 << 24
 
-#: default shared secret when the operator sets none; real deployments
-#: export REPRO_CLUSTER_SECRET on every host
+#: dev-only shared secret when the operator sets none — anyone who can
+#: read the source knows it, so it makes the HMAC handshake decorative.
+#: Acceptable on loopback (same-box tests/dev); a server binding a
+#: non-loopback address with it REFUSES to start.  Real deployments
+#: export REPRO_CLUSTER_SECRET on every host.
 DEFAULT_SECRET = "repro-cluster"
 SECRET_ENV = "REPRO_CLUSTER_SECRET"
+
+
+def _is_loopback(host: str) -> bool:
+    if host == "localhost":
+        return True
+    try:
+        return ipaddress.ip_address(host).is_loopback
+    except ValueError:
+        return False                      # hostname / wildcard: assume not
 
 
 class FrameError(RuntimeError):
@@ -166,8 +181,12 @@ class SocketBackendServer:
         self.inner = inner
         self.bind_host = host
         self.port = port                  # 0 -> kernel assigns; see start()
-        self.secret = secret if secret is not None else os.environ.get(
-            SECRET_ENV, DEFAULT_SECRET)
+        env_secret = os.environ.get(SECRET_ENV)
+        self.secret = (secret if secret is not None
+                       else env_secret if env_secret is not None
+                       else DEFAULT_SECRET)
+        # nobody chose this secret: fine on loopback, refused off it
+        self._secret_is_default = secret is None and env_secret is None
         self.host_label = host_label
         # max unacked pushes before the sweep loop waits for the
         # client; 1 = lockstep (lowest jitter), raise it to overlap
@@ -180,6 +199,13 @@ class SocketBackendServer:
         self.frame_errors = 0
 
     async def start(self) -> None:
+        if self._secret_is_default and not _is_loopback(self.bind_host):
+            raise ValueError(
+                f"refusing to serve on non-loopback address "
+                f"{self.bind_host!r} with the dev default secret — any "
+                f"peer that read the source could authenticate.  Export "
+                f"{SECRET_ENV} (same value on every host) or pass "
+                f"secret= explicitly.")
         await self.inner.start()
         self._server = await asyncio.start_server(
             self._handle, self.bind_host, self.port)
@@ -333,13 +359,8 @@ class SocketBackendServer:
         except asyncio.CancelledError:
             raise
         except Exception as exc:          # noqa: BLE001 — wire it
-            err = {"type": type(exc).__name__, "msg": str(exc)}
-            cow = getattr(exc, "cow_seq", None)
-            if cow is not None:
-                err["cow_sid"] = next(
-                    (sid for sid, s in sess.server._seqs.items()
-                     if s is cow), None)
-            self._reply(sess, msg, None, err=err)
+            self._reply(sess, msg, None,
+                        err=wire_error_payload(exc, sess.server._seqs))
             return
         self._reply(sess, msg, ok)
 
@@ -408,9 +429,14 @@ class SocketBackendServer:
                     await self.inner.decode_batch([s for _, s in live])
                     self._decode_warm = True
             except Exception as exc:      # noqa: BLE001 — wire it
+                # serialize exactly like the request/response path:
+                # the victim tags (cow_sid/grow_sid) are what let the
+                # client rehydrate a request-local OutOfPages — without
+                # them the scheduler reads it as a backend death and
+                # kills every request on this host
                 self._send(sess, {"op": "push", "rows": [],
-                                  "err": {"type": type(exc).__name__,
-                                          "msg": str(exc)}})
+                                  "err": wire_error_payload(
+                                      exc, sess.server._seqs)})
                 sess.stream_sids = []
                 continue
             rows = [dict(sess.server._state_of(s), sid=sid,
@@ -696,6 +722,11 @@ class SocketClientBackend(ModelBackend):
     def _apply_push(self, msg: Dict[str, Any]) -> None:
         if msg.get("err"):
             self._stream_err = msg["err"]
+            # the server dropped its sweep set with this error: forget
+            # ours too, else a next decode_batch with identical
+            # membership would skip re-declaring and wait forever on a
+            # sweep that is no longer running
+            self._stream_sent = None
         for row in msg.get("rows", ()):
             seq = self._mirrors.get(row.get("sid"))
             if seq is not None and not seq.done:
@@ -759,12 +790,7 @@ class SocketClientBackend(ModelBackend):
             tracer.span(op, backend_track(self.name, "wire"), t0,
                         time.monotonic(), {"mid": mid})
         if "err" in msg:
-            err = msg["err"]
-            exc = _WIRE_ERRORS.get(err["type"], RuntimeError)(err["msg"])
-            cow_sid = err.get("cow_sid")
-            if cow_sid is not None:
-                exc.cow_seq = self._mirrors.get(cow_sid)
-            raise exc
+            raise wire_error_rehydrate(msg["err"], self._mirrors)
         return msg["ok"]
 
     async def status(self, timeout: Optional[float] = None
@@ -841,14 +867,15 @@ class SocketClientBackend(ModelBackend):
         absorbs whatever accumulated."""
         counts0 = [len(s.tokens) for s in seqs]
         sids = [s.sid for s in seqs]
+        # raise a latched sweep error BEFORE re-declaring: the error's
+        # victim may already be retired client-side, and re-starting
+        # the sweep with it would only reproduce the failure
+        self._raise_stream_err()
         if sids != self._stream_sent:
             await self._call("stream_set", {"sids": sids})
             self._stream_sent = list(sids)
         while True:
-            if self._stream_err is not None:
-                err, self._stream_err = self._stream_err, None
-                raise _WIRE_ERRORS.get(err["type"],
-                                       RuntimeError)(err["msg"])
+            self._raise_stream_err()
             if any(len(s.tokens) > n0 or s.done
                    for s, n0 in zip(seqs, counts0)):
                 break
@@ -856,6 +883,22 @@ class SocketClientBackend(ModelBackend):
             await self._push_event.wait()
         return np.asarray([s.tokens[-1] if s.tokens else -1
                            for s in seqs], np.int32)
+
+    def _raise_stream_err(self) -> None:
+        """Re-raise a latched sweep error with its victim attribution
+        restored (``cow_seq``/``grow_seq`` resolved through the mirror
+        table) — the scheduler's OutOfPages recovery fails only the
+        tagged sequence instead of the whole backend."""
+        if self._stream_err is None:
+            return
+        err, self._stream_err = self._stream_err, None
+        # the server dropped its sweep set with this error; _apply_push
+        # already forgot ours, but an in-flight stream_set declaration
+        # may have re-recorded itself AFTER that (its reply resolved
+        # before the err push was applied) — reset here too so the next
+        # decode_batch always re-declares instead of waiting forever
+        self._stream_sent = None
+        raise wire_error_rehydrate(err, self._mirrors)
 
     def release(self, seq) -> None:
         self._mirrors.pop(seq.sid, None)
@@ -870,21 +913,34 @@ class SocketClientBackend(ModelBackend):
         self._release_tasks.add(task)
         task.add_done_callback(self._release_tasks.discard)
 
-    async def _release_with_retry(self, sid: int,
-                                  attempts: int = 12) -> None:
-        for attempt in range(attempts):
+    async def _release_with_retry(self, sid: int) -> None:
+        # retried until acked — never a fixed attempt budget: the
+        # reconnect loop tolerates arbitrarily long outages, so a
+        # bounded retry would silently drop the release (and leak the
+        # server-side sequence and its pages) on any outage that
+        # outlasts it.  The only exit without an ack is shutdown,
+        # where the server's session reclaim owns the leftovers; the
+        # sid then STAYS in _pending_releases so stats expose what was
+        # never confirmed.
+        backoff = 0.05
+        while not self._stopping:
+            if not self.connected:
+                # between connections: wait out the reconnect loop
+                # instead of burning sends that cannot succeed
+                await asyncio.sleep(backoff)
+                backoff = min(backoff * 2, 0.5)
+                continue
             try:
                 await self._call("release", {"sid": sid},
                                  timeout=self.timeout_s)
             except asyncio.CancelledError:
                 raise
             except Exception:   # noqa: BLE001 — transport hiccup: retry
-                if self._stopping and not self.connected:
-                    break       # shutdown reclaim owns the leftovers
-                await asyncio.sleep(min(0.05 * (1 << attempt), 0.5))
+                await asyncio.sleep(backoff)
+                backoff = min(backoff * 2, 0.5)
                 continue
-            break
-        self._pending_releases.discard(sid)
+            self._pending_releases.discard(sid)
+            return
 
     # ---- admission / control plane ------------------------------------
     def capacity(self) -> BackendCapacity:

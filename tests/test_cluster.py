@@ -28,6 +28,7 @@ from repro.serving.backend import BackendLost, InProcessBackend
 from repro.serving.cluster import (ClusterRouter, SocketBackendServer,
                                    SocketClientBackend)
 from repro.serving.cluster.serve import build_tiny_backend
+from repro.serving.kv_cache import OutOfPages
 from repro.serving.observability import Tracer
 from repro.serving.scheduler import (BACKEND_LOST, PagedLLMConfig,
                                      PagedLLMScheduler, SamplingParams)
@@ -245,6 +246,148 @@ def test_release_retry_spans_reconnect_no_leak():
         assert cli.reconnects >= 1
         await cli.stop()
         await srv.close()
+
+    asyncio.run(main())
+
+
+def test_streaming_sweep_error_keeps_victim_attribution():
+    """A request-local OutOfPages raised inside the streamed sweep
+    reaches the client WITH its victim (cow_seq resolved back to the
+    mirror) — that attribution is what lets the scheduler fail one
+    request instead of killing the backend.  And after the error, a
+    decode_batch with identical membership re-declares the stream set
+    instead of waiting forever on a sweep the server dropped."""
+
+    async def main():
+        inner = build_tiny_backend()
+        srv = SocketBackendServer(inner, host_label="hx")
+        await srv.start()
+        cli = SocketClientBackend("127.0.0.1", srv.port,
+                                  heartbeat_s=0.1, timeout_s=0.5)
+        await cli.start()
+        s1 = cli.begin(prompt_of(9, 0), max_new_tokens=4)
+        s2 = cli.begin(prompt_of(9, 1), max_new_tokens=4)
+        for s in (s1, s2):
+            while not await cli.prefill_chunk(s, chunk_tokens=PS):
+                pass
+        # sabotage exactly one sweep: a COW-tagged OutOfPages against
+        # the first server-side sequence, then restore real decode
+        real = inner.decode_batch
+
+        async def boom(seqs):
+            inner.decode_batch = real
+            exc = OutOfPages("no free page for copy-on-write")
+            exc.cow_seq = seqs[0]
+            raise exc
+
+        inner.decode_batch = boom
+        with pytest.raises(OutOfPages) as ei:
+            await asyncio.wait_for(cli.decode_batch([s1, s2]), timeout=5)
+        assert getattr(ei.value, "cow_seq", None) is s1
+        # same membership again: must re-declare and decode, not hang
+        out = await asyncio.wait_for(cli.decode_batch([s1, s2]), timeout=5)
+        assert out.shape == (2,)
+        for s in (s1, s2):
+            cli.release(s)
+        for _ in range(100):
+            await asyncio.sleep(0.02)
+            if inner.stats()["pool"]["pages_in_use"] == 0:
+                break
+        assert inner.stats()["pool"]["pages_in_use"] == 0
+        await cli.stop()
+        await srv.close()
+
+    asyncio.run(main())
+
+
+def test_release_pends_through_outage_then_acks():
+    """A release during an outage is never dropped by an attempt
+    budget: the sid stays in _pending_releases (stats would expose a
+    real leak) and the retry acks once a server answers again."""
+
+    async def main():
+        inner = build_tiny_backend()
+        srv = SocketBackendServer(inner, host_label="hy")
+        await srv.start()
+        port = srv.port
+        cli = SocketClientBackend("127.0.0.1", port,
+                                  heartbeat_s=0.05, timeout_s=0.3)
+        await cli.start()
+        seq = cli.begin(prompt_of(9), max_new_tokens=4)
+        while not await cli.prefill_chunk(seq, chunk_tokens=PS):
+            pass
+        await srv.close()                 # outage begins
+        cli.release(seq)
+        await asyncio.sleep(0.6)          # several failed attempts later
+        assert cli._pending_releases == {seq.sid}
+        assert cli.stats()["pending_releases"] == 1
+        # a fresh server on the same port: the client reconnects and
+        # the retried release finally acks (unknown sid = clean no-op)
+        srv2 = SocketBackendServer(build_tiny_backend(), port=port,
+                                   host_label="hy")
+        await srv2.start()
+        for _ in range(200):
+            await asyncio.sleep(0.05)
+            if not cli._pending_releases:
+                break
+        assert not cli._pending_releases
+        await cli.stop()
+        await srv2.close()
+
+    asyncio.run(main())
+
+
+def test_default_secret_refuses_non_loopback(monkeypatch):
+    """Without an operator-chosen secret the HMAC handshake is
+    decorative, so a non-loopback bind refuses to start; loopback and
+    explicit secrets still construct fine."""
+    monkeypatch.delenv("REPRO_CLUSTER_SECRET", raising=False)
+
+    async def main():
+        srv = SocketBackendServer(object(), host="0.0.0.0")
+        with pytest.raises(ValueError, match="non-loopback"):
+            await srv.start()
+
+    asyncio.run(main())
+    # an explicit secret (arg or env) is what unlocks non-loopback
+    assert not SocketBackendServer(object(), host="0.0.0.0",
+                                   secret="s3cret")._secret_is_default
+    monkeypatch.setenv("REPRO_CLUSTER_SECRET", "s3cret")
+    assert not SocketBackendServer(object(),
+                                   host="0.0.0.0")._secret_is_default
+
+
+def test_place_skips_hosts_that_can_never_fit():
+    """Placement only considers hosts whose pool can ever hold the
+    request: a small-pool host never gets pinned a request it would
+    spin on, even when it wins the load tie-break and prefix score."""
+
+    async def main():
+        srv_small = SocketBackendServer(build_tiny_backend(num_pages=4),
+                                        host_label="small")
+        srv_big = SocketBackendServer(build_tiny_backend(),
+                                      host_label="big")
+        await srv_small.start()
+        await srv_big.start()
+        clients = [SocketClientBackend("127.0.0.1", srv_small.port,
+                                       name="sock:small"),
+                   SocketClientBackend("127.0.0.1", srv_big.port,
+                                       name="sock:big")]
+        router = ClusterRouter(clients, probe_interval_s=10.0)
+        await router.start()
+        prompt = list(range(1, 21))       # 20 + 8 tokens = 7 pages > 4
+        # stack the deck for the small host: idle, and prefix-affine
+        from repro.serving.kv_cache import PagePool, chunk_keys
+        router.hosts[0].digest = {
+            k.hex()[:PagePool.DIGEST_HEX]
+            for k, partial in chunk_keys(prompt, PS) if not partial}
+        router.hosts[1].queue_depth = 3
+        assert router._place(prompt, 8) is router.hosts[1]
+        # a request both pools can hold still follows load
+        assert router._place(list(range(8)), 4) is router.hosts[0]
+        await router.stop()
+        await srv_small.close()
+        await srv_big.close()
 
     asyncio.run(main())
 

@@ -20,7 +20,8 @@ import pytest
 
 from repro.serving.backend import (WIRE_VERSION, WIRE_VERSIONS, BackendServer,
                                    WireVersionError, negotiate_wire_version,
-                                   wire_decode, wire_encode)
+                                   wire_decode, wire_encode,
+                                   wire_error_payload, wire_error_rehydrate)
 from repro.serving.cluster import (MAX_FRAME_BYTES, FrameError,
                                    SocketBackendServer, SocketClientBackend,
                                    encode_frame, read_frame)
@@ -91,6 +92,32 @@ def test_v2_client_rejects_v1_server():
         await server.wait_closed()
 
     asyncio.run(main())
+
+
+def test_wire_error_roundtrips_victim_tags():
+    """Both request-local victim tags (cow_seq AND grow_seq) survive
+    the wire: serialized to sids against the server's table, resolved
+    back to mirrors on the client — the attribution the scheduler
+    needs to fail one request instead of the backend."""
+    from repro.serving.kv_cache import OutOfPages
+
+    server_seq, client_mirror = object(), object()
+    for tag in ("cow_seq", "grow_seq"):
+        exc = OutOfPages("page pool exhausted")
+        setattr(exc, tag, server_seq)
+        err = wire_error_payload(exc, {7: server_seq})
+        assert err["type"] == "OutOfPages"
+        assert err[tag.replace("_seq", "_sid")] == 7
+        back = wire_error_rehydrate(err, {7: client_mirror})
+        assert isinstance(back, OutOfPages)
+        assert getattr(back, tag) is client_mirror
+    # an untagged error stays untagged, and unknown sids resolve to
+    # nothing rather than a wrong sequence
+    err = wire_error_payload(ValueError("nope"), {})
+    assert "cow_sid" not in err and "grow_sid" not in err
+    back = wire_error_rehydrate({"type": "OutOfPages", "msg": "x",
+                                 "cow_sid": 99}, {7: client_mirror})
+    assert getattr(back, "cow_seq", None) is None
 
 
 # ---------------------------------------------------------------------------
